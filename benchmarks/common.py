@@ -1,0 +1,81 @@
+"""Shared benchmark utilities: timing, reduced-DiT setup, divergence."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config
+from repro.diffusion import FlowMatchEuler, generate_centralized, generate_lp
+from repro.diffusion.pipeline import make_guided_denoiser
+from repro.models import dit, frontends
+
+
+def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def reduced_dit_denoiser(seed: int = 0, latent=(6, 8, 12), guidance=3.0):
+    """(guided_denoiser, z_T, cfg) on the reduced WAN DiT."""
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    ctx = frontends.text_context(jax.random.PRNGKey(seed + 1), 1, cfg)
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    den = make_guided_denoiser(fwd, params, cfg, ctx, jnp.zeros_like(ctx),
+                               guidance=guidance)
+    rng = np.random.default_rng(seed)
+    z_T = jnp.asarray(
+        rng.normal(size=(1, *latent, cfg.latent_channels)).astype(np.float32))
+    return den, z_T, cfg
+
+
+def divergence(a, b) -> dict:
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    rel = float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12))
+    mse = float(np.mean((a - b) ** 2))
+    peak = float(np.abs(b).max())
+    psnr = float(10 * np.log10(peak ** 2 / max(mse, 1e-12)))
+    return {"rel_l2": rel, "psnr_db": psnr}
+
+
+def lp_vs_centralized(steps: int, K: int, r: float, seed: int = 0,
+                      latent=(6, 8, 12), dims=None):
+    den, z_T, cfg = reduced_dit_denoiser(seed, latent)
+    sampler = FlowMatchEuler(steps)
+    z_c = generate_centralized(den, z_T, steps, sampler)
+    if dims is None:
+        z_lp = generate_lp(den, z_T, steps, num_partitions=K,
+                           overlap_ratio=r, patch_sizes=cfg.patch_sizes,
+                           sampler=sampler)
+    else:
+        from repro.core.lp_step import lp_forward
+        from repro.core.partition import plan_partition
+        from repro.core.schedule import rotation_dim
+
+        z_lp = z_T
+        for i in range(1, steps + 1):
+            dim = rotation_dim(i, dims)
+            axis = 1 + dim
+            plan = plan_partition(z_lp.shape[axis], cfg.patch_sizes[dim], K, r, dim)
+
+            def fn(sub, _i=i):
+                t = jnp.full((sub.shape[0],), sampler.timestep(_i), jnp.float32)
+                return den(sub, t)
+
+            pred = lp_forward(fn, z_lp, plan, axis)
+            z_lp = sampler.step(z_lp, pred, i)
+    return divergence(z_lp, z_c)

@@ -1,0 +1,22 @@
+"""Paper Fig. 10: LP (rotating) vs w/o LP (temporal-only partitioning)."""
+from __future__ import annotations
+
+from .common import lp_vs_centralized
+
+STEPS, K = 6, 2
+
+
+def run(print_csv=True):
+    rot = lp_vs_centralized(STEPS, K, 0.5, seed=1, dims=(0, 1, 2))
+    fixed = lp_vs_centralized(STEPS, K, 0.5, seed=1, dims=(0,))
+    if print_csv:
+        print(f"fig10_ablation/rotating,0,rel_l2={rot['rel_l2']:.4f}")
+        print(f"fig10_ablation/temporal_only,0,rel_l2={fixed['rel_l2']:.4f}")
+        print(f"fig10_ablation/verdict,0,"
+              f"rotation_better={rot['rel_l2'] < fixed['rel_l2']}")
+    assert rot["rel_l2"] < fixed["rel_l2"], (rot, fixed)
+    return rot, fixed
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Figs. 6-7: overlap ratio r -> communication and quality."""
+from __future__ import annotations
+
+from repro.core import comm_model as cm
+from .common import lp_vs_centralized
+
+STEPS, K = 6, 2
+
+
+def run(print_csv=True):
+    cfg = cm.wan21_comm_config(49)
+    out = []
+    for r in (0.1, 0.25, 0.5, 0.75, 1.0):
+        comm = cm.comm_lp_measured(cfg, 4, r) / 2**20
+        out.append((r, comm))
+        if print_csv:
+            print(f"fig6_overlap_comm/r={r},0,comm={comm:.0f}MB")
+    # paper: comm roughly doubles from r=0.1 to r=1.0, still << HP
+    assert out[-1][1] < cm.comm_hp_xdit(cfg, 4) / 2**20
+    assert 1.5 < out[-1][1] / out[0][1] < 3.0
+
+    qual = {}
+    for r in (0.0, 0.5, 1.0):
+        d = lp_vs_centralized(STEPS, K, r, seed=2)
+        qual[r] = d
+        if print_csv:
+            print(f"fig7_overlap_quality/r={r},0,"
+                  f"rel_l2={d['rel_l2']:.4f} psnr={d['psnr_db']:.1f}dB")
+    # paper: quality improves with r and saturates by r~0.5
+    assert qual[1.0]["rel_l2"] <= qual[0.0]["rel_l2"]
+    return out, qual
+
+
+if __name__ == "__main__":
+    run()

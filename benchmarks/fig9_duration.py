@@ -1,0 +1,32 @@
+"""Paper Fig. 9: video duration -> communication (LP vs HP) + quality."""
+from __future__ import annotations
+
+from repro.core import comm_model as cm
+from .common import lp_vs_centralized
+
+GB = 2**30
+
+
+def run(print_csv=True):
+    out = []
+    for frames, secs in ((49, 3), (81, 5), (161, 10)):
+        cfg = cm.wan21_comm_config(frames)
+        hp = cm.comm_hp_xdit(cfg, 4) / GB
+        lp = cm.comm_lp_measured(cfg, 4, 1.0) / GB
+        out.append((secs, hp, lp))
+        if print_csv:
+            print(f"fig9_duration/{secs}s,0,HP={hp:.2f}GB LP={lp:.2f}GB")
+    hp_growth = out[-1][1] - out[0][1]
+    lp_growth = out[-1][2] - out[0][2]
+    if print_csv:
+        print(f"fig9_duration/growth,0,HP+={hp_growth:.1f}GB "
+              f"LP+={lp_growth:.1f}GB (paper: ~10GB vs ~4GB)")
+    assert lp_growth < hp_growth
+    d = lp_vs_centralized(4, 2, 1.0, seed=4, latent=(10, 8, 12))
+    if print_csv:
+        print(f"fig9_duration/quality_10s_proxy,0,rel_l2={d['rel_l2']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig6_fig7_overlap,
+    fig8_gpu_scaling,
+    fig9_duration,
+    fig10_rotation_ablation,
+    quality_fidelity,
+    table1_comm,
+    table2_latency,
+)
+
+ALL = {
+    "table1": table1_comm.run,
+    "table2": table2_latency.run,
+    "fig6_fig7": fig6_fig7_overlap.run,
+    "fig8": fig8_gpu_scaling.run,
+    "fig9": fig9_duration.run,
+    "fig10": fig10_rotation_ablation.run,
+    "quality": quality_fidelity.run,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(ALL))
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            ALL[name]()
+            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},"
+                  f"FAILED:{type(e).__name__}:{e}")
+    return 1 if failures else 0
+
+
+def run_all():
+    return main([])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

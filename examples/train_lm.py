@@ -1,0 +1,82 @@
+"""Train a language model end-to-end with the full production substrate:
+synthetic sharded data, AdamW + cosine schedule, per-layer remat,
+fault-tolerant checkpoint/restart (a failure is injected mid-run to prove
+it), and final perplexity report.
+
+Default is a ~1M-param granite-family model for 200 steps (CPU-friendly);
+``--preset 100m --steps 300`` runs the deliverable-scale configuration
+(expect ~hours on CPU; it is the same code path the dry-run lowers for
+the 16x16 mesh).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch granite-3-2b]
+"""
+import argparse
+import dataclasses
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.data.pipeline import SyntheticLMStream
+from repro.runtime.ft import FailureInjector, run_training
+from repro.train.loop import make_train_step
+
+
+def build_cfg(arch: str, preset: str):
+    cfg = get_config(arch).reduced()
+    if preset == "100m":
+        cfg = dataclasses.replace(
+            cfg, name=arch + "-100m", num_layers=8, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64,
+            d_ff=2048 if cfg.d_ff else 0, vocab_size=32000,
+        )
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a device failure at this step")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.arch, args.preset)
+    model = models.build(cfg)
+    parallel = ParallelConfig(dp_axes=(), fsdp_axis=None,
+                              remat="full" if args.preset == "100m" else "none")
+    raw_step = make_train_step(model, parallel, peak_lr=1e-3,
+                               total_steps=args.steps)
+    train_step = jax.jit(raw_step)
+    data = SyntheticLMStream(cfg, batch=args.batch, seq_len=args.seq)
+    ckpt_dir = tempfile.mkdtemp(prefix="train_lm_ckpt_")
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return params, raw_step.opt_init(params)
+
+    fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+    injector = FailureInjector(fail_at=(fail_at,))
+    print(f"training {cfg.name}: {args.steps} steps, failure injected at "
+          f"step {fail_at}, checkpoints -> {ckpt_dir}")
+    report = run_training(
+        train_step, init_state, data.batch_at, args.steps, ckpt_dir,
+        ckpt_every=max(args.steps // 10, 1), injector=injector,
+    )
+    first = report.losses[min(report.losses)]
+    last = report.losses[max(report.losses)]
+    print(f"done: {report.final_step} steps, {report.restarts} restart(s)")
+    print(f"loss {first:.4f} -> {last:.4f}  "
+          f"(ppl {math.exp(min(first, 20)):.1f} -> {math.exp(min(last, 20)):.1f})")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""whisper-small [audio]: enc-dec; conv frontend is a stub providing
+precomputed frame embeddings (arXiv:2212.04356)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,          # decoder layers
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_layers=12,
+    encoder_seq=1500,
+)

@@ -1,0 +1,33 @@
+"""Latent Parallelism (LP) — the paper's primary contribution.
+
+Pipeline per denoising step (paper Fig. 3):
+  schedule.rotation_dim     -> which dim to partition (Eq. 3)
+  partition.plan_partition  -> patch-aligned overlapping slices (Eqs. 7-10)
+  <parallel denoising>      -> per-device DiT forward on sub-latents (Eq. 4)
+  weights / reconstruct     -> position-aware stitching (Eqs. 11-17)
+
+``lp_step`` is the single-host reference engine, ``spmd`` the shard_map
+production engine, ``uniform`` the fixed-shape window variant SPMD needs,
+``comm_model`` the §7 analytic cost model, ``hybrid`` the §11 inter-group
+LP + intra-group model parallelism composition.
+"""
+from .schedule import (  # noqa: F401
+    DIM_NAMES,
+    HEIGHT,
+    TEMPORAL,
+    WIDTH,
+    rotation_dim,
+    rotation_schedule,
+    usable_dims,
+)
+from .partition import (  # noqa: F401
+    PartitionPlan,
+    extract,
+    plan_partition,
+    plan_partition_balanced,
+)
+from .weights import blend_weight_1d, global_normalizer, partition_weights  # noqa: F401
+from .reconstruct import reconstruct  # noqa: F401
+from .uniform import UniformPlan, expansion_factor, plan_uniform  # noqa: F401
+from .lp_step import lp_denoise, lp_forward, lp_forward_uniform  # noqa: F401
+from . import comm_model  # noqa: F401

@@ -1,0 +1,74 @@
+"""Hierarchical hybrid parallelism (paper supplementary §11).
+
+Cluster of K devices partitioned into M disjoint groups (Eq. 42);
+inter-group LP partitions the latent across groups with the same
+patch-aligned overlapping machinery (K -> M in Eqs. 7-10), and each group
+runs an arbitrary intra-group operator Phi_m (Eq. 43) — NMP / TP / PP /
+plain jit — as a black box over its sub-latent.
+
+On the production mesh this is realized by the GSPMD LP engine with the
+"data" axis as the group axis and "model" as the intra-group TP axis
+(launch/dryrun._vdm_lp_step); this module provides the explicit reference
+composition + the group-assignment bookkeeping used by tests and the
+hybrid example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .lp_step import lp_forward
+from .partition import PartitionPlan, plan_partition
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """K devices -> M disjoint groups (Eq. 42 constraints)."""
+
+    num_devices: int
+    num_groups: int
+    groups: Tuple[Tuple[int, ...], ...]
+
+    def validate(self) -> None:
+        seen = set()
+        for g in self.groups:
+            assert g, "empty group"
+            assert not (seen & set(g)), "groups must be disjoint"
+            seen |= set(g)
+        assert seen == set(range(self.num_devices)), "groups must cover G"
+
+
+def make_groups(num_devices: int, num_groups: int) -> GroupLayout:
+    if num_devices % num_groups != 0:
+        raise ValueError(f"K={num_devices} must split into M={num_groups}")
+    per = num_devices // num_groups
+    groups = tuple(
+        tuple(range(m * per, (m + 1) * per)) for m in range(num_groups)
+    )
+    layout = GroupLayout(num_devices, num_groups, groups)
+    layout.validate()
+    return layout
+
+
+def hybrid_forward(
+    intra_group_ops: Sequence[Callable[[jnp.ndarray], jnp.ndarray]],
+    z: jnp.ndarray,
+    extent_axis: int,
+    patch: int,
+    overlap_ratio: float,
+) -> jnp.ndarray:
+    """One hybrid LP forward: inter-group partition -> Phi_m per group ->
+    position-aware reconstruction.  ``intra_group_ops[m]`` is Phi_m
+    (Eq. 43) — any parallel denoiser for group m's sub-latent."""
+    M = len(intra_group_ops)
+    plan: PartitionPlan = plan_partition(
+        z.shape[extent_axis], patch, M, overlap_ratio
+    )
+    op_iter = iter(intra_group_ops)
+
+    def dispatch(sub):
+        return next(op_iter)(sub)
+
+    return lp_forward(dispatch, z, plan, extent_axis)

@@ -1,0 +1,129 @@
+"""Single-host LP reference engine (paper §3.2 workflow, Fig. 3).
+
+One LP forward pass = dynamic rotating partition -> parallel denoising ->
+position-aware latent reconstruction.  This module is the *reference*
+implementation: partitions are the paper-exact variable-size slices, the
+"parallel" denoising is a Python loop (or a vmap for uniform windows), and
+reconstruction is the scatter-add of ``core/reconstruct.py``.
+
+The production SPMD engine (``core/spmd.py``) computes identical math with
+shard_map + one psum; both are cross-checked in tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .partition import PartitionPlan, extract, plan_partition
+from .reconstruct import reconstruct
+from .schedule import rotation_dim, usable_dims
+from .uniform import UniformPlan, plan_uniform
+
+# denoise_fn maps a sub-latent (same rank as the latent) to its noise
+# prediction of identical shape.  CFG is expected to live *inside* the fn
+# (paper Eq. 4: each partition computes its own guided prediction).
+DenoiseFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def lp_forward(
+    denoise_fn: DenoiseFn,
+    z: jnp.ndarray,
+    plan: PartitionPlan,
+    axis: int,
+) -> jnp.ndarray:
+    """One LP forward pass with a prebuilt (paper-exact) partition plan."""
+    preds = []
+    for k in range(plan.num_partitions):
+        sub = extract(z, plan, k, axis)
+        pred = denoise_fn(sub)
+        if pred.shape != sub.shape:
+            raise ValueError(
+                f"denoise_fn changed the sub-latent shape: {sub.shape} -> {pred.shape}"
+            )
+        preds.append(pred)
+    return reconstruct(preds, plan, axis)
+
+
+def lp_forward_uniform(
+    denoise_fn: DenoiseFn,
+    z: jnp.ndarray,
+    plan: UniformPlan,
+    axis: int,
+) -> jnp.ndarray:
+    """One LP forward pass on uniform windows, batched with vmap.
+
+    This mirrors what every SPMD rank does: slice a fixed-size window,
+    denoise, weight, scatter-add; here the K ranks are a vmapped leading
+    axis and the psum is a sum over it.
+    """
+    K = plan.num_partitions
+    windows = jnp.stack(
+        [
+            jax.lax.dynamic_slice_in_dim(z, plan.starts[k], plan.window, axis)
+            for k in range(K)
+        ]
+    )
+    preds = jax.vmap(denoise_fn)(windows)
+    acc = jnp.zeros(
+        z.shape[:axis] + (plan.extent,) + z.shape[axis + 1 :], dtype=jnp.float32
+    )
+    for k in range(K):
+        w = plan.weight_1d(k)
+        shape = [1] * z.ndim
+        shape[axis] = plan.window
+        wk = jnp.asarray(w).reshape(shape)
+        idx = [slice(None)] * z.ndim
+        idx[axis] = slice(plan.starts[k], plan.starts[k] + plan.window)
+        acc = acc.at[tuple(idx)].add(preds[k].astype(jnp.float32) * wk)
+    norm_shape = [1] * z.ndim
+    norm_shape[axis] = plan.extent
+    zn = jnp.asarray(plan.normalizer()).reshape(norm_shape)
+    return (acc / zn).astype(z.dtype)
+
+
+def lp_denoise(
+    denoise_fn_for_step: Callable[[int, int], DenoiseFn],
+    z_T: jnp.ndarray,
+    scheduler_update: Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray],
+    num_steps: int,
+    num_partitions: int,
+    overlap_ratio: float,
+    patch_sizes: Sequence[int],
+    spatial_axes: Sequence[int],
+    uniform: bool = False,
+) -> jnp.ndarray:
+    """Full T-step LP denoising loop (paper Fig. 3, Eqs. 3-6).
+
+    ``denoise_fn_for_step(i, dim)`` returns the guided denoiser for forward
+    pass ``i`` (1-indexed); ``scheduler_update(z, pred, i)`` is S(.) of
+    Eq. 6.  ``spatial_axes`` maps dim 0/1/2 (T/H/W) to axes of ``z``.
+    """
+    dims = usable_dims(
+        [z_T.shape[spatial_axes[d]] for d in range(3)],
+        patch_sizes,
+        num_partitions,
+    )
+    if not dims:
+        raise ValueError(
+            f"no latent dim has >= {num_partitions} patches; reduce K"
+        )
+    z = z_T
+    for i in range(1, num_steps + 1):
+        dim = rotation_dim(i, dims)
+        axis = spatial_axes[dim]
+        fn = denoise_fn_for_step(i, dim)
+        if uniform:
+            plan = plan_uniform(
+                z.shape[axis], patch_sizes[dim], num_partitions, overlap_ratio, dim
+            )
+            pred = lp_forward_uniform(fn, z, plan, axis)
+        else:
+            plan = plan_partition(
+                z.shape[axis], patch_sizes[dim], num_partitions, overlap_ratio, dim
+            )
+            pred = lp_forward(fn, z, plan, axis)
+        z = scheduler_update(z, pred, i)
+    return z

@@ -1,0 +1,174 @@
+"""SPMD LP engine — Latent Parallelism on a TPU mesh axis.
+
+TPU adaptation of the paper's master/scatter-gather workflow (DESIGN.md §2):
+
+* the latent is **replicated** along the lp mesh axis, so the "dynamic
+  rotating partition" (scatter) is a *local slice* — zero communication;
+* each rank denoises its uniform window (paper Eq. 4), weights it with its
+  trapezoid mask (Eq. 12), and scatters it into a zero global buffer;
+* "latent reconstruction" (Eqs. 15-17) is a single ``psum`` over the lp
+  axis followed by a local divide with the analytically known normalizer
+  (Eq. 16 needs no communication — weights depend on geometry only).
+
+Two formulations compute identical math:
+
+* :func:`stack_windows` / :func:`blend_windows` — pure functions used with
+  GSPMD: stack the K windows on a leading axis sharded over the lp axis and
+  let the partitioner place the slice / reduce.  Composes transparently
+  with tensor-parallel sharding constraints inside the denoiser.
+* :func:`lp_forward_shard_map` — explicit shard_map: guarantees the
+  collective schedule (one psum of latent size per step) independent of
+  partitioner heuristics.  Used by the serving engine and the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .uniform import UniformPlan
+
+DenoiseFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+# --------------------------------------------------------------- pure math
+def stack_windows(z: jnp.ndarray, plan: UniformPlan, axis: int) -> jnp.ndarray:
+    """(K, ..., window, ...) stack of the K uniform windows of ``z``."""
+    return jnp.stack(
+        [
+            jax.lax.dynamic_slice_in_dim(z, plan.starts[k], plan.window, axis)
+            for k in range(plan.num_partitions)
+        ]
+    )
+
+
+def window_weights(plan: UniformPlan) -> np.ndarray:
+    """(K, window) trapezoid masks, float32."""
+    return np.stack([plan.weight_1d(k) for k in range(plan.num_partitions)])
+
+
+def blend_windows(
+    preds: jnp.ndarray, plan: UniformPlan, axis: int
+) -> jnp.ndarray:
+    """Position-aware reconstruction of stacked window predictions.
+
+    ``preds``: (K, ...) with the partition dim at ``axis`` of each element
+    (i.e. ``axis + 1`` of the stacked tensor).  The sum over the leading K
+    axis is what GSPMD lowers to a reduce over the lp mesh axis.
+    """
+    K = plan.num_partitions
+    w = jnp.asarray(window_weights(plan))  # (K, window)
+    wshape = [1] * (preds.ndim - 1)
+    wshape[axis] = plan.window
+    weighted = preds.astype(jnp.float32) * w.reshape((K, *wshape))
+    out_shape = list(preds.shape[1:])
+    out_shape[axis] = plan.extent
+    zero = jnp.zeros(out_shape, jnp.float32)
+    starts = jnp.asarray(plan.starts)
+
+    def scatter(buf, pred_k, start_k):
+        return jax.lax.dynamic_update_slice_in_dim(buf, pred_k, start_k, axis)
+
+    scattered = jax.vmap(scatter, in_axes=(None, 0, 0))(zero, weighted, starts)
+    acc = scattered.sum(axis=0)
+    norm_shape = [1] * acc.ndim
+    norm_shape[axis] = plan.extent
+    norm = jnp.asarray(plan.normalizer()).reshape(norm_shape)
+    return (acc / norm).astype(preds.dtype)
+
+
+def lp_forward_stacked(
+    denoise_fn: DenoiseFn, z: jnp.ndarray, plan: UniformPlan, axis: int
+) -> jnp.ndarray:
+    """Full LP forward in stacked form: slice -> vmap(denoise) -> blend.
+
+    Under jit with the stacked axis sharded over the lp mesh axis, each
+    device runs exactly one window; without a mesh this is the vmapped
+    reference (tested against ``lp_forward_uniform``).
+    """
+    windows = stack_windows(z, plan, axis)
+    preds = jax.vmap(denoise_fn)(windows)
+    return blend_windows(preds, plan, axis)
+
+
+# ------------------------------------------------------------- GSPMD engine
+def lp_forward_gspmd(
+    denoise_fn: DenoiseFn,
+    z: jnp.ndarray,
+    plan: UniformPlan,
+    axis: int,
+    mesh: Mesh,
+    lp_axis: str = "data",
+) -> jnp.ndarray:
+    """LP forward with GSPMD sharding constraints on the stacked axis."""
+    windows = stack_windows(z, plan, axis)
+    spec = [None] * windows.ndim
+    spec[0] = lp_axis
+    windows = jax.lax.with_sharding_constraint(
+        windows, NamedSharding(mesh, P(*spec))
+    )
+    preds = jax.vmap(denoise_fn)(windows)
+    preds = jax.lax.with_sharding_constraint(
+        preds, NamedSharding(mesh, P(*spec))
+    )
+    out = blend_windows(preds, plan, axis)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
+# --------------------------------------------------------- shard_map engine
+def lp_forward_shard_map(
+    denoise_fn: DenoiseFn,
+    z: jnp.ndarray,
+    plan: UniformPlan,
+    axis: int,
+    mesh: Mesh,
+    lp_axis: str = "data",
+) -> jnp.ndarray:
+    """Explicit per-device LP forward: slice local -> denoise -> psum.
+
+    ``z`` replicated along ``lp_axis``; the only collective is one psum of
+    the global-latent-sized buffer (comm_model.comm_lp_spmd's 2(K-1)/K S_z
+    wire bytes per device).  The lp axis size must equal K.
+    """
+    K = plan.num_partitions
+    if mesh.shape[lp_axis] != K:
+        raise ValueError(
+            f"lp axis {lp_axis!r} has size {mesh.shape[lp_axis]}, plan has K={K}"
+        )
+    starts = jnp.asarray(plan.starts)
+    weights = jnp.asarray(window_weights(plan))  # (K, window)
+    norm = jnp.asarray(plan.normalizer())
+
+    other_axes = tuple(n for n in mesh.axis_names if n != lp_axis)
+
+    def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
+        k = jax.lax.axis_index(lp_axis)
+        start = starts[k]
+        window = jax.lax.dynamic_slice_in_dim(z_rep, start, plan.window, axis)
+        pred = denoise_fn(window).astype(jnp.float32)
+        wshape = [1] * pred.ndim
+        wshape[axis] = plan.window
+        pred = pred * weights[k].reshape(wshape)
+        out_shape = list(z_rep.shape)
+        buf = jnp.zeros(out_shape, jnp.float32)
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, pred, start, axis)
+        buf = jax.lax.psum(buf, lp_axis)  # latent reconstruction (Eq. 15)
+        nshape = [1] * buf.ndim
+        nshape[axis] = plan.extent
+        return (buf / norm.reshape(nshape)).astype(z_rep.dtype)
+
+    # Replicated in/out along every axis; the denoiser may use other axes
+    # (e.g. tensor parallelism over "model") internally.
+    fn = jax.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(z)

@@ -1,0 +1,69 @@
+"""Sampling schedulers S(.) (paper Eq. 1/6).
+
+WAN2.1 is a flow-matching model (velocity prediction, Euler integration);
+a DDIM eps-parameterization is provided for completeness.  Schedulers are
+pure: z_{t-1} = S(z_t, pred, i).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowMatchEuler:
+    """sigma_i linearly spaced 1 -> 0 over num_steps (shifted optional)."""
+
+    num_steps: int
+    shift: float = 3.0  # WAN uses a shifted schedule
+
+    def sigmas(self) -> np.ndarray:
+        s = np.linspace(1.0, 0.0, self.num_steps + 1)
+        if self.shift != 1.0:
+            s = self.shift * s / (1 + (self.shift - 1) * s)
+        return s.astype(np.float32)
+
+    def timestep(self, i: int) -> float:
+        """Model conditioning timestep for forward pass i (1-indexed)."""
+        return float(self.sigmas()[i - 1] * 1000.0)
+
+    def step(self, z: jnp.ndarray, velocity: jnp.ndarray, i: int) -> jnp.ndarray:
+        s = self.sigmas()
+        dt = float(s[i] - s[i - 1])  # negative
+        return z + dt * velocity.astype(z.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class DDIM:
+    """Deterministic DDIM over a linear-beta DDPM schedule, eps-pred."""
+
+    num_steps: int
+    beta_start: float = 8.5e-4
+    beta_end: float = 1.2e-2
+    train_steps: int = 1000
+
+    def _alphas(self) -> np.ndarray:
+        betas = np.linspace(self.beta_start, self.beta_end, self.train_steps)
+        return np.cumprod(1.0 - betas).astype(np.float32)
+
+    def _schedule(self) -> np.ndarray:
+        return np.linspace(self.train_steps - 1, 0, self.num_steps).astype(int)
+
+    def timestep(self, i: int) -> float:
+        return float(self._schedule()[i - 1])
+
+    def step(self, z: jnp.ndarray, eps: jnp.ndarray, i: int) -> jnp.ndarray:
+        sched = self._schedule()
+        ab = self._alphas()
+        t = sched[i - 1]
+        t_next = sched[i] if i < self.num_steps else -1
+        a_t = float(ab[t])
+        a_next = float(ab[t_next]) if t_next >= 0 else 1.0
+        eps = eps.astype(jnp.float32)
+        zf = z.astype(jnp.float32)
+        x0 = (zf - np.sqrt(1 - a_t) * eps) / np.sqrt(a_t)
+        out = np.sqrt(a_next) * x0 + np.sqrt(1 - a_next) * eps
+        return out.astype(z.dtype)

@@ -1,0 +1,85 @@
+"""Trace-time activation-sharding context.
+
+Model code is mesh-agnostic; the step builders (dry-run, train/serve
+drivers) activate this context so the batch dimension of activations is
+pinned to the data axes throughout the network.  Without the pin, GSPMD
+may choose a parameter-stationary layout and **replicate activations**
+across the data axis (observed on zamba2 train: per-device residual
+stacks at global-batch size — §Perf A, EXPERIMENTS.md).
+
+Usage:
+    with actctx.batch_axes(("pod", "data")):
+        lowered = jax.jit(step).lower(...)
+Inside model code: ``x = actctx.shard_batch(x)`` (no-op when inactive).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_AXES: Optional[Tuple[str, ...]] = None
+_ATTN_SEQ: Optional[str] = None
+
+
+@contextlib.contextmanager
+def batch_axes(axes: Optional[Tuple[str, ...]],
+               attn_seq: Optional[str] = None):
+    global _AXES, _ATTN_SEQ
+    prev, prev_seq = _AXES, _ATTN_SEQ
+    _AXES = tuple(axes) if axes else None
+    _ATTN_SEQ = attn_seq
+    try:
+        yield
+    finally:
+        _AXES, _ATTN_SEQ = prev, prev_seq
+
+
+def active() -> bool:
+    return _AXES is not None
+
+
+def shard_batch(x):
+    """Constrain dim 0 of ``x`` to the data axes (no-op outside context).
+
+    When sequence-parallel attention is active, rank-3+ hiddens
+    (B, S, ...) stay sequence-sharded over the tp axis at layer
+    boundaries too — re-gathering the sequence every layer costs an
+    all-gather of the full activation per layer (261 GB/step on llama4
+    prefill, §Perf B iteration 2)."""
+    if _AXES is None or x.ndim == 0:
+        return x
+    if _ATTN_SEQ is not None and x.ndim >= 3:
+        spec = P(_AXES, _ATTN_SEQ, *([None] * (x.ndim - 2)))
+    else:
+        spec = P(_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_attn_q(q):
+    """Sequence-parallel attention for head counts that don't divide the
+    TP degree (llama4's 40H/8KV over 16): shard the *query sequence* over
+    the tp axis and replicate KV there — otherwise GSPMD partial-shards
+    the score contraction and all-reduces quadratic (B,G,Sq,Skv) tensors
+    (observed 2 TB/step on llama4 prefill — §Perf B).  q: (B, S, H, D)."""
+    if _ATTN_SEQ is None:
+        return q
+    return jax.lax.with_sharding_constraint(
+        q, P(_AXES, _ATTN_SEQ, None, None))
+
+
+def shard_attn_kv(kv):
+    if _ATTN_SEQ is None:
+        return kv
+    return jax.lax.with_sharding_constraint(
+        kv, P(_AXES, None, None, None))
+
+
+def shard_attn_out(out):
+    """(B, S, H*D) attention output, still sequence-sharded."""
+    if _ATTN_SEQ is None:
+        return out
+    return jax.lax.with_sharding_constraint(
+        out, P(_AXES, _ATTN_SEQ, None))

@@ -1,0 +1,63 @@
+"""Explicit collective patterns the partitioner can't be trusted to find.
+
+``seq_parallel_decode_attention``: flash-decode for batch=1 long-context —
+the KV cache is sharded over a mesh axis along *sequence*; each shard
+computes a partial softmax (max, sum, weighted values) and the combine is
+two tiny psums.  This converts an idle data axis into K-fold attention
+parallelism for the 500k-token cells (§Perf optimization for zamba2 /
+h2o-danube long_500k).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def _local_partial(q, k, v, kv_pos, position, window: int):
+    """Per-shard partial attention.  q: (B,1,H,D); k/v: (B,S_loc,KV,D);
+    kv_pos: (B, S_loc) global positions of this shard's slots.
+    Returns (m (B,KV,G), l (B,KV,G), acc (B,KV,G,D))."""
+    B, _, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(float(D))
+    ok = kv_pos <= position[:, None]
+    if window > 0:
+        ok &= kv_pos > (position[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def seq_parallel_decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, D) current-token query (RoPE'd)
+    k_local: jnp.ndarray,      # (B, S_local, KV, D) this shard's KV slice
+    v_local: jnp.ndarray,
+    kv_pos_local: jnp.ndarray, # (B, S_local) global positions (incl. new tok)
+    position: jnp.ndarray,     # (B,) current decode index
+    axis_name: str,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Flash-decode combine across a sequence-sharded cache.
+
+    Communication: 2 psums of (B, KV, G) + one of (B, KV, G, D) —
+    O(B*H*D) bytes, independent of context length."""
+    B, _, H, D = q.shape
+    m, l, acc = _local_partial(q, k_local, v_local, kv_pos_local, position, window)
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    out = acc_glob / jnp.maximum(l_glob, 1e-37)[..., None]
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,91 @@
+"""Per-(arch x shape) parallelization policy.
+
+Decides dp/fsdp/tp/remat/microbatch/optimizer for each dry-run cell, using
+napkin memory math against the v5e budget (16 GB HBM/chip):
+
+* train: always FSDP (ZeRO-3) over "data"; Adafactor + per-layer remat +
+  microbatch accumulation for >=100B-param models (Adam fp32 moments for
+  405B are ~3.2 TB — they cannot fit a 256-chip pod).
+* serve: TP over "model"; FSDP also on when bf16 params / 16 > ~12 GB
+  (weight-gathered serving for 405B-class).
+* decode caches shard KV-heads over "model" when divisible, else head_dim.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig, ParallelConfig, ShapeConfig
+
+GiB = 1024**3
+
+
+def count_params(cfg: ArchConfig, model=None) -> int:
+    """Exact param count via eval_shape on init (no allocation).
+
+    Pure-python product — jnp.prod would overflow int32 on 5e9-element
+    expert tensors (llama4's (128, 5120, 8192) stacks)."""
+    import math
+
+    from repro import models
+
+    model = model or models.build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ArchConfig, total: int) -> int:
+    """Active params per token (MoE: top_k of num_experts experts)."""
+    if not cfg.is_moe:
+        return total
+    expert = 3 * cfg.d_model * cfg.d_ff_expert
+    pad = cfg.num_experts + (
+        0 if cfg.num_experts % 16 == 0 else 16 - cfg.num_experts % 16
+    )
+    all_experts = cfg.num_layers * pad * expert
+    active_experts = cfg.num_layers * cfg.experts_top_k * expert
+    return total - all_experts + active_experts
+
+
+def plan_parallel(
+    cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool = False,
+    n_params: int = 0,
+) -> ParallelConfig:
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    n = n_params or count_params(cfg)
+    big = n > 100e9
+    param_bytes = 2 * n  # bf16
+
+    if shape.kind == "train":
+        dp_size = 16 * (2 if multi_pod else 1)
+        per_replica = max(shape.global_batch // dp_size, 1)
+        # target <= 2 sequences per device per microbatch for 100B-class
+        micro = 1
+        if big:
+            micro = max(per_replica // 1, 1)
+        elif n > 10e9:
+            micro = max(per_replica // 4, 1)
+        return ParallelConfig(
+            dp_axes=dp_axes,
+            fsdp_axis="data",
+            remat="full" if n > 1.5e9 else "none",
+            microbatch=micro,
+            optimizer="adafactor" if big else "adamw",
+        )
+
+    # serving
+    fsdp = "data" if param_bytes / 16 > 12 * GiB else None
+    seq_axis = None
+    return ParallelConfig(
+        dp_axes=dp_axes,
+        fsdp_axis=fsdp,
+        remat="none",
+        microbatch=1,
+        optimizer="adamw",
+        seq_axis=seq_axis,
+    )
+
+
+def cache_head_or_dim(cfg: ArchConfig, tp_size: int = 16) -> str:
+    """Shard decode caches over KV heads when divisible, else head_dim."""
+    return "kv" if cfg.num_kv_heads % tp_size == 0 else "dim"

@@ -1,0 +1,198 @@
+"""Parameter and batch PartitionSpec rules (FSDP / TP / EP / vocab-parallel).
+
+Specs are assigned by key-path pattern over the param pytree, producing a
+matching pytree of ``PartitionSpec``.  Stacked-layer leading axes (scan over
+layers) are padded with ``None`` on the left automatically.
+
+Logical mapping (mesh axes "pod", "data", "model"):
+  * batch / LP groups   -> ("pod", "data")
+  * tensor parallel     -> "model"   (heads, d_ff, vocab, experts)
+  * FSDP (ZeRO-3)       -> "data"    (optional; on for training & big-model
+                                       serving so 405B-class fits HBM)
+
+Baseline philosophy: only *boundary* shardings (params + inputs + outputs)
+are pinned; internal activation layout is left to GSPMD.  §Perf iterations
+add explicit constraints where the partitioner misbehaves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ParallelConfig
+
+# (regex on '/'-joined path, spec for the TRAILING dims)
+# fsdp and tp placeholders resolved against the ParallelConfig.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / unembedding: vocab over tp (vocab-parallel logits)
+    (r"(^|/)embed/emb$", ("tp", "fsdp")),
+    (r"(^|/)lm_head/emb$", ("tp", "fsdp")),
+    (r"(^|/)dec_pos/emb$", (None, None)),
+    # MoE first — the generic wi/wg/wo rules below would shadow these
+    # (experts over tp = expert parallelism, FSDP inside each expert)
+    (r"/moe/router/w$", ("fsdp", None)),
+    (r"/moe/(wi|wg)/w$", ("tp", "fsdp", None)),
+    (r"/moe/wo/w$", ("tp", None, "fsdp")),
+    # attention projections
+    (r"/(q|k|v)/w$", ("fsdp", "tp")),
+    (r"/o/w$", ("tp", "fsdp")),
+    # dense MLP
+    (r"/(wi|wg)/w$", ("fsdp", "tp")),
+    (r"/wo/w$", ("tp", "fsdp")),
+    # zamba2 LoRA adapters
+    (r"/lora.*/a/w$", ("fsdp", None)),
+    (r"/lora.*/b/w$", (None, "tp")),
+    # mamba2: keep the fused in_proj output replicated (mixed z|x|B|C|dt
+    # splits don't align with shard boundaries — §Perf candidate), shard
+    # the inner->model projection input over tp
+    (r"/in_proj/w$", ("fsdp", None)),
+    (r"/out_proj/w$", (None, "fsdp")),
+    # xLSTM
+    (r"/up/w$", ("fsdp", "tp")),
+    (r"/down/w$", ("tp", "fsdp")),
+    (r"/wx/w$", ("fsdp", "tp")),
+    (r"/gates/w$", (None, None)),
+    (r"/rec$", (None, None, None)),
+    # DiT
+    (r"/patch_embed/w$", (None, "tp")),
+    (r"/text_proj/w$", (None, "tp")),
+    (r"/head/w$", ("tp", None)),
+    (r"/ada/w$", (None, "tp")),
+    (r"/time_mlp/w[12]/w$", (None, None)),
+    # vision stub projection
+    (r"/vision_proj/w$", ("fsdp", "tp")),
+)
+
+
+def _resolve(ax: Optional[str], parallel: ParallelConfig) -> Optional[Any]:
+    if ax == "tp":
+        return parallel.tp_axis
+    if ax == "fsdp":
+        return parallel.fsdp_axis
+    return ax
+
+
+def spec_for_path(path: str, ndim: int, parallel: ParallelConfig) -> P:
+    for pat, trailing in _RULES:
+        if re.search(pat, path):
+            axes = [_resolve(a, parallel) for a in trailing]
+            if len(axes) > ndim:
+                axes = axes[len(axes) - ndim :]
+            pad = [None] * (ndim - len(axes))
+            return P(*pad, *axes)
+    return P(*([None] * ndim))  # scalars / norms / biases replicate
+
+
+def _path_of(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_or_shapes, parallel: ParallelConfig):
+    """Pytree of PartitionSpec matching ``params_or_shapes`` (arrays or
+    ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for_path(_path_of(kp), leaf.ndim, parallel),
+        params_or_shapes,
+    )
+
+
+def param_shardings(params_or_shapes, parallel: ParallelConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_or_shapes, parallel),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _dp(parallel: ParallelConfig, mesh: Mesh):
+    axes = tuple(a for a in parallel.dp_axes if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def batch_specs(kind: str, parallel: ParallelConfig, mesh: Mesh, cfg: ArchConfig):
+    """Input PartitionSpecs per workload kind (pytree matching the batch)."""
+    dp = _dp(parallel, mesh)
+    if kind == "train":
+        spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if cfg.family == "vlm":
+            spec["vision_embeds"] = P(dp, None, None)
+        if cfg.family == "audio":
+            spec["frames"] = P(dp, None, None)
+        return spec
+    if kind == "prefill":
+        spec = {"tokens": P(dp, None)}
+        if cfg.family == "vlm":
+            spec["vision_embeds"] = P(dp, None, None)
+        if cfg.family == "audio":
+            spec["frames"] = P(dp, None, None)
+        return spec
+    if kind == "decode":
+        return {"token": P(dp, None), "position": P(dp)}
+    if kind == "vdm_generate":
+        # latent replicated over the LP axis (slicing is local); context too
+        return {"latent": P(), "t": P(), "context": P()}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ArchConfig, parallel: ParallelConfig, mesh: Mesh,
+                seq_axis: Optional[str] = None, kv_mode: str = "kv"):
+    """KV/state-cache PartitionSpecs.
+
+    Layout (L, B, S, KV, D): batch over dp axes, kv heads over tp (or
+    head_dim when KV doesn't divide the tp degree — ``kv_mode="dim"``).
+    For long-context batch=1 decode, ``seq_axis`` shards the *sequence*
+    dim of attention caches instead (sequence-parallel decode)."""
+    dp = _dp(parallel, mesh)
+    tp = parallel.tp_axis
+
+    def kv_spec(ndim: int) -> P:
+        # (..., B, S, KV, D)
+        kv_ax, d_ax = (tp, None) if kv_mode == "kv" else (None, tp)
+        if seq_axis is not None:
+            trail = (None, seq_axis, kv_ax, d_ax)
+        else:
+            trail = (dp, None, kv_ax, d_ax)
+        pad = [None] * (ndim - 4)
+        return P(*pad, *trail)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        return {"k": kv_spec(5), "v": kv_spec(5)}
+    if fam == "hybrid":
+        return {
+            "mamba": {
+                # (g, attn_every, B, ...) conv/ssm states: batch over dp
+                "conv": P(None, None, dp, None, None),
+                "ssm": P(None, None, dp, None, None, None),
+            },
+            "k": kv_spec(5),
+            "v": kv_spec(5),
+        }
+    if fam == "ssm":
+        return {
+            "mlstm": {
+                "conv": P(None, None, dp, None, None),
+                "C": P(None, None, dp, None, None, None),
+                "n": P(None, None, dp, None, None),
+                "m": P(None, None, dp, None),
+            },
+            "slstm": {
+                "c": P(None, dp, None, None),
+                "n": P(None, dp, None, None),
+                "m": P(None, dp, None),
+                "h": P(None, dp, None, None),
+            },
+        }
+    raise ValueError(fam)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots LP exercises:
+
+  flash_attention — the DiT/LM attention inner loop (MXU-tiled online
+                    softmax; the dominant FLOPs of every forward)
+  latent_blend    — LP's position-aware reconstruction (Eqs. 15-17) in a
+                    single fused pass
+  guidance_update — CFG combine + scheduler step epilogue, fused
+  mamba_ssd       — chunked SSD scan with VMEM-resident recurrent state
+                    (the zamba2 hybrid's dominant traffic, §Perf A4)
+
+Each ships with a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py``; tests sweep shapes/dtypes in interpret mode (CPU container;
+TPU v5e is the lowering target).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=True`` (default here) runs the kernel bodies in Python on CPU
+for validation; on a real TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .mamba_ssd import mamba_ssd as _ssd
+from .guidance_update import guidance_update as _guidance
+from .latent_blend import latent_blend as _blend
+
+
+def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,
+                    window=0, kv_len=None, blk_q=128, blk_k=128,
+                    interpret=True, skip_upper=False):
+    if kv_len is not None:
+        # fold the valid-length mask into kv positions (int32-max = masked)
+        kv_positions = jnp.where(
+            kv_positions < kv_len[:, None], kv_positions,
+            jnp.iinfo(jnp.int32).max,
+        )
+    return _flash(q, k, v, q_positions.astype(jnp.int32),
+                  kv_positions.astype(jnp.int32), causal=causal,
+                  window=window, blk_q=blk_q, blk_k=blk_k,
+                  interpret=interpret, skip_upper=skip_upper)
+
+
+def latent_blend(preds, weights, normalizer, starts: Tuple[int, ...],
+                 window: int, extent: int, *, blk_f=512, interpret=True):
+    return _blend(preds, weights, normalizer, tuple(int(s) for s in starts),
+                  window, extent, blk_f=blk_f, interpret=interpret)
+
+
+def guidance_update(z, cond, uncond, w: float, dt: float, *,
+                    blk=65536, interpret=True):
+    return _guidance(z, cond, uncond, float(w), float(dt), blk=blk,
+                     interpret=interpret)
+
+
+def mamba_ssd(x, log_decay, scale, B, C, *, chunk=64, head_block=8,
+              interpret=True):
+    return _ssd(x, log_decay, scale, B, C, chunk=chunk,
+                head_block=head_block, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention_dense
+
+
+def flash_attention_ref(q, k, v, q_positions, kv_positions,
+                        causal=True, window=0):
+    """O(S^2)-memory attention — the flash kernel oracle."""
+    return attention_dense(q, k, v, q_positions, kv_positions, causal, window)
+
+
+def latent_blend_ref(preds, weights, normalizer, starts, window, extent):
+    """Scatter-add reconstruction (Eqs. 15-17), K+1 passes."""
+    K, W, F = preds.shape
+    acc = jnp.zeros((extent, F), jnp.float32)
+    for kk in range(K):
+        contrib = preds[kk].astype(jnp.float32) * weights[kk][:, None]
+        acc = acc.at[starts[kk]:starts[kk] + window].add(contrib)
+    return (acc / normalizer[:, None]).astype(preds.dtype)
+
+
+def guidance_update_ref(z, cond, uncond, w, dt):
+    """CFG combine + Euler step, unfused."""
+    pred = uncond.astype(jnp.float32) + w * (
+        cond.astype(jnp.float32) - uncond.astype(jnp.float32))
+    return (z.astype(jnp.float32) + dt * pred).astype(z.dtype)
+
+
+def mamba_ssd_ref(x, log_decay, scale, B, C):
+    """Sequential gated linear recurrence (groups == 1) — SSD oracle."""
+    from repro.models.ssm import gated_linear_scan
+
+    return gated_linear_scan(
+        x, log_decay, scale, B[:, :, None, :], C[:, :, None, :],
+        chunk=32, factorized=False,
+    )

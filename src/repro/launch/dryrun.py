@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory/cost/collective evidence.
+
+MUST be the first import in the process (jax locks the device count on
+first init) — hence the XLA_FLAGS assignment above everything else.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this produces:
+  * compiled.memory_analysis()  -> bytes/device (proves it fits)
+  * compiled.cost_analysis()    -> HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the compiled HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs import get_config, get_shape, skip_reason, cells
+from repro.configs.base import ArchConfig, ParallelConfig, ShapeConfig
+from repro.distributed.policy import (
+    active_params,
+    cache_head_or_dim,
+    count_params,
+    plan_parallel,
+)
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.serving.serve_step import make_decode_step, make_prefill_step
+from repro.train.loop import make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        out = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            out["vision_embeds"] = _sds((B, cfg.num_vision_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            out["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = _sds((B, cfg.num_vision_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            out["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        return out
+    if shape.kind == "decode":
+        out = {
+            "token": _sds((B, 1), jnp.int32),
+            "position": _sds((B,), jnp.int32),
+        }
+        if cfg.family == "audio":
+            out["enc_states"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        return out
+    if shape.kind == "vdm_generate":
+        t_lat = (shape.num_frames - 1) // 4 + 1
+        h_lat, w_lat = shape.height // 8, shape.width // 8
+        return {
+            "latent": _sds((B, t_lat, h_lat, w_lat, cfg.latent_channels), dt),
+            "t": _sds((B,), jnp.float32),
+            "context": _sds((2 * B, cfg.context_len, cfg.context_dim), jnp.float32),
+        }
+    raise ValueError(shape.kind)
+
+
+def _collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in compiled HLO."""
+    from repro.analysis.hlo import collective_bytes
+
+    return collective_bytes(hlo_text)
+
+
+def _mem_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
+                 lp_impl: str = "gspmd"):
+    """Build the jitted LP denoising step (one forward pass, dim=height)."""
+    from repro.core import plan_uniform
+    from repro.core.spmd import lp_forward_gspmd, lp_forward_shard_map
+    from repro.diffusion.cfg import cfg_combine
+    from repro.diffusion.sampler import FlowMatchEuler
+    from repro.models import dit
+
+    K = mesh.shape["data"]
+    h_lat = shape.height // 8
+    plan = plan_uniform(h_lat, cfg.patch_sizes[1], K, parallel.overlap_ratio, dim=1)
+    sampler = FlowMatchEuler(shape.num_steps)
+    guidance = 5.0
+    model = models.build(cfg)
+
+    def step(params, batch):
+        z, t, ctx = batch["latent"], batch["t"], batch["context"]
+        b = z.shape[0]
+
+        kv_chunk = int(os.environ.get("REPRO_DIT_KV_CHUNK", "4096"))
+        cfg_on_pod = "pod" in mesh.axis_names
+
+        def denoise(window):
+            z2 = jnp.concatenate([window, window], axis=0)
+            t2 = jnp.concatenate([t, t], axis=0)
+            if cfg_on_pod:
+                # DESIGN.md §2: the CFG pair (cond, uncond) maps onto the
+                # pod axis — each pod computes one branch; only the
+                # latent-sized combine crosses the slow inter-pod links
+                z2 = jax.lax.with_sharding_constraint(
+                    z2, P("pod", *([None] * (z2.ndim - 1))))
+            pred = dit.forward(params, z2, t2, ctx, cfg, kv_chunk=kv_chunk)
+            if cfg_on_pod:
+                pred = jax.lax.with_sharding_constraint(
+                    pred, P("pod", *([None] * (pred.ndim - 1))))
+            return cfg_combine(pred[:b], pred[b:], guidance)
+
+        if lp_impl == "shard_map":
+            pred = lp_forward_shard_map(denoise, z, plan, 2, mesh, "data")
+        else:
+            pred = lp_forward_gspmd(denoise, z, plan, 2, mesh, "data")
+        return sampler.step(z, pred, 1)
+
+    return step
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    lp_impl: str = "gspmd",
+    mesh=None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run record."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    reason = skip_reason(arch, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "skipped": reason,
+    }
+    if reason:
+        return rec
+
+    t0 = time.time()
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    model = models.build(cfg)
+    n_params = count_params(cfg, model)
+    parallel = plan_parallel(cfg, shape, multi_pod=multi_pod, n_params=n_params)
+    rec["n_params"] = n_params
+    rec["n_active_params"] = active_params(cfg, n_params)
+    rec["parallel"] = {
+        "fsdp": parallel.fsdp_axis, "remat": parallel.remat,
+        "microbatch": parallel.microbatch, "optimizer": parallel.optimizer,
+    }
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shapes, parallel)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    params_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params_shapes, psh,
+    )
+    ispecs = input_specs(cfg, shape)
+
+    from repro.distributed import actctx
+
+    dp_for_ctx = tuple(a for a in parallel.dp_axes if a in mesh.axis_names)
+    if shape.kind == "vdm_generate":
+        # LP parallelizes over windows (the stacked vmap axis), not batch;
+        # batch-dim constraints inside the DiT would pin the CFG pair (2)
+        # to the 16-way data axis and break the shard_map manual region
+        dp_for_ctx = ()
+    # sequence-parallel attention when head counts don't divide TP
+    tp_size = mesh.shape[parallel.tp_axis]
+    attn_seq = None
+    # trigger on *query* heads only: kv-head replication is handled
+    # acceptably by GSPMD, but non-divisible q heads partial-shard the
+    # score contraction (llama3 train regressed 616->3555s collective
+    # when kv=8 triggered seq-par; q=128 divides fine — §Perf B note)
+    if shape.kind in ("train", "prefill") and cfg.num_heads and             cfg.num_heads % tp_size != 0:
+        attn_seq = parallel.tp_axis
+    if shape.kind == "vdm_generate" and lp_impl == "gspmd" and             cfg.num_heads % tp_size:
+        attn_seq = parallel.tp_axis
+    with jax.set_mesh(mesh), actctx.batch_axes(dp_for_ctx, attn_seq=attn_seq):
+        if shape.kind == "train":
+            train_step = make_train_step(model, parallel)
+            opt_shapes = jax.eval_shape(train_step.opt_init, params_shapes)
+            # optimizer states inherit their params' sharding
+            def opt_spec(path_leaf):
+                return None
+            opt_specs = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), opt_shapes
+            )
+            # match param-shaped leaves to param specs: m/v/acc mirror params
+            def mirror(tree):
+                return jax.tree.map(
+                    lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                    tree, psh,
+                )
+            if parallel.optimizer == "adamw":
+                opt_sds = {
+                    "m": mirror(opt_shapes["m"]),
+                    "v": mirror(opt_shapes["v"]),
+                    "step": jax.ShapeDtypeStruct(
+                        (), jnp.int32, sharding=NamedSharding(mesh, P())
+                    ),
+                }
+            else:
+                opt_sds = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        l.shape, l.dtype,
+                        sharding=NamedSharding(mesh, P(*([None] * l.ndim))),
+                    ),
+                    opt_shapes,
+                )
+            bspec = batch_specs("train", parallel, mesh, cfg)
+            batch_sds = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype, sharding=NamedSharding(mesh, s)
+                ),
+                ispecs, bspec,
+            )
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                            sharding=NamedSharding(mesh, P()))
+            fn = jax.jit(train_step, donate_argnums=(0, 1))
+            lowered = fn.lower(params_sds, opt_sds, batch_sds, step_sds)
+        elif shape.kind == "prefill":
+            prefill = make_prefill_step(model, cfg)
+            bspec = batch_specs("prefill", parallel, mesh, cfg)
+            batch_sds = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype, sharding=NamedSharding(mesh, s)
+                ),
+                ispecs, bspec,
+            )
+            fn = jax.jit(prefill)
+            lowered = fn.lower(params_sds, batch_sds)
+        elif shape.kind == "decode":
+            decode = make_decode_step(model, cfg)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            kv_mode = cache_head_or_dim(cfg, mesh.shape[parallel.tp_axis])
+            cache_parallel = parallel
+            if shape.global_batch == 1:
+                # batch=1 cannot shard over dp; the data axis instead
+                # shards the cache *sequence* (sequence-parallel decode)
+                cache_parallel = dataclasses.replace(
+                    parallel, dp_axes=(),
+                    seq_axis=parallel.seq_axis or "data",
+                )
+            cspecs = cache_specs(cfg, cache_parallel, mesh,
+                                 seq_axis=cache_parallel.seq_axis,
+                                 kv_mode=kv_mode)
+            cache_sds = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype, sharding=NamedSharding(mesh, s)
+                ),
+                cache_shapes, cspecs,
+                is_leaf=lambda x: hasattr(x, "shape") or isinstance(x, P),
+            )
+            bspec = batch_specs("decode", parallel, mesh, cfg)
+            if cfg.family == "audio":
+                bspec["enc_states"] = P(None, None, None)
+            dp = tuple(a for a in parallel.dp_axes if a in mesh.axis_names)
+            if shape.global_batch == 1:
+                # batch=1 can't shard over dp — replicate token/position
+                bspec = jax.tree.map(
+                    lambda s: P(*([None] * len(s))), bspec,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            batch_sds = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype, sharding=NamedSharding(mesh, s)
+                ),
+                ispecs, bspec,
+            )
+            fn = jax.jit(decode, donate_argnums=(2,))
+            lowered = fn.lower(params_sds, batch_sds, cache_sds)
+        elif shape.kind == "vdm_generate":
+            step = _vdm_lp_step(cfg, shape, mesh, parallel, lp_impl)
+            batch_sds = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype, sharding=NamedSharding(mesh, P())
+                ),
+                ispecs,
+            )
+            fn = jax.jit(step)
+            lowered = fn.lower(params_sds, batch_sds)
+        else:
+            raise ValueError(shape.kind)
+
+        compiled = lowered.compile()
+
+    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    ca = compiled.cost_analysis() or {}
+    # raw XLA numbers (while bodies counted ONCE — kept for reference only)
+    rec["xla_flops_body"] = float(ca.get("flops", 0.0))
+    rec["memory"] = _mem_summary(compiled)
+    hlo = compiled.as_text()
+    # trip-count-aware accounting (analysis/hlo_analyzer.py): per-device
+    # MXU flops, HBM traffic at fusion boundaries, collective payloads
+    from repro.analysis.hlo_analyzer import analyze as hlo_analyze
+
+    anal = hlo_analyze(hlo)
+    rec["flops"] = anal.flops
+    rec["hbm_bytes"] = anal.hbm_bytes
+    rec["collectives"] = {k: float(v) for k, v in anal.collective_bytes.items()}
+    rec["collective_counts"] = {
+        k: float(v) for k, v in anal.collective_counts.items()
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lp-impl", default="gspmd", choices=["gspmd", "shard_map"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    todo = []
+    if args.all:
+        for arch, shape, _ in cells():
+            todo.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        todo.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch, shape in todo:
+            tag = f"{arch} x {shape} [{'2x16x16' if multi_pod else '16x16'}]"
+            try:
+                rec = lower_cell(arch, shape, multi_pod, args.lp_impl, mesh=mesh)
+                if rec.get("skipped"):
+                    print(f"SKIP {tag}: {rec['skipped']}", flush=True)
+                else:
+                    print(
+                        f"OK   {tag}: {rec['lower_compile_s']}s "
+                        f"flops={rec['flops']:.3e} "
+                        f"coll={sum(rec['collectives'].values())/1e9:.2f}GB",
+                        flush=True,
+                    )
+                results.append(rec)
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if multi_pod else "16x16",
+                                "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first init, and
+the dry-run needs to set XLA_FLAGS before that happens.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16x16 ("data", "model") or 2-pod 2x16x16 ("pod", "data",
+    "model").  256 chips per pod (TPU v5e-256 topology)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh with Auto axis types (tests, small runs)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def local_mesh(model: int = 1, data: Optional[int] = None):
+    """Mesh over whatever devices exist (CPU tests: usually 1)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return make_mesh((data, model), ("data", "model"))

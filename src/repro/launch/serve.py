@@ -1,0 +1,52 @@
+"""Serving driver CLI — LP video generation service.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 4 --steps 6 \
+      --partitions 2 --overlap 0.5
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.models import dit, frontends
+from repro.serving.engine import LPServingEngine, VideoRequest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--partitions", type=int, default=2)
+    ap.add_argument("--overlap", type=float, default=0.5)
+    ap.add_argument("--frames-latent", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    engine = LPServingEngine(fwd, params, cfg,
+                             num_partitions=args.partitions,
+                             overlap_ratio=args.overlap,
+                             num_steps=args.steps)
+    for i in range(args.requests):
+        engine.submit(VideoRequest(
+            request_id=i,
+            context=frontends.text_context(jax.random.PRNGKey(i), 1, cfg),
+            latent_shape=(args.frames_latent, 8, 12),
+            seed=i,
+        ))
+    results = engine.run()
+    for r in sorted(results, key=lambda x: x.request_id):
+        print(f"request {r.request_id}: latent {tuple(r.latent.shape)} "
+              f"steps={r.num_steps} wall={r.wall_s:.1f}s restarts={r.restarts}")
+
+
+if __name__ == "__main__":
+    main()

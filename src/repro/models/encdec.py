@@ -1,0 +1,173 @@
+"""Whisper-style encoder-decoder backbone (family "audio").
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed mel-frame embeddings (B, encoder_seq, d_model); the
+encoder is a bidirectional transformer over them, the decoder a causal
+transformer with cross-attention.  Whisper uses MHA (kv == heads) and
+learned positions; we use sinusoidal positions for the encoder (as the
+original does) and RoPE-free learned-position decoding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from .scan_util import pscan
+
+from repro.configs.base import ArchConfig
+from repro.distributed import actctx
+from .attention import decode_attention, gqa_apply, gqa_init
+from .layers import (
+    dense,
+    embed,
+    embedding_init,
+    layernorm,
+    layernorm_init,
+    mlp,
+    mlp_init,
+    sinusoidal_embedding,
+    unembed,
+)
+from .transformer import stack_init
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def enc_block_init(key, cfg: ArchConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "attn_norm": layernorm_init(cfg.d_model),
+        "attn": gqa_init(ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                         cfg.head_dim, _dt(cfg)),
+        "mlp_norm": layernorm_init(cfg.d_model),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, _dt(cfg)),
+    }
+
+
+def dec_block_init(key, cfg: ArchConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "self_norm": layernorm_init(cfg.d_model),
+        "self_attn": gqa_init(ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim, _dt(cfg)),
+        "cross_norm": layernorm_init(cfg.d_model),
+        "cross_attn": gqa_init(kc, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.head_dim, _dt(cfg)),
+        "mlp_norm": layernorm_init(cfg.d_model),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, _dt(cfg)),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    k_e, k_d, k_emb, k_pos = jax.random.split(key, 4)
+    return {
+        "embed": embedding_init(k_emb, cfg.padded_vocab_size, cfg.d_model, _dt(cfg)),
+        "dec_pos": embedding_init(k_pos, 8192, cfg.d_model, _dt(cfg)),
+        "encoder": stack_init(k_e, cfg.encoder_layers,
+                              lambda k: enc_block_init(k, cfg)),
+        "decoder": stack_init(k_d, cfg.num_layers,
+                              lambda k: dec_block_init(k, cfg)),
+        "enc_final": layernorm_init(cfg.d_model),
+        "dec_final": layernorm_init(cfg.d_model),
+    }
+
+
+def encode(params, frames: jnp.ndarray, cfg: ArchConfig,
+           kv_chunk: int = 2048) -> jnp.ndarray:
+    """frames: (B, S_enc, d) stub frontend embeddings -> encoder states."""
+    B, S, _ = frames.shape
+    pos = jnp.arange(S)
+    x = frames + sinusoidal_embedding(pos, cfg.d_model)[None].astype(frames.dtype)
+    positions = jnp.broadcast_to(pos[None, :], (B, S))
+
+    def body(h, layer):
+        a = gqa_apply(
+            layer["attn"], layernorm(layer["attn_norm"], h), positions,
+            cfg.rope_theta, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            causal=False, use_rope=False, kv_chunk=kv_chunk,
+        )
+        h = h + a
+        h = h + mlp(layer["mlp"], layernorm(layer["mlp_norm"], h))
+        return actctx.shard_batch(h), None
+
+    x, _ = pscan(body, x, params["encoder"])
+    return layernorm(params["enc_final"], x)
+
+
+def decode_forward(
+    params, tokens: jnp.ndarray, enc_states: jnp.ndarray, cfg: ArchConfig,
+    kv_chunk: int = 2048,
+) -> jnp.ndarray:
+    """Teacher-forced decoder -> hidden states (B, S, d)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = x + embed(params["dec_pos"], jnp.arange(S) % 8192)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(h, layer):
+        a = gqa_apply(
+            layer["self_attn"], layernorm(layer["self_norm"], h), positions,
+            cfg.rope_theta, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            causal=True, use_rope=False, kv_chunk=kv_chunk,
+        )
+        h = h + a
+        c = gqa_apply(
+            layer["cross_attn"], layernorm(layer["cross_norm"], h), positions,
+            cfg.rope_theta, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            causal=False, use_rope=False, kv_source=enc_states,
+            kv_chunk=kv_chunk,
+        )
+        h = h + c
+        h = h + mlp(layer["mlp"], layernorm(layer["mlp_norm"], h))
+        return actctx.shard_batch(h), None
+
+    x, _ = pscan(body, x, params["decoder"])
+    return layernorm(params["dec_final"], x)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    kv = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, _dt(cfg)), "v": jnp.zeros(kv, _dt(cfg))}
+
+
+def decode_step(
+    params, token: jnp.ndarray, cache: Dict[str, Any],
+    position: jnp.ndarray, enc_states: jnp.ndarray, cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token decode with self-attn KV cache; cross-attn reads encoder
+    states directly (they are small and static)."""
+    B = token.shape[0]
+    x = embed(params["embed"], token)
+    x = x + embed(params["dec_pos"], position[:, None] % 8192)
+    S_enc = enc_states.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(S_enc)[None, :], (B, S_enc))
+
+    def body(h, xs):
+        layer, ck, cv = xs
+        a, nk, nv = decode_attention(
+            layer["self_attn"], layernorm(layer["self_norm"], h),
+            ck, cv, position, cfg.rope_theta,
+            cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, use_rope=False,
+        )
+        h = h + a
+        c = gqa_apply(
+            layer["cross_attn"], layernorm(layer["cross_norm"], h),
+            position[:, None], cfg.rope_theta,
+            cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            causal=False, use_rope=False, kv_source=enc_states,
+            kv_positions=enc_pos,
+        )
+        h = h + c
+        h = h + mlp(layer["mlp"], layernorm(layer["mlp_norm"], h))
+        return h, (nk, nv)
+
+    x, (nk, nv) = pscan(body, x, (params["decoder"], cache["k"], cache["v"]))
+    h = layernorm(params["dec_final"], x)
+    logits = unembed(params["embed"], h)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab_size) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    return logits, {"k": nk, "v": nv}

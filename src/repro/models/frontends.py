@@ -1,0 +1,34 @@
+"""Stub modality frontends (per assignment: [audio]/[vlm] entries specify
+the transformer BACKBONE only; the frontend provides precomputed frame /
+patch embeddings).
+
+These generate deterministic synthetic embeddings for smoke tests and the
+matching ShapeDtypeStructs for the dry-run (``launch/dryrun.input_specs``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def audio_frames(key, batch: int, cfg: ArchConfig) -> jnp.ndarray:
+    """Whisper conv-frontend output: (B, encoder_seq, d_model)."""
+    return (
+        jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model)) * 0.02
+    ).astype(jnp.dtype(cfg.dtype))
+
+
+def vision_patches(key, batch: int, cfg: ArchConfig) -> jnp.ndarray:
+    """InternViT patch embeddings projected to d_model: (B, N_vis, d)."""
+    return (
+        jax.random.normal(key, (batch, cfg.num_vision_tokens, cfg.d_model)) * 0.02
+    ).astype(jnp.dtype(cfg.dtype))
+
+
+def text_context(key, batch: int, cfg: ArchConfig) -> jnp.ndarray:
+    """Encoded text prompt for the VDM (umT5 stub): (B, L_ctx, ctx_dim)."""
+    return (
+        jax.random.normal(key, (batch, cfg.context_len, cfg.context_dim)) * 0.02
+    ).astype(jnp.float32)

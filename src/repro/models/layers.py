@@ -1,0 +1,147 @@
+"""Shared building blocks: params as plain pytrees + pure apply functions.
+
+Conventions (used by ``distributed/sharding.py`` to assign PartitionSpecs):
+  * projection kernels are dicts ``{"w": (in, out)}`` named ``q|k|v|o|wi|wg|wo``
+  * embeddings are ``{"emb": (vocab, d)}``
+  * norm scales are ``{"scale": (d,)}``
+  * expert kernels carry a leading expert axis ``(E, in, out)``
+All matmuls accumulate in fp32 (``preferred_element_type``) and cast back.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    """He/variance-scaling truncated-normal initializer (fan-in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = math.sqrt(scale / fan_in)
+    # match flax's truncated normal stddev correction
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std / 0.87962566).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16, scale: float = 1.0):
+    return {"w": truncated_normal_init(key, (in_dim, out_dim), scale, dtype)}
+
+
+def dense(params, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["w"]
+    y = jnp.einsum("...i,io->...o", x, w, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"emb": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["emb"], tokens, axis=0)
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits via the (possibly tied) embedding table."""
+    y = jnp.einsum(
+        "...d,vd->...v", x, params["emb"], preferred_element_type=jnp.float32
+    )
+    return y  # keep fp32 for a stable softmax/loss
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def mlp_init(key, d: int, ff: int, dtype=jnp.bfloat16):
+    """SwiGLU MLP (gate + up + down)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, ff, dtype),
+        "wg": dense_init(k2, d, ff, dtype),
+        "wo": dense_init(k3, ff, d, dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    return dense(params["wo"], h)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------- sinusoidal embeddings
+def sinusoidal_embedding(t: jnp.ndarray, dim: int, max_period: float = 10_000.0):
+    """Diffusion timestep / position embedding.  t: (...,) -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half) / half)
+    args = t.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ----------------------------------------------------- depthwise causal conv
+def causal_conv1d_init(key, channels: int, width: int, dtype=jnp.bfloat16):
+    return {
+        "w": truncated_normal_init(key, (width, channels), 1.0, dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (batch, seq, channels)."""
+    w = params["w"]  # (width, channels)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    windows = jnp.stack(
+        [pad[:, i : i + x.shape[1], :] for i in range(width)], axis=0
+    )  # (width, b, s, c)
+    y = jnp.einsum("wbsc,wc->bsc", windows.astype(jnp.float32), w.astype(jnp.float32))
+    return (y + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv1d_update(params, x_t: jnp.ndarray, conv_state: jnp.ndarray):
+    """Single-token decode update.  x_t: (b, c); state: (b, width-1, c)."""
+    w = params["w"]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (b,width,c)
+    y = jnp.einsum(
+        "bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32)
+    ) + params["b"].astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:, :]

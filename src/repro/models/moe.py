@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded sort dispatch.
+
+Dispatch is sort-based (no (T, E, C) one-hot materialization): token-expert
+pairs are bucketed by expert with a static per-expert capacity C, experts
+run as a batched (E, C, d) matmul, and results scatter back weighted by the
+router probabilities.  Expert tensors carry a leading E axis that
+``distributed/sharding.py`` shards over the tensor-parallel mesh axis
+(expert parallelism); tokens stay sharded over the data axes.
+
+Capacity per expert: C = ceil(T * top_k / E * capacity_factor); overflow
+tokens are dropped (standard Switch behaviour) — the router's auxiliary
+load-balancing loss keeps drops rare in training.
+
+Padded EP: when E doesn't divide the EP axis (granite-moe's 40 experts over
+16 devices), configs pad E up (40 -> 48) and the router never routes to
+padding experts (their logits are -inf via the router kernel's zero init +
+explicit mask).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, truncated_normal_init
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    num_experts: int,
+    dtype=jnp.bfloat16,
+    num_padding_experts: int = 0,
+):
+    E = num_experts + num_padding_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d_model, E, jnp.float32),
+        "wi": {"w": truncated_normal_init(k1, (E, d_model, d_ff), 1.0, dtype)},
+        "wg": {"w": truncated_normal_init(k2, (E, d_model, d_ff), 1.0, dtype)},
+        "wo": {"w": truncated_normal_init(k3, (E, d_ff, d_model), 1.0, dtype)},
+    }
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,                  # (B, S, d)
+    num_experts: int,                # real experts (excl. padding)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_noise: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E_total = params["wi"]["w"].shape[0]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), params["router"]["w"]
+    )
+    if E_total > num_experts:  # padding experts are unroutable
+        pad_mask = jnp.arange(E_total) >= num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    if router_noise is not None:
+        logits = logits + router_noise
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)          # (T, k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- auxiliary load-balancing loss (Switch Transformer eq. 4)
+    me = probs.mean(axis=0)                              # (E,)
+    ce = jnp.zeros(E_total).at[top_e[:, 0]].add(1.0) / T
+    aux = num_experts * jnp.sum(me * ce)
+
+    # --- sort-based dispatch with static capacity
+    C = int(math.ceil(T * top_k / num_experts * capacity_factor))
+    flat_e = top_e.reshape(-1)                           # (T*k,)
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    order = jnp.argsort(flat_e)                          # stable bucket sort
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+    # position of each pair within its expert bucket
+    counts = jnp.zeros(E_total, jnp.int32).at[e_sorted].add(1)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * top_k) - offsets[e_sorted]
+    keep = pos_in_e < C                                  # capacity drop
+    slot = jnp.where(keep, pos_in_e, C)                  # C = overflow slot
+
+    # scatter tokens into (E, C+1, d); the +1 row swallows overflow
+    buf = jnp.zeros((E_total, C + 1, d), x.dtype)
+    buf = buf.at[e_sorted, slot].set(xt[t_sorted])
+    buf = buf[:, :C, :]
+
+    # --- batched expert FFN (E axis shards over the EP mesh axis)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, params["wg"]["w"],
+                   preferred_element_type=jnp.float32)
+    ) * jnp.einsum("ecd,edf->ecf", buf, params["wi"]["w"],
+                   preferred_element_type=jnp.float32)
+    y_e = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), params["wo"]["w"],
+                     preferred_element_type=jnp.float32)  # (E, C, d) fp32
+
+    # --- combine: gather back and weight
+    pad_row = jnp.zeros((E_total, 1, d), y_e.dtype)
+    y_pad = jnp.concatenate([y_e, pad_row], axis=1)      # (E, C+1, d)
+    gathered = y_pad[e_sorted, slot]                     # (T*k, d)
+    weighted = gathered * (w_sorted * keep)[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[t_sorted].add(weighted)
+    return out.reshape(B, S, d).astype(x.dtype), aux

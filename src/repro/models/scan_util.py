@@ -1,0 +1,37 @@
+"""Scan wrapper with a global "cost mode" switch.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, ignoring the trip
+count — so scan-over-layers (and kv-chunk / SSD-chunk / microbatch scans)
+make FLOPs/bytes under-report by orders of magnitude.  For §Roofline,
+``analysis/roofline.py`` re-lowers every cell in *cost mode*: scans fully
+unrolled on polynomially scaled-down (num_layers, seq_len) configs, then
+extrapolates exactly (every term is affine in L and at most quadratic in
+S).  The production lowering keeps rolled loops (small HLO, fast compile,
+true memory_analysis).
+
+All model/step code must call ``pscan`` instead of ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+
+_UNROLL = False
+
+
+def set_unroll(flag: bool) -> None:
+    global _UNROLL
+    _UNROLL = flag
+
+
+def unrolling() -> bool:
+    return _UNROLL or os.environ.get("REPRO_UNROLL_SCANS", "") == "1"
+
+
+def pscan(f, init, xs, length=None, **kw):
+    if unrolling():
+        kw = dict(kw)
+        kw["unroll"] = True
+    return jax.lax.scan(f, init, xs, length=length, **kw)

@@ -1,0 +1,225 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan for training/prefill,
+recurrent state update for decode.
+
+Per head h (P = headdim, N = state size):
+    S_t = exp(A * dt_t) S_{t-1} + dt_t * B_t (x) x_t         (state update)
+    y_t = C_t . S_t + D * x_t                                 (readout)
+
+The chunked (SSD) algorithm splits the sequence into chunks of Q tokens:
+intra-chunk terms use the masked quadratic form, inter-chunk terms carry
+chunk summaries through a scan — O(S Q) work with O(S/Q) sequential steps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from .scan_util import pscan
+
+from .layers import (
+    causal_conv1d,
+    causal_conv1d_init,
+    causal_conv1d_update,
+    dense,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def mamba2_init(key, d_model: int, state: int, headdim: int, expand: int = 2,
+                conv_width: int = 4, groups: int = 1, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    heads = d_inner // headdim
+    k_in, k_conv, k_out, k_dt = jax.random.split(key, 4)
+    # in_proj emits [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (heads)]
+    d_proj = 2 * d_inner + 2 * groups * state + heads
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 reference)
+    u = jax.random.uniform(k_dt, (heads,))
+    dt0 = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "in_proj": dense_init(k_in, d_model, d_proj, dtype),
+        "conv": causal_conv1d_init(k_conv, d_inner + 2 * groups * state, conv_width, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(k_out, d_inner, d_model, dtype),
+    }
+
+
+def gated_linear_scan(x, log_decay, scale, B, C, chunk: int = 64,
+                      factorized: bool = True):
+    """Chunked scan for the gated linear recurrence
+
+        S_t = exp(log_decay_t) S_{t-1} + scale_t * B_t (x) x_t
+        y_t = C_t . S_t
+
+    shared by Mamba2/SSD (log_decay = dt*A, scale = dt) and mLSTM
+    (log_decay = logsigmoid(f), scale = exp(i)).  x: (b,s,h,p),
+    log_decay/scale: (b,s,h), B,C: (b,s,g,n) with g | h.  Returns (b,s,h,p).
+
+    Two intra-chunk formulations (§Perf iteration 1, EXPERIMENTS.md):
+
+    * ``factorized=False`` — the textbook SSD form: materializes the decay
+      tensor exp(cum_i - cum_j) of shape (b, nc, Q, Q, h).  For zamba2
+      (h=80, Q=128) that is terabytes of HBM traffic per layer.
+    * ``factorized=True`` — exp(cum_i - cum_j) = exp(cum_i - c) *
+      exp(c - cum_j) with the per-chunk center c = (max+min)/2, so the
+      (i, j) coupling reduces to the *group*-level C.B Gram matrix
+      (b, nc, Q, Q, g) — h/g times smaller (80x for zamba2's g=1) — and
+      two rank-1 per-token scalings.  Exponent args are clipped at +-60
+      (clipped entries have decay ~e^-60: zero anyway); centering keeps
+      the worst realistic |arg| ~ Q*max|dt*A|/2, which bounds chunk size
+      (64 default: |arg| <= 52 for dt<=0.1, A>=-16).
+
+    Group-level einsums never materialize B/C repeated to h heads
+    (another h/g-fold traffic saving in the summaries/readout).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # reshape to (b, nc, Q, ...); heads split as (g, rep)
+    xq = x.reshape(b, nc, chunk, g, rep, p).astype(jnp.float32)
+    dtq = scale.reshape(b, nc, chunk, g, rep).astype(jnp.float32)
+    Bq = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cq = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    a = log_decay.reshape(b, nc, chunk, g, rep).astype(jnp.float32)
+    cum = jnp.cumsum(a, axis=2)                   # within-chunk cumulative
+    total = cum[:, :, -1]                         # (b,nc,g,rep)
+
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    if factorized:
+        center = 0.5 * (cum.max(axis=2, keepdims=True)
+                        + cum.min(axis=2, keepdims=True))
+        a_i = jnp.exp(jnp.clip(cum - center, -60.0, 60.0))
+        b_j = jnp.exp(jnp.clip(center - cum, -60.0, 60.0))
+        cb = jnp.einsum("bcign,bcjgn->bcijg", Cq, Bq)        # (b,nc,Q,Q,g)
+        cb = jnp.where(Lmask[None, None, :, :, None], cb, 0.0)
+        v = xq * (dtq * b_j)[..., None]                      # (b,nc,Q,g,r,p)
+        y_intra = jnp.einsum("bcijg,bcjgrp->bcigrp", cb, v)
+        y_intra = y_intra * a_i[..., None]
+    else:
+        diff = cum[:, :, :, None] - cum[:, :, None, :]       # (b,nc,i,j,g,r)
+        decay = jnp.where(Lmask[None, None, :, :, None, None],
+                          jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bcign,bcjgn->bcijg", Cq, Bq)
+        dx = dtq[..., None] * xq
+        y_intra = jnp.einsum("bcijgr,bcijg,bcjgrp->bcigrp", decay, cb, dx)
+
+    # --- chunk summaries: S_c = sum_j exp(total - cum_j) dt_j B_j (x) x_j
+    w = jnp.exp(total[:, :, None] - cum)           # (b,nc,Q,g,rep)
+    state_c = jnp.einsum("bcjgn,bcjgr,bcjgrp->bcgrnp", Bq, w * dtq, xq)
+
+    # --- inter-chunk recurrence: S_c_in = exp(total_{c-1}) S_{c-1}_in + ...
+    def scan_fn(S_prev, inp):
+        tot_c, Sc = inp
+        S_in = S_prev  # state *entering* this chunk
+        S_out = jnp.exp(tot_c)[..., None, None] * S_prev + Sc
+        return S_out, S_in
+
+    S0 = jnp.zeros((b, g, rep, n, p), jnp.float32)
+    _, S_in = pscan(
+        scan_fn,
+        S0,
+        (total.transpose(1, 0, 2, 3), state_c.transpose(1, 0, 2, 3, 4, 5)),
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4, 5)        # (b,nc,g,rep,n,p)
+
+    # --- inter-chunk readout: y[i] += C_i . (exp(cum_i) S_in)
+    y_inter = jnp.einsum("bcign,bcgrnp->bcigrp", Cq, S_in)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
+    return y[:, :s]
+
+
+def mamba2_apply(params, x: jnp.ndarray, cfg, chunk: int = 64) -> jnp.ndarray:
+    """Full-sequence forward.  x: (B, S, d_model).
+
+    REPRO_SSD_NAIVE=1 selects the pre-optimization textbook SSD path
+    (chunk 128, materialized per-head decay) — kept for §Perf A/B
+    measurement and as a numerical cross-check."""
+    import os
+
+    naive = os.environ.get("REPRO_SSD_NAIVE", "") == "1"
+    if naive:
+        chunk = 128
+    b, s, _ = x.shape
+    heads = params["A_log"].shape[0]
+    p = cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    d_inner = heads * p
+    proj = dense(params["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * g * n], axis=-1
+    )
+    xbc = jax.nn.silu(causal_conv1d(params["conv"], xbc))
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )  # (b,s,h)
+    A = -jnp.exp(params["A_log"])
+    y = gated_linear_scan(
+        xin.reshape(b, s, heads, p),
+        dt * A[None, None, :],
+        dt,
+        B.reshape(b, s, g, n),
+        C.reshape(b, s, g, n),
+        chunk=chunk,
+        factorized=not naive,
+    )
+    y = y + params["D"][None, None, :, None] * xin.reshape(b, s, heads, p).astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y)
+
+
+def mamba2_init_cache(batch: int, cfg, dtype=jnp.float32):
+    heads = cfg.ssm_expand * cfg.d_model // cfg.ssm_headdim
+    conv_ch = cfg.ssm_expand * cfg.d_model + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_headdim), dtype),
+    }
+
+
+def mamba2_decode(params, x_t: jnp.ndarray, cache: dict, cfg):
+    """Single-token recurrent update.  x_t: (B, 1, d_model)."""
+    b = x_t.shape[0]
+    heads = params["A_log"].shape[0]
+    p, g, n = cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    d_inner = heads * p
+    proj = dense(params["in_proj"], x_t)[:, 0]       # (b, d_proj)
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * g * n], axis=-1
+    )
+    xbc, conv_state = causal_conv1d_update(params["conv"], xbc, cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    A = -jnp.exp(params["A_log"])
+    xin_h = xin.reshape(b, heads, p).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, g, n), heads // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(b, g, n), heads // g, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                  # (b,h)
+    S = cache["ssm"] * decay[..., None, None] + (
+        dt[..., None, None] * Bh[..., :, None] * xin_h[..., None, :]
+    )  # (b,h,n,p)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, S) + params["D"][None, :, None] * xin_h
+    y = y.reshape(b, 1, d_inner).astype(x_t.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z)[:, None, :])
+    out = dense(params["out_proj"], y)
+    return out, {"conv": conv_state, "ssm": S}

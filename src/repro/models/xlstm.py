@@ -1,0 +1,233 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) + sLSTM (scalar
+memory, recurrent).
+
+mLSTM is a gated linear recurrence
+
+    C_t = f_t C_{t-1} + i_t k_t (x) v_t          (matrix memory, n x p)
+    n_t = f_t n_{t-1} + i_t k_t                  (normalizer state)
+    y_t = (q_t . C_t) / max(|q_t . n_t|, 1)
+
+so the prefill/train path reuses ``ssm.gated_linear_scan`` with
+``log_decay = logsigmoid(f~)`` and ``scale = exp(i~)`` (exponential input
+gating, fp32).  The single-token decode path keeps the paper's max-state
+stabilizer.  sLSTM has data-dependent *recurrent* connections (h_{t-1}
+feeds the gates), which genuinely cannot be parallelized over time — it
+runs as a lax.scan, matching the xLSTM paper's own characterization.
+
+Ratio: every ``slstm_every``-th block is sLSTM, the rest mLSTM (7:1 in
+xLSTM-1.3b, per arXiv:2405.04517).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from .scan_util import pscan
+
+from .layers import (
+    causal_conv1d,
+    causal_conv1d_init,
+    dense,
+    dense_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from .ssm import gated_linear_scan
+
+PF_MLSTM = 2  # up-projection factor
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_init(key, d_model: int, num_heads: int, dtype=jnp.bfloat16):
+    di = PF_MLSTM * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d_model),
+        "up": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv": causal_conv1d_init(ks[1], di, 4, dtype),
+        "q": dense_init(ks[2], di, di, dtype),
+        "k": dense_init(ks[3], di, di, dtype),
+        "gates": dense_init(ks[4], di, 2 * num_heads, jnp.float32),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros(num_heads), jnp.linspace(3.0, 6.0, num_heads)]
+        ).astype(jnp.float32),
+        "cell_norm": rmsnorm_init(di),
+        "down": dense_init(ks[5], di, d_model, dtype),
+    }
+
+
+def mlstm_apply(params, x: jnp.ndarray, num_heads: int, chunk: int = 128):
+    """x: (B, S, d).  Chunk-parallel mLSTM block forward."""
+    b, s, _ = x.shape
+    h = num_heads
+    res = x
+    xn = rmsnorm(params["norm"], x)
+    a, g = jnp.split(dense(params["up"], xn), 2, axis=-1)     # (b,s,di) each
+    di = a.shape[-1]
+    dh = di // h
+    ac = jax.nn.silu(causal_conv1d(params["conv"], a))
+    q = dense(params["q"], ac).reshape(b, s, h, dh)
+    k = dense(params["k"], ac).reshape(b, s, h, dh) / jnp.sqrt(float(dh))
+    v = a.reshape(b, s, h, dh)                                 # value from a
+    gates = dense(params["gates"], ac.astype(jnp.float32)) + params["gate_bias"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)                # (b,s,h)
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_scale = jnp.exp(jnp.clip(i_raw.astype(jnp.float32), -10.0, 10.0))
+    # matrix memory: y = q . C  with C_t = f C + i k (x) v
+    y = gated_linear_scan(v, log_f, i_scale, k, q, chunk=chunk)   # (b,s,h,dh)
+    # normalizer: n_t = f n + i k ; denom = max(|q.n|, 1)
+    ones = jnp.ones((b, s, h, 1), v.dtype)
+    qn = gated_linear_scan(ones, log_f, i_scale, k, q, chunk=chunk)[..., 0]
+    y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(params["cell_norm"], y) * jax.nn.silu(g)
+    return res + dense(params["down"], y)
+
+
+def mlstm_init_cache(batch: int, d_model: int, num_heads: int, dtype=jnp.float32):
+    di = PF_MLSTM * d_model
+    dh = di // num_heads
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, num_heads, dh, dh), dtype),
+        "n": jnp.zeros((batch, num_heads, dh), dtype),
+        "m": jnp.full((batch, num_heads), -1e30, dtype),
+    }
+
+
+def mlstm_decode(params, x_t: jnp.ndarray, cache: dict, num_heads: int):
+    """Single-token mLSTM with max-state stabilization (xLSTM eq. 15)."""
+    from .layers import causal_conv1d_update
+
+    b = x_t.shape[0]
+    h = num_heads
+    res = x_t
+    xn = rmsnorm(params["norm"], x_t)
+    a, g = jnp.split(dense(params["up"], xn)[:, 0], 2, axis=-1)  # (b, di)
+    di = a.shape[-1]
+    dh = di // h
+    ac, conv_state = causal_conv1d_update(params["conv"], a, cache["conv"])
+    ac = jax.nn.silu(ac)
+    q = dense(params["q"], ac[:, None])[:, 0].reshape(b, h, dh)
+    k = dense(params["k"], ac[:, None])[:, 0].reshape(b, h, dh) / jnp.sqrt(float(dh))
+    v = a.reshape(b, h, dh)
+    gates = dense(params["gates"], ac[:, None].astype(jnp.float32))[:, 0] + params["gate_bias"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)                  # (b,h)
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + cache["m"], i_raw)
+    f_eff = jnp.exp(log_f + cache["m"] - m_new)
+    i_eff = jnp.exp(i_raw - m_new)
+    C = cache["C"] * f_eff[..., None, None] + i_eff[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = cache["n"] * f_eff[..., None] + i_eff[..., None] * k
+    num = jnp.einsum("bhd,bhdp->bhp", q.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, di).astype(x_t.dtype)
+    y = rmsnorm(params["cell_norm"], y) * jax.nn.silu(g)[:, None]
+    out = res + dense(params["down"], y)
+    return out, {"conv": conv_state, "C": C, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_init(key, d_model: int, num_heads: int, dtype=jnp.bfloat16):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 4)
+    rec = (
+        jax.random.normal(ks[1], (4, num_heads, dh, dh)) / jnp.sqrt(float(dh))
+    ).astype(jnp.float32)
+    ff = -(-int(d_model * 4 / 3) // 128) * 128  # shard-friendly
+    return {
+        "norm": rmsnorm_init(d_model),
+        "wx": dense_init(ks[0], d_model, 4 * d_model, dtype),  # z i f o
+        "rec": rec,
+        "group_norm": layernorm_init(d_model),
+        "ffn": {
+            "wi": dense_init(ks[2], d_model, ff, dtype),
+            "wg": dense_init(ks[2], d_model, ff, dtype),
+            "wo": dense_init(ks[3], ff, d_model, dtype),
+        },
+        "ffn_norm": rmsnorm_init(d_model),
+    }
+
+
+def _slstm_cell(params, xz, xi, xf, xo, state, num_heads):
+    """One recurrent step.  x*: (b, h, dh); state: (c, n, m, h_prev)."""
+    c, n, m, h_prev = state
+    rec = params["rec"]  # (4, h, dh, dh)
+    rz = jnp.einsum("bhd,hde->bhe", h_prev, rec[0])
+    ri = jnp.einsum("bhd,hde->bhe", h_prev, rec[1]).mean(-1)
+    rf = jnp.einsum("bhd,hde->bhe", h_prev, rec[2]).mean(-1)
+    ro = jnp.einsum("bhd,hde->bhe", h_prev, rec[3])
+    z = jnp.tanh(xz + rz)
+    i_raw = xi.mean(-1) + ri                     # (b, h) scalar-per-head gates
+    f_raw = xf.mean(-1) + rf
+    o = jax.nn.sigmoid(xo + ro)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    f_eff = jnp.exp(log_f + m - m_new)[..., None]
+    i_eff = jnp.exp(i_raw - m_new)[..., None]
+    c_new = f_eff * c + i_eff * z
+    n_new = f_eff * n + i_eff
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(params, x: jnp.ndarray, num_heads: int):
+    """x: (B, S, d) — sequential scan over time (inherently recurrent)."""
+    b, s, d = x.shape
+    h = num_heads
+    dh = d // h
+    res = x
+    xn = rmsnorm(params["norm"], x)
+    gates_x = dense(params["wx"], xn).astype(jnp.float32)      # (b,s,4d)
+    xz, xi, xf, xo = jnp.split(gates_x, 4, axis=-1)
+    shaped = [t.reshape(b, s, h, dh).transpose(1, 0, 2, 3) for t in (xz, xi, xf, xo)]
+    state0 = tuple(
+        jnp.zeros((b, h, dh), jnp.float32) if k != 2 else jnp.full((b, h), -1e30)
+        for k in range(4)
+    )
+    state0 = (state0[0], state0[1], jnp.full((b, h), -1e30), state0[3])
+
+    def step(state, xs):
+        new = _slstm_cell(params, xs[0], xs[1], xs[2], xs[3], state, num_heads)
+        return new, new[3]
+
+    _, hs = pscan(step, state0, tuple(shaped))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = layernorm(params["group_norm"], y)
+    x1 = res + y
+    # gated FFN (PF 4/3)
+    f = params["ffn"]
+    xf2 = rmsnorm(params["ffn_norm"], x1)
+    hmid = jax.nn.silu(dense(f["wg"], xf2)) * dense(f["wi"], xf2)
+    return x1 + dense(f["wo"], hmid)
+
+
+def slstm_init_cache(batch: int, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {
+        "c": z, "n": z, "m": jnp.full((batch, num_heads), -1e30), "h": z,
+    }
+
+
+def slstm_decode(params, x_t: jnp.ndarray, cache: dict, num_heads: int):
+    b, _, d = x_t.shape
+    h, dh = num_heads, d // num_heads
+    res = x_t
+    xn = rmsnorm(params["norm"], x_t)
+    gates_x = dense(params["wx"], xn)[:, 0].astype(jnp.float32)
+    xz, xi, xf, xo = [t.reshape(b, h, dh) for t in jnp.split(gates_x, 4, -1)]
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, hnew = _slstm_cell(params, xz, xi, xf, xo, state, num_heads)
+    y = hnew.reshape(b, 1, d).astype(x_t.dtype)
+    y = layernorm(params["group_norm"], y)
+    x1 = res + y
+    f = params["ffn"]
+    xf2 = rmsnorm(params["ffn_norm"], x1)
+    hmid = jax.nn.silu(dense(f["wg"], xf2)) * dense(f["wi"], xf2)
+    out = x1 + dense(f["wo"], hmid)
+    return out, {"c": c, "n": n, "m": m, "h": hnew}

@@ -1,0 +1,19 @@
+"""Optimizers (pure JAX): AdamW, Adafactor, LR schedules.
+
+Optimizer states mirror the param tree structure, so the parameter
+PartitionSpecs apply verbatim to the states (ZeRO: states live wherever
+their params live).  Adafactor exists because Adam's fp32 (m, v) for a
+405B model is ~3.2 TB — factored second moments make the 126-layer config
+fit a 256-chip pod (DESIGN.md §4).
+"""
+from .adamw import adamw_init, adamw_update  # noqa: F401
+from .adafactor import adafactor_init, adafactor_update  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401
+
+
+def get_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

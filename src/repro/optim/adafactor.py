@@ -1,0 +1,77 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no momentum.
+
+State for an (a, b) matrix is an (a,) row accumulator + (b,) column
+accumulator instead of (a, b) — the reason llama3-405b training fits a
+single v5e pod.  Leading stacked-layer axes are treated as batch dims
+(factoring applies to the trailing two dims).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "acc": jax.tree.map(init, params, is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads, state, params, lr,
+    decay_exp: float = 0.8, eps1: float = 1e-30, eps2: float = 1e-3,
+    clip_threshold: float = 1.0, weight_decay: float = 0.0,
+    max_grad_norm: float = 1.0,
+):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    gclip = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-decay_exp)
+
+    def upd(p, g, acc):
+        g = g.astype(jnp.float32) * gclip
+        g2 = jnp.square(g) + eps1
+        if _factored(p):
+            vr = beta2 * acc["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * acc["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            rfac = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps1))
+            u = g * jax.lax.rsqrt(rfac)[..., None] * jax.lax.rsqrt(
+                jnp.maximum(vc, eps1)
+            )[..., None, :]
+            new_acc = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * acc["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps1))
+            new_acc = {"v": v}
+        # update clipping by RMS (adafactor's d=1 rule)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        scale = jnp.maximum(
+            jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), eps2
+        )
+        newp = p.astype(jnp.float32) - lr * scale * u
+        if weight_decay and p.ndim >= 2:
+            newp = newp - lr * weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), new_acc
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    accs = treedef.flatten_up_to(state["acc"])
+    out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, accs)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_acc = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"acc": new_acc, "step": step}, gnorm

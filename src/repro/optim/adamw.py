@@ -1,0 +1,47 @@
+"""AdamW with decoupled weight decay; fp32 moments, bf16-safe updates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, state, params, lr,
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+):
+    """Returns (new_params, new_state, grad_norm)."""
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        newp = p.astype(jnp.float32) - lr * (u + decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,42 @@
+"""Elastic scaling: restore a checkpoint onto a different device count /
+mesh shape.
+
+Checkpoints store *logical* (unsharded) arrays + tree structure, so
+re-sharding is a placement decision, not a data transformation: we rebuild
+PartitionSpecs for the new mesh and device_put each leaf.  Works for both
+scale-down (16 -> 8 devices) and scale-up.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.distributed.sharding import param_specs
+from .checkpoint import restore
+
+
+def reshard_tree(tree: Any, mesh: Mesh, parallel: ParallelConfig) -> Any:
+    """Place a host tree onto ``mesh`` under the standard sharding rules."""
+    specs = param_specs(tree, parallel)
+    return jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        tree,
+        specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P),
+    )
+
+
+def restore_elastic(
+    ckpt_dir: str,
+    tree_like: Any,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+    step: Optional[int] = None,
+):
+    """Restore + re-shard in one move; returns (tree_on_mesh, meta)."""
+    tree, meta = restore(ckpt_dir, tree_like, step=step)
+    return reshard_tree(tree, mesh, parallel), meta

@@ -1,0 +1,87 @@
+"""Straggler mitigation for LP serving: adaptive partition sizing.
+
+LP's unit of work is *patches*, so a slow device (thermal throttling, a
+noisy neighbour, a degraded ICI link) can be compensated by shrinking its
+core region and growing everyone else's — the blend machinery is already
+built for unequal partitions.  We keep an EMA of per-group step times and
+re-plan core sizes proportional to measured speed, re-planning only when
+the imbalance exceeds a threshold (re-planning forces an XLA recompile for
+the uniform-window engine, so it is rate-limited).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.partition import PartitionPlan, _finalize
+
+
+@dataclasses.dataclass
+class StragglerState:
+    num_partitions: int
+    ema_alpha: float = 0.3
+    rebalance_threshold: float = 0.15   # re-plan when >15% imbalance
+    _ema: Optional[np.ndarray] = None
+
+    def observe(self, step_times: Sequence[float]) -> None:
+        t = np.asarray(step_times, dtype=np.float64)
+        if self._ema is None:
+            self._ema = t
+        else:
+            self._ema = self.ema_alpha * t + (1 - self.ema_alpha) * self._ema
+
+    @property
+    def speeds(self) -> np.ndarray:
+        """Relative speed per group (1/time), normalized to mean 1."""
+        if self._ema is None:
+            return np.ones(self.num_partitions)
+        s = 1.0 / np.maximum(self._ema, 1e-9)
+        return s / s.mean()
+
+    def needs_rebalance(self) -> bool:
+        s = self.speeds
+        return bool((s.max() - s.min()) / s.max() > self.rebalance_threshold)
+
+
+def plan_weighted_partition(
+    extent: int,
+    patch: int,
+    overlap_ratio: float,
+    speeds: Sequence[float],
+    dim: int = 0,
+) -> PartitionPlan:
+    """Patch-aligned partition with core sizes proportional to speed.
+
+    Largest-remainder apportionment of N patches over K groups; every
+    group keeps >= 1 patch.  Overlap O scales with the *average* core size
+    (same r semantics as the uniform plan)."""
+    K = len(speeds)
+    N = extent // patch
+    if N < K:
+        raise ValueError(f"N={N} patches < K={K} groups")
+    s = np.clip(np.asarray(speeds, dtype=np.float64), 1e-3, None)
+    quota = s / s.sum() * N
+    base = np.maximum(np.floor(quota).astype(int), 1)
+    # fix rounding to sum exactly N (largest remainders first)
+    while base.sum() > N:
+        base[np.argmax(base)] -= 1
+    rem = quota - np.floor(quota)
+    order = np.argsort(-rem)
+    i = 0
+    while base.sum() < N:
+        base[order[i % K]] += 1
+        i += 1
+    L_avg = max(int(math.ceil(N / K)), 1)
+    O = math.floor(L_avg * overlap_ratio)
+    core_start, core_end = [], []
+    pos = 0
+    for k in range(K):
+        core_start.append(pos)
+        core_end.append(pos + int(base[k]))
+        pos += int(base[k])
+    assert pos == N
+    return _finalize(dim, extent, patch, K, overlap_ratio, L_avg, O,
+                     core_start, core_end)

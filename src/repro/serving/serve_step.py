@@ -1,0 +1,42 @@
+"""Serve-step factories: prefill (full-sequence forward -> last-token
+logits) and decode (one token against the KV/state cache).
+
+These are exactly what ``launch/dryrun.py`` lowers for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import logits_fn
+
+
+def make_prefill_step(model, cfg: ArchConfig) -> Callable:
+    def prefill(params, batch):
+        hidden, _ = model.forward(params, batch)
+        if cfg.family == "audio":
+            table = {"embed": params["embed"]}
+            from repro.models.layers import unembed
+
+            return unembed(table["embed"], hidden[:, -1:, :])
+        return logits_fn(params, hidden[:, -1:, :], cfg)
+
+    return prefill
+
+
+def make_decode_step(model, cfg: ArchConfig) -> Callable:
+    if cfg.family == "audio":
+        def decode(params, batch, cache):
+            return model.decode(
+                params, batch["token"], cache, batch["position"],
+                batch["enc_states"],
+            )
+        return decode
+
+    def decode(params, batch, cache):
+        return model.decode(params, batch["token"], cache, batch["position"])
+
+    return decode

@@ -1,0 +1,120 @@
+"""Validate the analytic communication model against paper Table 1."""
+import pytest
+
+from repro.core.comm_model import (
+    comm_hp_xdit,
+    comm_hybrid,
+    comm_lp_hub,
+    comm_lp_measured,
+    comm_lp_spmd,
+    comm_nmp,
+    comm_pp,
+    comm_tp,
+    gamma_factor,
+    reduction_vs_nmp,
+    wan21_comm_config,
+)
+
+MB = 1024 * 1024
+
+# Paper Table 1 totals (MB): (frames, method) -> value
+PAPER = {
+    (49, "nmp"): 57950.17,
+    (49, "pp"): 57590.16,
+    (49, "hp"): 4758.08,
+    (49, "lp_1.0"): 1811.88,
+    (49, "lp_0.5"): 1354.34,
+    (81, "nmp"): 93050.17,
+    (81, "pp"): 92690.16,
+    (81, "hp"): 7686.12,
+    (81, "lp_1.0"): 2912.81,
+    (81, "lp_0.5"): 2191.29,
+}
+
+
+@pytest.mark.parametrize("frames", [49, 81])
+def test_nmp_magnitude(frames):
+    """Model within 35% of paper (paper ships extra per-hop context: text
+    embeddings, timestep embeddings, residual skips)."""
+    cfg = wan21_comm_config(frames)
+    ours = comm_nmp(cfg, 4) / MB
+    assert ours == pytest.approx(PAPER[(frames, "nmp")], rel=0.35)
+    assert comm_pp(cfg, 4) == comm_nmp(cfg, 4)  # Eq. 23
+
+
+@pytest.mark.parametrize("frames", [49, 81])
+def test_hp_calibrated_model(frames):
+    cfg = wan21_comm_config(frames)
+    ours = comm_hp_xdit(cfg, 4) / MB
+    assert ours == pytest.approx(PAPER[(frames, "hp")], rel=0.005)
+
+
+@pytest.mark.parametrize("frames,r", [(49, 1.0), (49, 0.5), (81, 1.0), (81, 0.5)])
+def test_lp_measured_matches_table1(frames, r):
+    cfg = wan21_comm_config(frames)
+    ours = comm_lp_measured(cfg, 4, r) / MB
+    assert ours == pytest.approx(PAPER[(frames, f"lp_{r}")], rel=0.15)
+
+
+@pytest.mark.parametrize("frames", [49, 81])
+def test_headline_97pct_reduction(frames):
+    """Paper abstract: LP reduces comm by up to 97% over baselines."""
+    cfg = wan21_comm_config(frames)
+    red = 1.0 - comm_lp_measured(cfg, 4, 0.5) / comm_nmp(cfg, 4)
+    assert red > 0.95
+    # and ~72% vs HP (paper §5.2): our calibrated HP gives the same story
+    red_hp = 1.0 - comm_lp_measured(cfg, 4, 0.5) / comm_hp_xdit(cfg, 4)
+    assert 0.5 < red_hp < 0.85
+
+
+def test_lp_eq26_theory_is_4x_sum():
+    """Eq. 27: C_LP = 4 T sum_{k>=2} S_sub (scatter+gather, x2 CFG)."""
+    cfg = wan21_comm_config(49)
+    assert comm_lp_hub(cfg, 4, 1.0) == pytest.approx(
+        2.0 * comm_lp_hub(cfg, 4, 1.0, scatter_gather_factor=1), rel=1e-9
+    )
+
+
+def test_spmd_variant_beats_hub_at_scale():
+    """All-reduce reconstruction has no master hot-spot and scales O(S_z)."""
+    cfg = wan21_comm_config(81)
+    for K in (4, 8, 16):
+        spmd = comm_lp_spmd(cfg, K, 1.0)
+        nmp = comm_nmp(cfg, K)
+        assert spmd < 0.06 * nmp
+
+
+def test_gamma_bounds():
+    """gamma >= 1, grows with r (Eq. 19 discussion)."""
+    cfg = wan21_comm_config(49)
+    g0 = gamma_factor(cfg, 4, 0.0)
+    g5 = gamma_factor(cfg, 4, 0.5)
+    g10 = gamma_factor(cfg, 4, 1.0)
+    assert 1.0 <= g0 + 1e-6 and g0 <= g5 <= g10
+    assert g10 <= 4.0  # gamma/K bounded by 1 (paper §7.4)
+
+
+def test_critical_ratio_sz_over_sh():
+    """Paper §7.4: S_z / S_H ~ 5% for WAN2.1."""
+    cfg = wan21_comm_config(81)
+    ratio = cfg.latent_bytes / cfg.activation_bytes
+    assert 0.02 < ratio < 0.08
+
+
+def test_hybrid_beats_pure_nmp():
+    """Eq. 54: hybrid <= (K-M)/(K-1) of NMP."""
+    cfg = wan21_comm_config(81)
+    K, M = 16, 4
+    hyb = comm_hybrid(cfg, K, M, 0.5, intra="nmp")
+    nmp = comm_nmp(cfg, K)
+    assert hyb / nmp < (K - M) / (K - 1) + 0.35  # + LP inter-group term
+
+
+def test_duration_scaling_fig9():
+    """Fig. 9: LP overhead grows ~4 GB from 3 s to 10 s while HP grows ~10 GB."""
+    c3 = wan21_comm_config(49)
+    c10 = wan21_comm_config(161)
+    lp_growth = (comm_lp_measured(c10, 4, 1.0) - comm_lp_measured(c3, 4, 1.0)) / MB
+    hp_growth = (comm_hp_xdit(c10, 4) - comm_hp_xdit(c3, 4)) / MB
+    assert lp_growth < hp_growth
+    assert lp_growth < 6000  # paper: "increases by only 4GB"

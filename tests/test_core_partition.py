@@ -1,0 +1,311 @@
+"""Unit + property tests for LP partitioning, weights, reconstruction."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    blend_weight_1d,
+    extract,
+    global_normalizer,
+    partition_weights,
+    plan_partition,
+    plan_partition_balanced,
+    plan_uniform,
+    reconstruct,
+    rotation_dim,
+    rotation_schedule,
+    usable_dims,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- schedule
+def test_rotation_matches_eq3():
+    # d_i = M[(i-1) mod 3 + 1]: i=1 -> temporal(0), i=2 -> height(1), ...
+    assert rotation_schedule(7) == (0, 1, 2, 0, 1, 2, 0)
+
+
+def test_rotation_consecutive_steps_differ():
+    sched = rotation_schedule(60)
+    for a, b in zip(sched, sched[1:]):
+        assert a != b
+
+
+def test_rotation_restricted_dims():
+    sched = rotation_schedule(5, dims=(1, 2))
+    assert sched == (1, 2, 1, 2, 1)
+
+
+def test_usable_dims_drops_short_extents():
+    # 13 frames, 60x104 spatial, patch (1,2,2), K=16: temporal has 13 < 16.
+    assert usable_dims((13, 60, 104), (1, 2, 2), 16) == (1, 2)
+    assert usable_dims((13, 60, 104), (1, 2, 2), 4) == (0, 1, 2)
+
+
+# ---------------------------------------------------------------- partition
+def test_paper_partition_matches_eqs_7_to_9():
+    # N=13 patches, K=4, r=1.0 -> L=4, O=4 (the 49-frame temporal case).
+    plan = plan_partition(extent=13, patch=1, num_partitions=4, overlap_ratio=1.0)
+    assert plan.core_patches == 4 and plan.overlap_patches == 4
+    assert plan.core_start == (0, 4, 8, 12)
+    assert plan.core_end == (4, 8, 12, 13)  # beta clamped to N
+    assert plan.ext_start == (0, 0, 4, 8)
+    assert plan.ext_end == (8, 12, 13, 13)
+    assert plan.lat_start == (0, 0, 4, 8)
+    assert plan.lat_end == (8, 12, 13, 13)
+
+
+def test_partition_latent_mapping_scales_by_patch():
+    plan = plan_partition(extent=60, patch=2, num_partitions=4, overlap_ratio=0.5)
+    # N=30, L=8, O=4
+    assert plan.num_patches == 30 and plan.core_patches == 8
+    assert plan.overlap_patches == 4
+    for s, a in zip(plan.lat_start, plan.ext_start):
+        assert s == a * 2
+
+
+def test_partition_absorbs_remainder():
+    # extent 61 with patch 2 -> N=30 patches, one latent unit remainder.
+    plan = plan_partition(extent=61, patch=2, num_partitions=4, overlap_ratio=0.5)
+    assert plan.lat_end[-1] == 61
+    plan.validate()
+
+
+def test_balanced_partition_no_empty_cores():
+    # N=21, K=16: the paper formula (L=2) would leave 5 empty partitions.
+    plan = plan_partition_balanced(21, 1, 16, 0.5)
+    sizes = [b - a for a, b in zip(plan.core_start, plan.core_end)]
+    assert min(sizes) >= 1 and sum(sizes) == 21
+    paper = plan_partition(21, 1, 16, 0.5)
+    paper_sizes = [b - a for a, b in zip(paper.core_start, paper.core_end)]
+    assert min(paper_sizes) == 0  # documents why balanced exists
+
+
+@given(
+    n_patches=st.integers(2, 120),
+    patch=st.integers(1, 4),
+    K=st.integers(1, 8),
+    r=st.floats(0.0, 2.0),
+)
+@settings(max_examples=150, deadline=None)
+def test_partition_properties(n_patches, patch, K, r):
+    r = min(r, K - 1.0)
+    extent = n_patches * patch
+    plan = plan_partition(extent, patch, K, r)
+    plan.validate()  # cover + nesting invariants
+    # patch alignment: every boundary except the absorbed tail is a multiple
+    for s in plan.lat_start:
+        assert s % patch == 0
+    # cores tile the patch range exactly (with clamping)
+    covered = np.zeros(n_patches, dtype=int)
+    for a, b in zip(plan.core_start, plan.core_end):
+        covered[a:b] += 1
+    assert (covered == 1).all()
+
+
+@given(
+    n_patches=st.integers(2, 120),
+    patch=st.integers(1, 4),
+    K=st.integers(1, 8),
+    r=st.floats(0.0, 2.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_balanced_partition_properties(n_patches, patch, K, r):
+    if n_patches < K:
+        return
+    r = min(r, K - 1.0)
+    extent = n_patches * patch
+    plan = plan_partition_balanced(extent, patch, K, r)
+    plan.validate()
+    covered = np.zeros(n_patches, dtype=int)
+    for a, b in zip(plan.core_start, plan.core_end):
+        assert b > a  # non-empty
+        covered[a:b] += 1
+    assert (covered == 1).all()
+
+
+# ---------------------------------------------------------------- weights
+def test_blend_weight_shapes_eq12():
+    w = blend_weight_1d(10, 3, 2)
+    np.testing.assert_allclose(w[:3], [0, 1 / 3, 2 / 3])
+    np.testing.assert_allclose(w[3:8], 1.0)
+    np.testing.assert_allclose(w[8:], [2 / 2, 1 / 2])
+
+
+def test_blend_weight_no_overlap_is_ones():
+    np.testing.assert_array_equal(blend_weight_1d(7, 0, 0), np.ones(7))
+
+
+def test_normalizer_positive_and_core_exact():
+    plan = plan_partition(26, 2, 4, 1.0)
+    z = global_normalizer(plan)
+    assert (z > 0).all()
+    # where only one partition covers (e.g. x=0 region), Z == 1
+    assert z[0] == pytest.approx(1.0)
+
+
+@given(
+    n_patches=st.integers(4, 80),
+    K=st.integers(1, 6),
+    r=st.floats(0.0, 1.5),
+)
+@settings(max_examples=100, deadline=None)
+def test_normalizer_positive_property(n_patches, K, r):
+    r = min(r, max(0.0, K - 1.0))
+    plan = plan_partition(n_patches, 1, K, r)
+    assert (global_normalizer(plan) > 0).all()
+
+
+# ------------------------------------------------------------ reconstruct
+def test_reconstruct_identity():
+    """If every partition predicts the truth restricted to its slice, the
+    reconstruction is the truth: F is a partition of unity after norm."""
+    rng = np.random.default_rng(0)
+    truth = jnp.asarray(rng.normal(size=(13, 6, 8, 4)).astype(np.float32))
+    for r in (0.0, 0.5, 1.0):
+        plan = plan_partition(13, 1, 4, r)
+        preds = [extract(truth, plan, k, axis=0) for k in range(4)]
+        out = reconstruct(preds, plan, axis=0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(truth), atol=1e-6)
+
+
+def test_reconstruct_k1_is_identity():
+    rng = np.random.default_rng(1)
+    truth = jnp.asarray(rng.normal(size=(10, 3)).astype(np.float32))
+    plan = plan_partition(10, 1, 1, 0.0)
+    out = reconstruct([truth], plan, axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth), atol=1e-7)
+
+
+def test_reconstruct_blends_disagreement_smoothly():
+    """Two partitions predicting constants a and b must blend monotonically
+    from a to b across the overlap — no seams (boundary-artifact check)."""
+    plan = plan_partition(16, 1, 2, 0.5)  # L=8, O=4
+    a = jnp.zeros((plan.sizes[0],), dtype=jnp.float32)
+    b = jnp.ones((plan.sizes[1],), dtype=jnp.float32)
+    out = np.asarray(reconstruct([a, b], plan, axis=0))
+    assert (np.diff(out) >= -1e-6).all()  # monotone non-decreasing
+    assert out[0] == 0.0 and out[-1] == 1.0
+
+
+@given(
+    n_patches=st.integers(4, 40),
+    patch=st.integers(1, 3),
+    K=st.integers(1, 5),
+    r=st.floats(0.0, 1.5),
+    channels=st.integers(1, 3),
+)
+@settings(max_examples=60, deadline=None)
+def test_reconstruct_identity_property(n_patches, patch, K, r, channels):
+    r = min(r, max(0.0, K - 1.0))
+    extent = n_patches * patch
+    rng = np.random.default_rng(n_patches * 31 + K)
+    truth = jnp.asarray(
+        rng.normal(size=(extent, channels)).astype(np.float32)
+    )
+    plan = plan_partition(extent, patch, K, r)
+    preds = [extract(truth, plan, k, axis=0) for k in range(K)]
+    out = reconstruct(preds, plan, axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth), atol=1e-5)
+
+
+# ---------------------------------------------------------------- uniform
+def test_uniform_plan_shapes_equal():
+    plan = plan_uniform(extent=26, patch=2, num_partitions=4, overlap_ratio=1.0)
+    assert len(set([plan.window])) == 1
+    plan.validate()
+    assert (plan.normalizer() > 0).all()
+
+
+def test_uniform_reconstruct_identity():
+    from repro.core import lp_forward_uniform
+
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.normal(size=(24, 5)).astype(np.float32))
+    plan = plan_uniform(24, 2, 4, 0.5)
+    out = lp_forward_uniform(lambda x: x, z, plan, axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z), atol=1e-5)
+
+
+@given(
+    n_patches=st.integers(4, 60),
+    patch=st.integers(1, 3),
+    K=st.integers(2, 6),
+    r=st.floats(0.0, 1.5),
+)
+@settings(max_examples=60, deadline=None)
+def test_uniform_plan_properties(n_patches, patch, K, r):
+    if n_patches < K:
+        return
+    r = min(r, K - 1.0)
+    plan = plan_uniform(n_patches * patch, patch, K, r)
+    plan.validate()
+    assert (plan.normalizer() > 0).all()
+    # windows are patch-aligned and identical size
+    assert plan.window % patch == 0
+    for s in plan.starts:
+        assert s % patch == 0 and s + plan.window <= plan.extent
+
+
+# ------------------------------------------------------- 2-completeness
+def test_two_completeness_receptive_field():
+    """Supplementary Thm. 1: receptive field covers Z after 2 steps when
+    consecutive steps partition along different dims."""
+    dims = (5, 6, 7)
+    K = 2
+    # step 1: partition temporal; step 2: partition height
+    def partition_sets(extent, K):
+        plan = plan_partition_balanced(extent, 1, K, 0.0)
+        return [set(range(a, b)) for a, b in zip(plan.core_start, plan.core_end)]
+
+    t_parts = partition_sets(dims[0], K)
+    h_parts = partition_sets(dims[1], K)
+    # receptive field of position p=(0,0,0) after step 1 (temporal split):
+    rf1 = {
+        (t, h, w)
+        for t in next(p for p in t_parts if 0 in p)
+        for h in range(dims[1])
+        for w in range(dims[2])
+    }
+    # after step 2 (height split), union over all p1 in rf1:
+    rf2 = set()
+    for (_, h1, _) in rf1:
+        hp = next(p for p in h_parts if h1 in p)
+        rf2 |= {
+            (t, h, w) for t in range(dims[0]) for h in hp for w in range(dims[2])
+        }
+    full = {
+        (t, h, w)
+        for t in range(dims[0])
+        for h in range(dims[1])
+        for w in range(dims[2])
+    }
+    assert rf2 == full
+
+
+# ------------------------------------------------------------------ hybrid
+def test_hybrid_group_layout():
+    from repro.core.hybrid import make_groups
+
+    layout = make_groups(16, 4)
+    layout.validate()
+    assert len(layout.groups) == 4 and all(len(g) == 4 for g in layout.groups)
+    with pytest.raises(ValueError):
+        make_groups(16, 5)
+
+
+def test_hybrid_forward_identity():
+    """Inter-group LP with identity intra-group operators == identity."""
+    from repro.core.hybrid import hybrid_forward
+
+    rng = np.random.default_rng(5)
+    z = jnp.asarray(rng.normal(size=(24, 5)).astype(np.float32))
+    ops = [lambda s: s for _ in range(3)]
+    out = hybrid_forward(ops, z, extent_axis=0, patch=2, overlap_ratio=0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z), atol=1e-5)

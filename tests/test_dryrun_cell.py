@@ -1,0 +1,54 @@
+"""Dry-run integration: lower+compile real cells in a subprocess (the
+512-device XLA flag must not leak into this process)."""
+import json
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+CMD = [sys.executable, "-m", "repro.launch.dryrun"]
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def _run(args, timeout=420):
+    return subprocess.run(CMD + args, capture_output=True, text=True,
+                          cwd="/root/repo", env=ENV, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_dryrun_whisper_decode_single_pod(tmp_path):
+    out = tmp_path / "rec.json"
+    res = _run(["--arch", "whisper-small", "--shape", "decode_32k",
+                "--out", str(out)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK   whisper-small x decode_32k [16x16]" in res.stdout
+    rec = json.load(open(out))[0]
+    assert rec["flops"] > 0 and rec["hbm_bytes"] > 0
+    assert rec["memory"].get("temp_size_in_bytes", 0) >= 0
+
+
+@pytest.mark.slow
+def test_dryrun_vdm_lp_step_multi_pod(tmp_path):
+    """The paper's own cell on the 2x16x16 mesh — proves the pod axis."""
+    out = tmp_path / "rec.json"
+    res = _run(["--arch", "wan21-dit-1.3b", "--shape", "vdm_3s",
+                "--multi-pod", "--out", str(out)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK   wan21-dit-1.3b x vdm_3s [2x16x16]" in res.stdout
+    rec = json.load(open(out))[0]
+    # The hybrid (LP x TP) step's traffic is intra-group TP/SP collectives
+    # (weight gathers + window KV) — bounded by ~tens of GB; the LP
+    # *reconstruction* itself is latent-scale (the shard_map engine pins
+    # it to one ~5 MB psum, asserted in test_core_spmd).  Guard against
+    # regression to activation-replication blowups (baseline was >50 GB
+    # per step before §Perf fixes).
+    total_coll = sum(rec["collectives"].values())
+    assert total_coll < 25e9, f"LP step moved {total_coll/1e9:.1f} GB"
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    res = _run(["--arch", "granite-3-2b", "--shape", "long_500k"])
+    assert res.returncode == 0
+    assert "SKIP" in res.stdout and "quadratic" in res.stdout

@@ -1,0 +1,167 @@
+"""LP end-to-end quality validation (the paper's §5.2 claims as tests).
+
+1. EXACTNESS: with a denoiser whose receptive field <= the overlap, LP
+   reconstruction equals centralized bit-for-bit (up to float assoc) —
+   validating partition + blend machinery end-to-end.
+2. DiT PROXY: with a random-init DiT, LP's final latent stays close to
+   centralized (local spatio-temporal dependency assumption), and
+3. ROTATION ABLATION (paper Fig. 10): rotating partitions beat
+   temporal-only partitioning on divergence from centralized.
+4. OVERLAP TREND (paper Figs. 6-7): divergence decreases as r grows.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.diffusion import (
+    FlowMatchEuler,
+    generate_centralized,
+    generate_lp,
+    make_guided_denoiser,
+)
+from repro.models import dit, frontends
+
+STEPS = 6
+K = 2
+
+
+def _local_denoiser(width: int):
+    """Depthwise 3D box filter — receptive field `width` in every dim."""
+
+    def fn(z, t):
+        acc = z * 2.0
+        for axis in (1, 2, 3):
+            for shift in range(1, width + 1):
+                acc = acc + jnp.roll(z, shift, axis) * 0.3 ** shift
+                acc = acc + jnp.roll(z, -shift, axis) * 0.3 ** shift
+        return acc * 0.1
+
+    # roll wraps around, which breaks locality at the global edges; a
+    # valid local denoiser must not wrap — mask by shrinking via pad+crop
+    def nonwrap(z, t):
+        pad = [(0, 0)] + [(width, width)] * 3 + [(0, 0)]
+        zp = jnp.pad(z, pad, mode="edge")
+        out = fn(zp, t)
+        sl = (slice(None),) + tuple(slice(width, -width) for _ in range(3)) \
+            + (slice(None),)
+        return out[sl]
+
+    return nonwrap
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-9))
+
+
+def test_lp_exact_with_local_denoiser():
+    """Receptive field (1) <= overlap per side => centralized == LP in
+    every position: 2*K windows each see enough context."""
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(1, 8, 8, 12, 4)).astype(np.float32))
+    den = _local_denoiser(width=1)
+    sampler = FlowMatchEuler(STEPS)
+    z_c = generate_centralized(den, z, STEPS, sampler)
+    for uniform in (False, True):
+        z_lp = generate_lp(
+            den, z, STEPS, num_partitions=K, overlap_ratio=1.0,
+            patch_sizes=(1, 2, 2), sampler=sampler, uniform=uniform,
+        )
+        err = _rel_err(z_lp, z_c)
+        assert err < 1e-5, f"uniform={uniform}: {err}"
+
+
+def _dit_setup(seed=0):
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    ctx = frontends.text_context(jax.random.PRNGKey(seed + 1), 1, cfg)
+    null_ctx = jnp.zeros_like(ctx)
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    den = make_guided_denoiser(fwd, params, cfg, ctx, null_ctx, guidance=3.0)
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(1, 6, 8, 12, cfg.latent_channels))
+                    .astype(np.float32))
+    return den, z
+
+
+def test_lp_dit_close_to_centralized():
+    den, z = _dit_setup()
+    sampler = FlowMatchEuler(STEPS)
+    z_c = generate_centralized(den, z, STEPS, sampler)
+    z_lp = generate_lp(den, z, STEPS, num_partitions=K, overlap_ratio=1.0,
+                       patch_sizes=(1, 2, 2), sampler=sampler)
+    err = _rel_err(z_lp, z_c)
+    assert err < 0.25, f"LP diverged from centralized: rel_err={err}"
+    assert np.isfinite(np.asarray(z_lp)).all()
+
+
+def test_rotation_beats_temporal_only():
+    """Paper Fig. 10: dynamic rotation < fixed-dim partitioning error."""
+    den, z = _dit_setup(seed=1)
+    sampler = FlowMatchEuler(STEPS)
+    z_c = generate_centralized(den, z, STEPS, sampler)
+
+    from repro.core import lp_denoise
+
+    def run(dims):
+        def den_for_step(i, dim):
+            def f(sub):
+                t = jnp.full((sub.shape[0],), sampler.timestep(i), jnp.float32)
+                return den(sub, t)
+            return f
+
+        from repro.core.lp_step import lp_forward
+        from repro.core.partition import plan_partition
+        from repro.core.schedule import rotation_dim
+
+        zz = z
+        for i in range(1, STEPS + 1):
+            dim = rotation_dim(i, dims)
+            axis = 1 + dim
+            plan = plan_partition(zz.shape[axis], (1, 2, 2)[dim], K, 0.5, dim)
+            pred = lp_forward(den_for_step(i, dim), zz, plan, axis)
+            zz = sampler.step(zz, pred, i)
+        return zz
+
+    err_rot = _rel_err(run((0, 1, 2)), z_c)
+    err_fixed = _rel_err(run((0,)), z_c)
+    assert err_rot < err_fixed, (
+        f"rotation ({err_rot}) should beat temporal-only ({err_fixed})"
+    )
+
+
+def test_overlap_ratio_monotone_trend():
+    """Paper Figs. 6-7: larger r => closer to centralized (allowing noise,
+    compare r=0 vs r=1)."""
+    den, z = _dit_setup(seed=2)
+    sampler = FlowMatchEuler(STEPS)
+    z_c = generate_centralized(den, z, STEPS, sampler)
+    errs = {}
+    for r in (0.0, 1.0):
+        z_lp = generate_lp(den, z, STEPS, num_partitions=K, overlap_ratio=r,
+                           patch_sizes=(1, 2, 2), sampler=sampler)
+        errs[r] = _rel_err(z_lp, z_c)
+    assert errs[1.0] < errs[0.0], errs
+
+
+def test_lp_uniform_engine_matches_reference_engine():
+    """Variable-size (paper-exact) vs uniform-window (SPMD) engines agree
+    in the *core* regions when overlap geometry is identical."""
+    den, z = _dit_setup(seed=3)
+    sampler = FlowMatchEuler(3)
+    a = generate_lp(den, z, 3, num_partitions=K, overlap_ratio=1.0,
+                    patch_sizes=(1, 2, 2), sampler=sampler, uniform=False)
+    b = generate_lp(den, z, 3, num_partitions=K, overlap_ratio=1.0,
+                    patch_sizes=(1, 2, 2), sampler=sampler, uniform=True)
+    # engines differ only in edge-window context (uniform sees more);
+    # results must be close globally
+    assert _rel_err(a, b) < 0.15
