@@ -16,6 +16,7 @@ from . import (
     fig9_duration,
     fig10_rotation_ablation,
     quality_fidelity,
+    step_latency,
     table1_comm,
     table2_latency,
 )
@@ -28,6 +29,7 @@ ALL = {
     "fig9": fig9_duration.run,
     "fig10": fig10_rotation_ablation.run,
     "quality": quality_fidelity.run,
+    "step_latency": step_latency.run,
 }
 
 

@@ -1,0 +1,184 @@
+"""LP step latency + communication baseline -> BENCH_lp_step.json.
+
+Three measurements on the wan21_dit_1p3b smoke (reduced) config:
+
+1. per-step wall time of the SEED loop (fresh Python closure per step,
+   timestep baked in, eager dispatch — ``lp_denoise_reference``);
+2. per-step wall time of the compiled fast path (traced-timestep steps,
+   LRU compiled-step cache, scan fusion — ``lp_denoise``), warm;
+3. denoiser trace counts for both (T vs <= #rotation-dims);
+
+plus communication: the analytic per-step bytes of the psum engine vs the
+halo-exchange engine (``comm_model``), cross-checked against
+trip-count-aware HLO measurements of both engines compiled for a 4-way
+CPU mesh in a subprocess (the 4-device XLA flag must not leak here).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LPStepCompiler, lp_denoise, lp_denoise_reference
+from repro.core import comm_model as cm
+from repro.diffusion import FlowMatchEuler
+
+from .common import reduced_dit_denoiser
+
+STEPS = 6
+K = 2
+R = 0.5
+OUT_JSON = "BENCH_lp_step.json"
+
+_COMM_SCRIPT = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.core import plan_uniform
+    from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
+
+    mesh = compat.make_mesh((4,), ("data",))
+    # wan21 smoke latent geometry (13, 60, 104, 16), partitioned on height
+    z = jnp.zeros((13, 60, 104, 16), jnp.float32)
+    plan = plan_uniform(60, 2, 4, 0.5, dim=1)
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+    out = {}
+    for name, fwd in (("psum", lp_forward_shard_map), ("halo", lp_forward_halo)):
+        hlo = jax.jit(
+            lambda zz: fwd(den, zz, plan, 1, mesh)
+        ).lower(z).compile().as_text()
+        a = analyze(hlo)
+        out[name] = {k: float(v) for k, v in a.collective_bytes.items()}
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def _measured_comm():
+    """Per-device collective payloads (HLO accounting) for one LP step of
+    the smoke geometry, psum vs halo engines, on 4 fake CPU devices."""
+    res = subprocess.run(
+        [sys.executable, "-c", _COMM_SCRIPT],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=300,
+    )
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[len("JSON:"):])
+    return {"error": res.stderr[-500:]}
+
+
+def run(print_csv=True):
+    den, z_T, cfg = reduced_dit_denoiser(0, latent=(6, 8, 12))
+    sampler = FlowMatchEuler(STEPS)
+
+    # ---- seed loop: fresh closure per step, timestep baked in
+    seed_traces = {"n": 0}
+
+    def den_for_step(i, dim):
+        t_val = sampler.timestep(i)
+
+        def fn(sub):
+            seed_traces["n"] += 1
+            t = jnp.full((sub.shape[0],), t_val, jnp.float32)
+            return den(sub, t)
+
+        return fn
+
+    def seed_loop():
+        return lp_denoise_reference(
+            den_for_step, z_T, lambda z, p, i: sampler.step(z, p, i),
+            STEPS, K, R, cfg.patch_sizes, (1, 2, 3), uniform=True,
+        )
+
+    jax.block_until_ready(seed_loop())  # warm the op caches
+    seed_traces["n"] = 0
+    t0 = time.perf_counter()
+    jax.block_until_ready(seed_loop())
+    seed_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+
+    # ---- compiled fast path
+    fast_traces = {"n": 0}
+
+    def den_fast(w, t):
+        fast_traces["n"] += 1
+        tv = jnp.full((w.shape[0],), t, jnp.float32)
+        return den(w, tv)
+
+    comp = LPStepCompiler(den_fast, sampler.update, K, R, cfg.patch_sizes,
+                          (1, 2, 3), uniform=True)
+
+    def fast_loop():
+        return lp_denoise(None, z_T, sampler, STEPS, K, R, cfg.patch_sizes,
+                          (1, 2, 3), uniform=True, compiler=comp)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fast_loop())  # compiles (<= one per rotation dim)
+    cold_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+    fast_compile_traces = fast_traces["n"]
+    t0 = time.perf_counter()
+    jax.block_until_ready(fast_loop())
+    fast_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+
+    # ---- communication: analytic model + measured HLO (4-dev subprocess)
+    ccfg = cm.wan21_comm_config(49, num_steps=1)
+    modeled = {
+        "psum_wire_bytes_per_step": cm.comm_lp_spmd(ccfg, 4, R),
+        "halo_wire_bytes_per_step": cm.comm_lp_halo(ccfg, 4, R),
+        "halo_hlo_bytes_height_step": cm.lp_halo_step_collectives(
+            ccfg, 4, R, dim=1
+        ),
+    }
+    measured = _measured_comm()
+
+    record = {
+        "config": "wan21_dit_1p3b reduced",
+        "latent": [1, 6, 8, 12, int(cfg.latent_channels)],
+        "num_steps": STEPS,
+        "num_partitions": K,
+        "overlap_ratio": R,
+        "seed_loop": {
+            "step_ms": seed_step_ms,
+            "denoiser_traces": seed_traces["n"],
+        },
+        "compiled_loop": {
+            "step_ms": fast_step_ms,
+            "first_run_step_ms": cold_step_ms,
+            "denoiser_traces": fast_compile_traces,
+            "compiles": comp.compiles,
+            "cache_hits": comp.hits,
+        },
+        "speedup_vs_seed": seed_step_ms / max(fast_step_ms, 1e-9),
+        "comm_modeled": modeled,
+        "comm_measured_per_device": measured,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    if print_csv:
+        print(f"step_latency/seed_loop,{seed_step_ms * 1e3:.0f},"
+              f"traces={seed_traces['n']}")
+        print(f"step_latency/compiled,{fast_step_ms * 1e3:.0f},"
+              f"traces={fast_compile_traces} compiles={comp.compiles}")
+        print(f"step_latency/speedup,0,{record['speedup_vs_seed']:.2f}x")
+        if "halo" in measured:
+            h = sum(measured["halo"].values())
+            p = sum(measured["psum"].values())
+            print(f"step_latency/comm_measured,0,"
+                  f"halo={h / 2 ** 20:.2f}MB psum={p / 2 ** 20:.2f}MB")
+        print(f"step_latency/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

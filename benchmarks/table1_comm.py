@@ -29,6 +29,7 @@ def rows():
             "LP r=1.0": cm.comm_lp_measured(cfg, 4, 1.0),
             "LP r=0.5": cm.comm_lp_measured(cfg, 4, 0.5),
             "LP-SPMD (ours)": cm.comm_lp_spmd(cfg, 4, 0.5),
+            "LP-halo (ours)": cm.comm_lp_halo(cfg, 4, 0.5),
         }
         for method, bytes_ in ours.items():
             paper = PAPER.get((frames, method))

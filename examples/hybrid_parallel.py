@@ -50,7 +50,9 @@ def main():
     rng = np.random.default_rng(0)
     z = jnp.asarray(rng.normal(size=(32, 8, 4, 16)).astype(np.float32))
 
-    with jax.set_mesh(mesh):
+    from repro import compat
+
+    with compat.set_mesh(mesh):
         fn = jax.jit(lambda zz: lp_forward_shard_map(denoise, zz, plan, 0,
                                                      mesh, "data"))
         compiled = fn.lower(z).compile()

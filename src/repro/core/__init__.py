@@ -29,5 +29,11 @@ from .partition import (  # noqa: F401
 from .weights import blend_weight_1d, global_normalizer, partition_weights  # noqa: F401
 from .reconstruct import reconstruct  # noqa: F401
 from .uniform import UniformPlan, expansion_factor, plan_uniform  # noqa: F401
-from .lp_step import lp_denoise, lp_forward, lp_forward_uniform  # noqa: F401
+from .lp_step import (  # noqa: F401
+    LPStepCompiler,
+    lp_denoise,
+    lp_denoise_reference,
+    lp_forward,
+    lp_forward_uniform,
+)
 from . import comm_model  # noqa: F401

@@ -167,6 +167,85 @@ def comm_lp_spmd(cfg: VDMCommConfig, K: int, r: float) -> int:
     return cfg.num_steps * per_step
 
 
+def _halo_plan(cfg: VDMCommConfig, K: int, r: float, dim: int):
+    from .uniform import plan_uniform
+
+    return plan_uniform(cfg.latent_dims[dim], cfg.patch_sizes[dim], K, r, dim)
+
+
+def _row_bytes(cfg: VDMCommConfig, dim: int) -> int:
+    """Bytes of one latent-unit slab orthogonal to ``dim``."""
+    return (cfg.latent_elems // cfg.latent_dims[dim]) * cfg.bytes_per_el
+
+
+def lp_halo_step_collectives(
+    cfg: VDMCommConfig, K: int, r: float, dim: int
+) -> dict:
+    """Per-device collective payloads of ONE halo LP step along ``dim``.
+
+    Accounted the way ``analysis/hlo_analyzer.py`` measures compiled HLO:
+    each collective contributes its **output shape** bytes.  The halo step
+    lowers to one all-gather of the padded core slice — output is the
+    gathered (K, core_pad) stack — plus one collective-permute per
+    transfer round with a slab-shaped output.  Cross-checked against the
+    dry-run HLO in tests/test_fast_lp_step.py.
+    """
+    from repro.distributed.collectives import halo_spec
+
+    spec = halo_spec(_halo_plan(cfg, K, r, dim))
+    row = _row_bytes(cfg, dim)
+    return {
+        "all-gather": K * spec.core_pad * row,
+        "collective-permute": sum(t.length * row for t in spec.transfers),
+    }
+
+
+def comm_lp_halo(cfg: VDMCommConfig, K: int, r: float = 0.5) -> int:
+    """Halo-exchange LP (``core/spmd.lp_forward_halo``): group wire bytes.
+
+    Per step, reconstruction is (a) a ring all-gather of the padded core
+    slices — every rank's core_pad shard crosses K-1 links — and (b) the
+    ppermute halo rounds, where each scheduled (src, dst) pair moves one
+    padded slab.  No buffer of size S_z ever crosses the wire:
+
+        C_halo_step = K (K-1) core_pad row  +  sum_t |perm_t| len_t row
+
+    vs the psum engine's ``2 (K-1) S_z`` (``comm_lp_spmd``).  The overlap
+    slabs scale with O ~ r L ~ r D/K, so the advantage grows with K.
+    """
+    from repro.distributed.collectives import halo_spec
+
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
+    per_dim = {}
+    for dim in dims:
+        spec = halo_spec(_halo_plan(cfg, K, r, dim))
+        row = _row_bytes(cfg, dim)
+        ag = K * (K - 1) * spec.core_pad * row
+        pp = sum(len(t.perm) * t.length * row for t in spec.transfers)
+        per_dim[dim] = ag + pp
+    return sum(
+        per_dim[rotation_dim(i, dims)] for i in range(1, cfg.num_steps + 1)
+    )
+
+
+def collective_wire_bytes(kind: str, payload_bytes: float, K: int) -> float:
+    """HLO output-shape payload -> ring wire bytes per device.
+
+    ``hlo_analyzer`` reports collective payloads as output sizes; on a ring
+    an all-reduce moves 2 (K-1)/K of its buffer per device, an all-gather
+    (K-1)/K of its *gathered* output, and a collective-permute exactly its
+    payload.  Used to reconcile measured HLO bytes with the analytic
+    ``comm_lp_*`` wire models.
+    """
+    if kind == "all-reduce":
+        return 2.0 * (K - 1) / K * payload_bytes
+    if kind in ("all-gather", "reduce-scatter"):
+        return (K - 1) / K * payload_bytes
+    if kind == "collective-permute":
+        return float(payload_bytes)
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
 def comm_hybrid(
     cfg: VDMCommConfig,
     K: int,

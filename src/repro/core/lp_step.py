@@ -1,17 +1,29 @@
-"""Single-host LP reference engine (paper §3.2 workflow, Fig. 3).
+"""LP denoising engines: reference loop + the compiled fast path.
 
 One LP forward pass = dynamic rotating partition -> parallel denoising ->
-position-aware latent reconstruction.  This module is the *reference*
-implementation: partitions are the paper-exact variable-size slices, the
-"parallel" denoising is a Python loop (or a vmap for uniform windows), and
-reconstruction is the scatter-add of ``core/reconstruct.py``.
+position-aware latent reconstruction (paper §3.2 workflow, Fig. 3).
 
-The production SPMD engine (``core/spmd.py``) computes identical math with
-shard_map + one psum; both are cross-checked in tests.
+Two loop drivers live here:
+
+* :func:`lp_denoise_reference` — the original eager loop.  The denoiser
+  for step ``i`` is a fresh Python closure with the timestep baked in, so
+  nothing is (or can be) cached across steps.  Kept as the semantics
+  oracle and the benchmark baseline.
+* :func:`lp_denoise` + :class:`LPStepCompiler` — the production path.
+  Timestep, scheduler scalars, and conditioning are **traced arguments**,
+  so one jitted step function serves every timestep that shares a rotation
+  dim; the compiled-step cache is keyed on (latent geometry, rotation dim,
+  K, r, uniform, arg signatures) and ``z`` is donated.  Consecutive
+  same-dim steps fuse into one ``lax.scan``.  A T-step denoise compiles at
+  most once per rotation dim (<= 3 traces) instead of T times.
+
+The production SPMD engines (``core/spmd.py``) plug in via the
+``forward`` hook; both are cross-checked in tests.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from collections import OrderedDict
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +34,14 @@ from .reconstruct import reconstruct
 from .schedule import rotation_dim, usable_dims
 from .uniform import UniformPlan, plan_uniform
 
-# denoise_fn maps a sub-latent (same rank as the latent) to its noise
-# prediction of identical shape.  CFG is expected to live *inside* the fn
-# (paper Eq. 4: each partition computes its own guided prediction).
+# Reference-engine denoiser: maps a sub-latent (same rank as the latent)
+# to its noise prediction of identical shape, timestep baked in.
 DenoiseFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+# Fast-path denoiser: (window, t, *extras) -> pred, where ``t`` is a traced
+# f32 scalar and ``extras`` carry traced conditioning (text context, CFG
+# scale, ...).  CFG lives *inside* the fn (paper Eq. 4).
+DenoiseStepFn = Callable[..., jnp.ndarray]
 
 
 def lp_forward(
@@ -52,39 +68,210 @@ def lp_forward_uniform(
     z: jnp.ndarray,
     plan: UniformPlan,
     axis: int,
+    use_kernel: Optional[bool] = None,
 ) -> jnp.ndarray:
     """One LP forward pass on uniform windows, batched with vmap.
 
     This mirrors what every SPMD rank does: slice a fixed-size window,
     denoise, weight, scatter-add; here the K ranks are a vmapped leading
-    axis and the psum is a sum over it.
+    axis and the reduction runs through ``spmd.blend_windows`` (which on
+    TPU dispatches the fused Pallas stitch kernel — ``use_kernel``
+    overrides the backend default).
     """
-    K = plan.num_partitions
-    windows = jnp.stack(
-        [
-            jax.lax.dynamic_slice_in_dim(z, plan.starts[k], plan.window, axis)
-            for k in range(K)
-        ]
-    )
+    from .spmd import blend_windows, stack_windows
+
+    windows = stack_windows(z, plan, axis)
     preds = jax.vmap(denoise_fn)(windows)
-    acc = jnp.zeros(
-        z.shape[:axis] + (plan.extent,) + z.shape[axis + 1 :], dtype=jnp.float32
+    return blend_windows(preds, plan, axis, use_kernel=use_kernel).astype(z.dtype)
+
+
+# ------------------------------------------------------------ compiled path
+def _abstract_sig(tree: Any) -> Tuple:
+    """Hashable (treedef, shapes/dtypes) signature of a pytree of arrays."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (
+        treedef,
+        tuple((jnp.shape(l), jnp.result_type(l).name) for l in leaves),
     )
-    for k in range(K):
-        w = plan.weight_1d(k)
-        shape = [1] * z.ndim
-        shape[axis] = plan.window
-        wk = jnp.asarray(w).reshape(shape)
-        idx = [slice(None)] * z.ndim
-        idx[axis] = slice(plan.starts[k], plan.starts[k] + plan.window)
-        acc = acc.at[tuple(idx)].add(preds[k].astype(jnp.float32) * wk)
-    norm_shape = [1] * z.ndim
-    norm_shape[axis] = plan.extent
-    zn = jnp.asarray(plan.normalizer()).reshape(norm_shape)
-    return (acc / zn).astype(z.dtype)
+
+
+class LPStepCompiler:
+    """LRU cache of jitted LP step functions.
+
+    One entry per ``(z geometry, rotation dim, scan length, K, r, uniform,
+    scalars/extras signature)``.  The built step takes ``(z, t, scalars,
+    extras)`` with everything but the static partition geometry traced, and
+    donates ``z`` so the latent updates in place across the T-step loop.
+
+    ``forward`` overrides the per-step LP engine, e.g.
+    ``lambda fn, z, plan, axis: lp_forward_halo(fn, z, plan, axis, mesh)``
+    to run the halo-exchange collective inside the compiled step.
+    """
+
+    def __init__(
+        self,
+        denoise_fn: DenoiseStepFn,
+        update_fn: Callable[[jnp.ndarray, jnp.ndarray, Any], jnp.ndarray],
+        num_partitions: int,
+        overlap_ratio: float,
+        patch_sizes: Sequence[int],
+        spatial_axes: Sequence[int] = (1, 2, 3),
+        uniform: bool = False,
+        forward: Optional[Callable] = None,
+        use_kernel: Optional[bool] = None,
+        donate: bool = True,
+        maxsize: int = 32,
+    ):
+        self.denoise_fn = denoise_fn
+        self.update_fn = update_fn
+        self.num_partitions = num_partitions
+        self.overlap_ratio = overlap_ratio
+        self.patch_sizes = tuple(patch_sizes)
+        self.spatial_axes = tuple(spatial_axes)
+        self.uniform = uniform
+        self.forward = forward
+        self.use_kernel = use_kernel
+        self.donate = donate
+        self.maxsize = maxsize
+        self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
+        self.compiles = 0
+        self.hits = 0
+
+    # ------------------------------------------------------------- plans
+    def _plan(self, dim: int, extent: int):
+        if self.uniform:
+            return plan_uniform(
+                extent, self.patch_sizes[dim], self.num_partitions,
+                self.overlap_ratio, dim,
+            )
+        return plan_partition(
+            extent, self.patch_sizes[dim], self.num_partitions,
+            self.overlap_ratio, dim,
+        )
+
+    def _forward(self, fn: DenoiseFn, z, plan, axis):
+        if self.forward is not None:
+            return self.forward(fn, z, plan, axis)
+        if self.uniform:
+            return lp_forward_uniform(fn, z, plan, axis, use_kernel=self.use_kernel)
+        return lp_forward(fn, z, plan, axis)
+
+    # ------------------------------------------------------------- build
+    def step_fn(
+        self, dim: int, z: jnp.ndarray, n: int, scalars: Any, extras: Tuple,
+    ) -> Callable:
+        key = (
+            dim, n, tuple(z.shape), jnp.result_type(z).name,
+            _abstract_sig(scalars), _abstract_sig(extras),
+        )
+        cached = self._cache.get(key)
+        if cached is not None:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return cached
+        axis = self.spatial_axes[dim]
+        plan = self._plan(dim, z.shape[axis])
+        den, upd = self.denoise_fn, self.update_fn
+
+        if n == 1:
+            def step(zc, t, sc, extras):
+                pred = self._forward(lambda w: den(w, t, *extras), zc, plan, axis)
+                return upd(zc, pred, sc)
+        else:
+            def step(zc, ts, scs, extras):
+                def body(zb, x):
+                    t, sc = x
+                    pred = self._forward(
+                        lambda w: den(w, t, *extras), zb, plan, axis
+                    )
+                    return upd(zb, pred, sc), None
+                out, _ = jax.lax.scan(body, zc, (ts, scs))
+                return out
+
+        fn = jax.jit(step, donate_argnums=(0,) if self.donate else ())
+        self._cache[key] = fn
+        if len(self._cache) > self.maxsize:
+            self._cache.popitem(last=False)
+        self.compiles += 1
+        return fn
 
 
 def lp_denoise(
+    denoise_fn: Optional[DenoiseStepFn],
+    z_T: jnp.ndarray,
+    sampler,
+    num_steps: int,
+    num_partitions: int,
+    overlap_ratio: float,
+    patch_sizes: Sequence[int],
+    spatial_axes: Sequence[int],
+    uniform: bool = False,
+    extras: Tuple = (),
+    compiler: Optional[LPStepCompiler] = None,
+    fuse_scan: bool = True,
+    step_hook: Optional[Callable[[int], None]] = None,
+) -> jnp.ndarray:
+    """Full T-step LP denoising on the compiled fast path.
+
+    ``denoise_fn(window, t, *extras)`` takes the timestep (and any
+    conditioning in ``extras``) as traced arguments; ``sampler`` provides
+    ``timestep(i)`` / ``step_scalars(i)`` / ``update(z, pred, scalars)``
+    (see ``diffusion/sampler.py``).  Pass a prebuilt ``compiler`` to reuse
+    compiled steps across calls (the serving engine does, across batches);
+    otherwise one is created for this call — either way a run traces at
+    most once per rotation dim.  ``step_hook(i)`` fires outside the
+    compiled region (fault injection, straggler accounting); setting it
+    disables scan fusion so the hook really does run between steps.
+    """
+    if step_hook is not None:
+        fuse_scan = False
+    dims = usable_dims(
+        [z_T.shape[spatial_axes[d]] for d in range(3)],
+        patch_sizes,
+        num_partitions,
+    )
+    if not dims:
+        raise ValueError(
+            f"no latent dim has >= {num_partitions} patches; reduce K"
+        )
+    comp = compiler
+    if comp is None:
+        if denoise_fn is None:
+            raise ValueError("need denoise_fn when no compiler is given")
+        comp = LPStepCompiler(
+            denoise_fn, sampler.update, num_partitions, overlap_ratio,
+            patch_sizes, spatial_axes, uniform=uniform,
+        )
+    # group consecutive same-dim steps into scan-fused runs
+    runs: list = []
+    for i in range(1, num_steps + 1):
+        dim = rotation_dim(i, dims)
+        if fuse_scan and runs and runs[-1][0] == dim:
+            runs[-1][1].append(i)
+        else:
+            runs.append((dim, [i]))
+    # private copy: the first step donates its input buffer, and the
+    # caller's z_T must survive the call
+    z = jnp.array(z_T, copy=True) if comp.donate else jnp.asarray(z_T)
+    for dim, idxs in runs:
+        if step_hook is not None:
+            for i in idxs:
+                step_hook(i)
+        ts = [np.float32(sampler.timestep(i)) for i in idxs]
+        scs = [sampler.step_scalars(i) for i in idxs]
+        if len(idxs) == 1:
+            fn = comp.step_fn(dim, z, 1, scs[0], extras)
+            z = fn(z, ts[0], scs[0], extras)
+        else:
+            ts_arr = jnp.asarray(np.stack(ts))
+            scs_arr = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *scs)
+            fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras)
+            z = fn(z, ts_arr, scs_arr, extras)
+    return z
+
+
+# ---------------------------------------------------------- reference loop
+def lp_denoise_reference(
     denoise_fn_for_step: Callable[[int, int], DenoiseFn],
     z_T: jnp.ndarray,
     scheduler_update: Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray],
@@ -95,11 +282,13 @@ def lp_denoise(
     spatial_axes: Sequence[int],
     uniform: bool = False,
 ) -> jnp.ndarray:
-    """Full T-step LP denoising loop (paper Fig. 3, Eqs. 3-6).
+    """The original eager T-step loop (paper Fig. 3, Eqs. 3-6).
 
     ``denoise_fn_for_step(i, dim)`` returns the guided denoiser for forward
-    pass ``i`` (1-indexed); ``scheduler_update(z, pred, i)`` is S(.) of
-    Eq. 6.  ``spatial_axes`` maps dim 0/1/2 (T/H/W) to axes of ``z``.
+    pass ``i`` (1-indexed) with the timestep baked into the closure;
+    ``scheduler_update(z, pred, i)`` is S(.) of Eq. 6.  Every step builds a
+    fresh closure, so nothing caches — this is the semantics oracle the
+    compiled path is tested against, and the benchmark baseline.
     """
     dims = usable_dims(
         [z_T.shape[spatial_axes[d]] for d in range(3)],

@@ -31,6 +31,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .uniform import UniformPlan
 
 DenoiseFn = Callable[[jnp.ndarray], jnp.ndarray]
@@ -53,15 +55,39 @@ def window_weights(plan: UniformPlan) -> np.ndarray:
 
 
 def blend_windows(
-    preds: jnp.ndarray, plan: UniformPlan, axis: int
+    preds: jnp.ndarray, plan: UniformPlan, axis: int,
+    use_kernel: bool | None = None,
 ) -> jnp.ndarray:
     """Position-aware reconstruction of stacked window predictions.
 
     ``preds``: (K, ...) with the partition dim at ``axis`` of each element
     (i.e. ``axis + 1`` of the stacked tensor).  The sum over the leading K
     axis is what GSPMD lowers to a reduce over the lp mesh axis.
+
+    ``use_kernel=None`` auto-selects the fused Pallas stitch kernel
+    (``kernels/latent_blend``) on TPU — one pass over the output instead
+    of the K+2 latent-sized HBM round trips of the jnp scatter-add below.
+    Off-TPU the kernel only runs in (slow, Python) interpret mode, so it
+    stays opt-in there (tests force it on small shapes).
     """
     K = plan.num_partitions
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops
+
+        interpret = jax.default_backend() != "tpu"
+        p = jnp.moveaxis(preds, axis + 1, 1)        # (K, W, rest...)
+        rest = p.shape[2:]
+        flat = int(np.prod(rest)) if rest else 1
+        out = ops.latent_blend(
+            p.reshape(K, plan.window, flat),
+            jnp.asarray(window_weights(plan)),
+            jnp.asarray(plan.normalizer()),
+            plan.starts, plan.window, plan.extent,
+            interpret=interpret,
+        )
+        return jnp.moveaxis(out.reshape((plan.extent,) + rest), 0, axis)
     w = jnp.asarray(window_weights(plan))  # (K, window)
     wshape = [1] * (preds.ndim - 1)
     wshape[axis] = plan.window
@@ -93,7 +119,10 @@ def lp_forward_stacked(
     """
     windows = stack_windows(z, plan, axis)
     preds = jax.vmap(denoise_fn)(windows)
-    return blend_windows(preds, plan, axis)
+    # jnp form: this function's point is GSPMD composability (stacked axis
+    # sharded over the lp mesh axis) — the partitioner needs the visible
+    # scatter-sum, not an opaque kernel
+    return blend_windows(preds, plan, axis, use_kernel=False)
 
 
 # ------------------------------------------------------------- GSPMD engine
@@ -105,7 +134,15 @@ def lp_forward_gspmd(
     mesh: Mesh,
     lp_axis: str = "data",
 ) -> jnp.ndarray:
-    """LP forward with GSPMD sharding constraints on the stacked axis."""
+    """LP forward with GSPMD sharding constraints on the stacked axis.
+
+    Caveat (jax 0.4.x): the legacy partitioner lowers the stacked-axis
+    reduce to an all-reduce over EVERY device when the mesh has additional
+    (replicated) axes, multiplying the result by their product — execute
+    this engine on a single-axis mesh there (compile-only analysis, e.g.
+    the dry-run, is unaffected by values).  Meshes with Auto axis types
+    (jax >= 0.5) lower it correctly.
+    """
     windows = stack_windows(z, plan, axis)
     spec = [None] * windows.ndim
     spec[0] = lp_axis
@@ -116,7 +153,10 @@ def lp_forward_gspmd(
     preds = jax.lax.with_sharding_constraint(
         preds, NamedSharding(mesh, P(*spec))
     )
-    out = blend_windows(preds, plan, axis)
+    # jnp form always: the partitioner must see the scatter-sum to lower
+    # it to a reduce over the lp axis (an opaque kernel would force an
+    # all-gather of the stacked windows instead)
+    out = blend_windows(preds, plan, axis, use_kernel=False)
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
 
 
@@ -164,7 +204,86 @@ def lp_forward_shard_map(
 
     # Replicated in/out along every axis; the denoiser may use other axes
     # (e.g. tensor parallelism over "model") internally.
-    fn = jax.shard_map(
+    fn = compat.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(z)
+
+
+# ---------------------------------------------------------- halo-exchange
+def lp_forward_halo(
+    denoise_fn: DenoiseFn,
+    z: jnp.ndarray,
+    plan: UniformPlan,
+    axis: int,
+    mesh: Mesh,
+    lp_axis: str = "data",
+) -> jnp.ndarray:
+    """Halo-exchange LP forward: the fast-path collective schedule.
+
+    Same math as :func:`lp_forward_shard_map`, but reconstruction never
+    materializes (or psums) a global-latent-sized buffer.  Each rank:
+
+    1. slices + denoises its window and applies its trapezoid weights;
+    2. exchanges only the **overlap slabs** with the ranks whose cores its
+       window touches (``distributed.collectives.halo_exchange`` —
+       ppermute rounds of O(overlap) bytes);
+    3. normalizes its own core slice with the analytic ``Z(x)``;
+    4. all-gathers the core slices (disjoint cover of the latent) and
+       reassembles the replicated output locally.
+
+    Wire bytes per device ~ (K-1)/K * S_z + halo slabs, vs the psum's
+    2 (K-1)/K * S_z (``comm_model.comm_lp_halo`` vs ``comm_lp_spmd``);
+    there is no all-reduce in the compiled HLO at all.
+    """
+    from repro.distributed.collectives import halo_exchange, halo_spec
+
+    K = plan.num_partitions
+    if mesh.shape[lp_axis] != K:
+        raise ValueError(
+            f"lp axis {lp_axis!r} has size {mesh.shape[lp_axis]}, plan has K={K}"
+        )
+    spec = halo_spec(plan)
+    core_len = spec.core_len
+    starts = jnp.asarray(plan.starts)
+    weights = jnp.asarray(window_weights(plan))  # (K, window)
+    # Per-rank core slice of the analytic normalizer, padded with ones so
+    # the division is a no-op on the garbage rows beyond core_len[k].
+    norm = plan.normalizer()
+    norm_core = np.ones((K, spec.core_pad), np.float32)
+    for k in range(K):
+        norm_core[k, : core_len[k]] = norm[plan.core_start[k] : plan.core_end[k]]
+    norm_core = jnp.asarray(norm_core)
+
+    def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
+        k = jax.lax.axis_index(lp_axis)
+        window = jax.lax.dynamic_slice_in_dim(z_rep, starts[k], plan.window, axis)
+        pred = denoise_fn(window).astype(jnp.float32)
+        wshape = [1] * pred.ndim
+        wshape[axis] = plan.window
+        wpred = pred * weights[k].reshape(wshape)
+        wpred = jnp.moveaxis(wpred, axis, 0)
+        wpred = jnp.pad(wpred, [(0, spec.pad)] + [(0, 0)] * (wpred.ndim - 1))
+        acc = halo_exchange(wpred, spec, k, lp_axis)
+        nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
+        core = (acc[: spec.core_pad] / norm_core[k].reshape(nshape)).astype(
+            z_rep.dtype
+        )
+        gathered = jax.lax.all_gather(core, lp_axis, axis=0, tiled=False)
+        out = jnp.zeros(
+            (plan.extent,) + core.shape[1:], z_rep.dtype
+        )
+        for j in range(K):  # cores tile [0, extent): static local reassembly
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, gathered[j, : core_len[j]], plan.core_start[j], 0
+            )
+        return jnp.moveaxis(out, 0, axis)
+
+    fn = compat.shard_map(
         per_device,
         mesh=mesh,
         in_specs=P(),

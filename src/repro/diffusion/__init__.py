@@ -4,4 +4,5 @@ from .pipeline import (  # noqa: F401
     generate_centralized,
     generate_lp,
     make_guided_denoiser,
+    make_guided_step_denoiser,
 )

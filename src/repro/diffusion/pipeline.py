@@ -2,8 +2,12 @@
 
 ``generate_centralized`` is the single-device reference (paper's
 "Centralized" row); ``generate_lp`` runs the paper's full workflow
-(rotating partition -> parallel denoise -> position-aware reconstruction)
-via the reference or uniform engines.  Quality benchmarks diff the two.
+(rotating partition -> parallel denoise -> position-aware reconstruction).
+By default it rides the compiled fast path (``core/lp_step.lp_denoise``):
+timestep and scheduler coefficients are traced arguments, so a T-step run
+compiles at most once per rotation dim; ``compiled=False`` falls back to
+the eager reference loop.  Quality benchmarks diff the two against the
+centralized output.
 """
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import lp_denoise
+from repro.core import LPStepCompiler, lp_denoise, lp_denoise_reference
 from repro.diffusion.cfg import cfg_combine
 from repro.diffusion.sampler import FlowMatchEuler
 
@@ -28,6 +32,29 @@ def make_guided_denoiser(dit_forward, params, cfg_model, context, null_context,
         ctx = jnp.concatenate([context, null_context], axis=0)
         pred = dit_forward(params, z2, t2, ctx, cfg_model)
         return cfg_combine(pred[:b], pred[b:], guidance)
+
+    return guided
+
+
+def make_guided_step_denoiser(dit_forward, params, cfg_model,
+                              guidance_default: float = 5.0):
+    """Fully-traced guided denoiser for the compiled LP step cache.
+
+    Unlike :func:`make_guided_denoiser`, the conditioning is NOT closed
+    over: ``(window, t, context, null_context, guidance)`` are all traced
+    arguments, so one compiled step serves every batch of the same
+    geometry — the serving engine builds this once per engine, not once
+    per batch.  ``t`` is a traced f32 scalar (the LP step protocol).
+    """
+
+    def guided(window, t, context, null_context, guidance=None):
+        g = guidance_default if guidance is None else guidance
+        b = window.shape[0]
+        z2 = jnp.concatenate([window, window], axis=0)
+        t2 = jnp.full((2 * b,), t, jnp.float32)
+        ctx = jnp.concatenate([context, null_context], axis=0)
+        pred = dit_forward(params, z2, t2, ctx, cfg_model)
+        return cfg_combine(pred[:b], pred[b:], g)
 
     return guided
 
@@ -57,30 +84,38 @@ def generate_lp(
     sampler: Optional[FlowMatchEuler] = None,
     spatial_axes: Sequence[int] = (1, 2, 3),   # (B, T, H, W, C) layout
     uniform: bool = False,
+    compiled: bool = True,
+    compiler: Optional[LPStepCompiler] = None,
 ) -> jnp.ndarray:
-    """Latent-Parallel generation (paper Fig. 3 full loop)."""
+    """Latent-Parallel generation (paper Fig. 3 full loop).
+
+    ``guided_denoiser(z, t)`` takes a per-sample timestep vector; the
+    compiled path adapts it to the traced-scalar step protocol.  Pass
+    ``compiler`` to share the compiled-step cache across calls.
+    """
     sampler = sampler or FlowMatchEuler(num_steps)
 
-    def denoise_for_step(i, dim):
-        t_val = sampler.timestep(i)
+    if not compiled:
+        def denoise_for_step(i, dim):
+            t_val = sampler.timestep(i)
 
-        def fn(sub):
-            t = jnp.full((sub.shape[0],), t_val, jnp.float32)
-            return guided_denoiser(sub, t)
+            def fn(sub):
+                t = jnp.full((sub.shape[0],), t_val, jnp.float32)
+                return guided_denoiser(sub, t)
 
-        return fn
+            return fn
 
-    def sched_update(z, pred, i):
-        return sampler.step(z, pred, i)
+        return lp_denoise_reference(
+            denoise_for_step, z_T, lambda z, pred, i: sampler.step(z, pred, i),
+            num_steps, num_partitions, overlap_ratio, patch_sizes,
+            spatial_axes, uniform=uniform,
+        )
+
+    def den(window, t):
+        tv = jnp.full((window.shape[0],), t, jnp.float32)
+        return guided_denoiser(window, tv)
 
     return lp_denoise(
-        denoise_for_step,
-        z_T,
-        sched_update,
-        num_steps,
-        num_partitions,
-        overlap_ratio,
-        patch_sizes,
-        spatial_axes,
-        uniform=uniform,
+        den, z_T, sampler, num_steps, num_partitions, overlap_ratio,
+        patch_sizes, spatial_axes, uniform=uniform, compiler=compiler,
     )

@@ -3,6 +3,15 @@
 WAN2.1 is a flow-matching model (velocity prediction, Euler integration);
 a DDIM eps-parameterization is provided for completeness.  Schedulers are
 pure: z_{t-1} = S(z_t, pred, i).
+
+Two call forms per scheduler:
+
+* ``step(z, pred, i)`` — step index static, coefficients baked in as
+  Python floats (the eager reference loop).
+* ``step_scalars(i)`` + ``update(z, pred, scalars)`` — coefficients as a
+  pytree of numpy scalars fed to the compiled LP step as **traced
+  arguments**, so one jitted step (or a lax.scan over stacked scalars)
+  serves every timestep without retracing (``core/lp_step.LPStepCompiler``).
 """
 from __future__ import annotations
 
@@ -35,6 +44,16 @@ class FlowMatchEuler:
         dt = float(s[i] - s[i - 1])  # negative
         return z + dt * velocity.astype(z.dtype)
 
+    def step_scalars(self, i: int) -> np.float32:
+        s = self.sigmas()
+        return np.float32(s[i] - s[i - 1])
+
+    def update(self, z: jnp.ndarray, velocity: jnp.ndarray, dt) -> jnp.ndarray:
+        """Euler step with ``dt`` traced (f32 math, cast back to z.dtype)."""
+        return (
+            z.astype(jnp.float32) + dt * velocity.astype(jnp.float32)
+        ).astype(z.dtype)
+
 
 @dataclasses.dataclass(frozen=True)
 class DDIM:
@@ -66,4 +85,20 @@ class DDIM:
         zf = z.astype(jnp.float32)
         x0 = (zf - np.sqrt(1 - a_t) * eps) / np.sqrt(a_t)
         out = np.sqrt(a_next) * x0 + np.sqrt(1 - a_next) * eps
+        return out.astype(z.dtype)
+
+    def step_scalars(self, i: int) -> Tuple[np.float32, np.float32]:
+        sched = self._schedule()
+        ab = self._alphas()
+        t = sched[i - 1]
+        t_next = sched[i] if i < self.num_steps else -1
+        a_next = float(ab[t_next]) if t_next >= 0 else 1.0
+        return (np.float32(ab[t]), np.float32(a_next))
+
+    def update(self, z: jnp.ndarray, eps: jnp.ndarray, scalars) -> jnp.ndarray:
+        a_t, a_next = scalars
+        eps = eps.astype(jnp.float32)
+        zf = z.astype(jnp.float32)
+        x0 = (zf - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+        out = jnp.sqrt(a_next) * x0 + jnp.sqrt(1 - a_next) * eps
         return out.astype(z.dtype)

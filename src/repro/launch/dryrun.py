@@ -124,7 +124,11 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                  lp_impl: str = "gspmd"):
     """Build the jitted LP denoising step (one forward pass, dim=height)."""
     from repro.core import plan_uniform
-    from repro.core.spmd import lp_forward_gspmd, lp_forward_shard_map
+    from repro.core.spmd import (
+        lp_forward_gspmd,
+        lp_forward_halo,
+        lp_forward_shard_map,
+    )
     from repro.diffusion.cfg import cfg_combine
     from repro.diffusion.sampler import FlowMatchEuler
     from repro.models import dit
@@ -141,7 +145,10 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
         b = z.shape[0]
 
         kv_chunk = int(os.environ.get("REPRO_DIT_KV_CHUNK", "4096"))
-        cfg_on_pod = "pod" in mesh.axis_names
+        # CFG-pair-on-pod is a GSPMD-only constraint: inside the explicit
+        # shard_map/halo engines every mesh axis is manual, so bare-P
+        # constraints cannot apply there.
+        cfg_on_pod = "pod" in mesh.axis_names and lp_impl == "gspmd"
 
         def denoise(window):
             z2 = jnp.concatenate([window, window], axis=0)
@@ -160,6 +167,8 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
 
         if lp_impl == "shard_map":
             pred = lp_forward_shard_map(denoise, z, plan, 2, mesh, "data")
+        elif lp_impl == "halo":
+            pred = lp_forward_halo(denoise, z, plan, 2, mesh, "data")
         else:
             pred = lp_forward_gspmd(denoise, z, plan, 2, mesh, "data")
         return sampler.step(z, pred, 1)
@@ -228,7 +237,9 @@ def lower_cell(
         attn_seq = parallel.tp_axis
     if shape.kind == "vdm_generate" and lp_impl == "gspmd" and             cfg.num_heads % tp_size:
         attn_seq = parallel.tp_axis
-    with jax.set_mesh(mesh), actctx.batch_axes(dp_for_ctx, attn_seq=attn_seq):
+    from repro import compat
+
+    with compat.set_mesh(mesh), actctx.batch_axes(dp_for_ctx, attn_seq=attn_seq):
         if shape.kind == "train":
             train_step = make_train_step(model, parallel)
             opt_shapes = jax.eval_shape(train_step.opt_init, params_shapes)
@@ -340,7 +351,9 @@ def lower_cell(
         compiled = lowered.compile()
 
     rec["lower_compile_s"] = round(time.time() - t0, 1)
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis as _cost_analysis
+
+    ca = _cost_analysis(compiled)
     # raw XLA numbers (while bodies counted ONCE — kept for reference only)
     rec["xla_flops_body"] = float(ca.get("flops", 0.0))
     rec["memory"] = _mem_summary(compiled)
@@ -366,7 +379,8 @@ def main(argv=None) -> int:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--lp-impl", default="gspmd", choices=["gspmd", "shard_map"])
+    ap.add_argument("--lp-impl", default="gspmd",
+                    choices=["gspmd", "shard_map", "halo"])
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 

@@ -9,7 +9,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,12 +18,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     "model").  256 chips per pod (TPU v5e-256 topology)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh with Auto axis types (tests, small runs)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def local_mesh(model: int = 1, data: Optional[int] = None):

@@ -5,8 +5,14 @@ Production behaviours implemented (scaled to the container):
   * request batching by latent geometry (same (frames, res) denoise
     together — LP partitions are geometry-static, so batching avoids
     re-planning / recompiles);
-  * bounded-latency admission: a batch launches when full OR when the
-    oldest request exceeds ``max_wait_requests`` queue polls;
+  * compiled-step reuse ACROSS batches: the guided denoiser takes the
+    text context / CFG scale as traced arguments and is built once per
+    engine (not per batch), and one ``LPStepCompiler`` owns the jitted
+    step cache — the second batch of a given geometry runs with zero
+    retraces;
+  * bounded-latency admission: a batch launches when a geometry bucket is
+    full OR when the oldest request has waited ``max_wait_requests``
+    queue polls (before this, ``max_wait`` was stored but never read);
   * straggler adaptation: per-partition step-time EMAs re-plan core sizes
     (runtime/straggler.py) when imbalance exceeds the threshold;
   * failure handling: a denoise step that raises re-queues the whole
@@ -25,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import lp_denoise
-from repro.diffusion.pipeline import make_guided_denoiser
+from repro.core import LPStepCompiler, lp_denoise
+from repro.diffusion.pipeline import make_guided_step_denoiser
 from repro.diffusion.sampler import FlowMatchEuler
 from repro.runtime.straggler import StragglerState
 
@@ -73,64 +79,77 @@ class LPServingEngine:
         self.uniform = uniform
         self.straggler = StragglerState(num_partitions)
         self._queue: List[VideoRequest] = []
+        self._polls = 0
+        self._enqueued_at: Dict[int, int] = {}       # request_id -> poll no.
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
+        self._sampler = FlowMatchEuler(num_steps)
+        # Hoisted out of the batch loop: conditioning is traced, so this
+        # closure (and every step it compiles) is batch-independent.
+        self._guided = make_guided_step_denoiser(dit_forward, params, cfg)
+        self._compiler = LPStepCompiler(
+            denoise_fn=self._guided,
+            update_fn=self._sampler.update,
+            num_partitions=self.K,
+            overlap_ratio=self.r,
+            patch_sizes=cfg.patch_sizes,
+            spatial_axes=(1, 2, 3),
+            uniform=uniform,
+        )
 
     # ------------------------------------------------------------- queue
     def submit(self, req: VideoRequest) -> None:
         self._queue.append(req)
+        self._enqueued_at[req.request_id] = self._polls
 
-    def _next_batch(self) -> List[VideoRequest]:
+    def _next_batch(self, force: bool = False) -> List[VideoRequest]:
+        """Admission: full geometry bucket, aged-out oldest bucket, or
+        (``force``, used when draining) the oldest bucket regardless."""
         if not self._queue:
             return []
+        self._polls += 1
         by_shape: Dict[Tuple, List[VideoRequest]] = defaultdict(list)
         for r in self._queue:
             by_shape[r.latent_shape].append(r)
-        # launch the fullest geometry bucket; age forces launch of the
-        # oldest bucket even when underfull
-        oldest = self._queue[0].latent_shape
-        best = max(by_shape.items(), key=lambda kv: len(kv[1]))
-        batch = best[1] if len(best[1]) >= self.max_batch else by_shape[oldest]
-        batch = batch[: self.max_batch]
+        batch: List[VideoRequest] = []
+        for bucket in by_shape.values():
+            if len(bucket) >= self.max_batch:
+                batch = bucket[: self.max_batch]
+                break
+        if not batch:
+            oldest = self._queue[0]
+            age = self._polls - self._enqueued_at.get(
+                oldest.request_id, self._polls
+            )
+            if force or age >= self.max_wait:
+                batch = by_shape[oldest.latent_shape][: self.max_batch]
+            else:
+                return []
+        chosen = {id(r) for r in batch}
+        self._queue = [r for r in self._queue if id(r) not in chosen]
         for r in batch:
-            self._queue.remove(r)
+            self._enqueued_at.pop(r.request_id, None)
         return batch
 
     # ------------------------------------------------------------ serving
     def _denoise_batch(self, reqs: List[VideoRequest]) -> List[VideoResult]:
         t0 = time.time()
         shape = reqs[0].latent_shape
-        B = len(reqs)
         ctx = jnp.concatenate([r.context for r in reqs], axis=0)
         null_ctx = jnp.zeros_like(ctx)
-        guided = make_guided_denoiser(
-            self.dit_forward, self.params, self.cfg, ctx, null_ctx,
-            guidance=reqs[0].guidance,
-        )
+        guidance = jnp.float32(reqs[0].guidance)
         keys = [jax.random.PRNGKey(r.seed) for r in reqs]
         z_T = jnp.concatenate([
             jax.random.normal(k, (1, *shape, self.cfg.latent_channels))
             for k in keys
         ], axis=0)
 
-        step_counter = {"i": 0}
-        fault = self._step_fault
-
-        def den_for_step(i, dim):
-            def fn(sub):
-                if fault is not None:
-                    fault(i)
-                step_counter["i"] = i
-                t = jnp.full((sub.shape[0],), self._sampler.timestep(i),
-                             jnp.float32)
-                return guided(sub, t)
-            return fn
-
-        self._sampler = FlowMatchEuler(self.num_steps)
+        # a step hook disables scan fusion, so only install one when a
+        # fault injector is actually registered
         z0 = lp_denoise(
-            den_for_step, z_T,
-            lambda z, pred, i: self._sampler.step(z, pred, i),
-            self.num_steps, self.K, self.r,
+            None, z_T, self._sampler, self.num_steps, self.K, self.r,
             self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
+            extras=(ctx, null_ctx, guidance), compiler=self._compiler,
+            step_hook=self._step_fault,
         )
         wall = time.time() - t0
         return [
@@ -144,7 +163,8 @@ class LPServingEngine:
         out: List[VideoResult] = []
         batches = 0
         while self._queue and (max_batches is None or batches < max_batches):
-            reqs = self._next_batch()
+            # draining: don't wait out the admission age, force-launch
+            reqs = self._next_batch(force=True)
             if not reqs:
                 break
             restarts = 0

@@ -97,9 +97,9 @@ def test_seq_parallel_decode_attention_multidevice():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import seq_parallel_decode_attention
         from repro.models.attention import attention_dense
+        from repro import compat
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         B, S, H, KV, D = 2, 64, 8, 4, 16
         q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
@@ -112,7 +112,7 @@ def test_seq_parallel_decode_attention_multidevice():
             # GQA layout: repeat q heads into kv grouping handled inside
             return seq_parallel_decode_attention(q, kl, vl, pl_, posn, "data")
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             per_shard, mesh=mesh,
             in_specs=(P(), P(None, "data"), P(None, "data"),
                       P(None, "data"), P()),
@@ -128,6 +128,6 @@ def test_seq_parallel_decode_attention_multidevice():
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, cwd="/root/repo",
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                         timeout=300)
+                         timeout=580)
     assert res.returncode == 0, res.stderr
     assert "OK" in res.stdout

@@ -1,0 +1,250 @@
+"""Fast LP step: halo-exchange collective, compiled-step cache, Pallas
+blend wiring, and the halo comm model vs measured HLO bytes."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LPStepCompiler,
+    comm_model as cm,
+    lp_denoise,
+    lp_denoise_reference,
+    plan_uniform,
+)
+from repro.core.spmd import blend_windows, stack_windows
+from repro.diffusion.sampler import FlowMatchEuler
+
+
+# ------------------------------------------------------- compiled-step cache
+def _sched_z(shape=(1, 8, 8, 12, 4), seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def test_compiled_cache_traces_once_per_rotation_dim():
+    """T=20 steps over 3 rotation dims must trace the denoiser <= 3 times."""
+    z = _sched_z()
+    sampler = FlowMatchEuler(20)
+    traces = {"n": 0}
+
+    def den(w, t):
+        traces["n"] += 1  # Python side effect: fires only while tracing
+        return jnp.tanh(w) * 0.1 + w * 0.01 * t / 1000.0
+
+    comp = LPStepCompiler(den, sampler.update, 2, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True)
+    out = lp_denoise(None, z, sampler, 20, 2, 0.5, (1, 2, 2), (1, 2, 3),
+                     uniform=True, compiler=comp)
+    assert traces["n"] <= 3, f"denoiser traced {traces['n']} times"
+    assert comp.compiles <= 3 and comp.hits >= 17, (comp.compiles, comp.hits)
+    assert np.isfinite(np.asarray(out)).all()
+
+    # same-geometry re-run: fully cache-served
+    before = comp.compiles
+    lp_denoise(None, z, sampler, 20, 2, 0.5, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp)
+    assert comp.compiles == before
+
+
+def test_compiled_cache_single_dim_fuses_to_one_scan():
+    """Only one usable dim -> the whole run is one lax.scan, one compile."""
+    z = _sched_z(shape=(1, 8, 2, 2, 3))
+    sampler = FlowMatchEuler(20)
+
+    def den(w, t):
+        return jnp.tanh(w) * 0.1
+
+    comp = LPStepCompiler(den, sampler.update, 2, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True)
+    lp_denoise(None, z, sampler, 20, 2, 0.5, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp)
+    assert comp.compiles == 1, comp.compiles
+
+
+@pytest.mark.parametrize("uniform", [False, True])
+def test_compiled_matches_reference_loop(uniform):
+    z = _sched_z(seed=3)
+    sampler = FlowMatchEuler(5)
+
+    def den(w, t):
+        tv = jnp.reshape(t, (-1,) + (1,) * (w.ndim - 1))[:1]
+        return jnp.tanh(w) * 0.3 + 1e-4 * tv
+
+    def den_for_step(i, dim):
+        t_val = sampler.timestep(i)
+
+        def fn(sub):
+            t = jnp.full((sub.shape[0],), t_val, jnp.float32)
+            return den(sub, t)
+
+        return fn
+
+    ref = lp_denoise_reference(
+        den_for_step, z, lambda zz, p, i: sampler.step(zz, p, i),
+        5, 2, 0.5, (1, 2, 2), (1, 2, 3), uniform=uniform,
+    )
+    fast = lp_denoise(
+        lambda w, t: den(w, jnp.full((w.shape[0],), t, jnp.float32)),
+        z, sampler, 5, 2, 0.5, (1, 2, 2), (1, 2, 3), uniform=uniform,
+    )
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref), atol=1e-5)
+
+
+def test_donation_does_not_eat_callers_latent():
+    z = _sched_z(seed=4)
+    sampler = FlowMatchEuler(3)
+    lp_denoise(lambda w, t: jnp.tanh(w), z, sampler, 3, 2, 0.5,
+               (1, 2, 2), (1, 2, 3), uniform=True)
+    assert np.isfinite(np.asarray(z)).all()  # would raise if donated away
+
+
+# ------------------------------------------------------------ Pallas blend
+@pytest.mark.parametrize("axis,shape", [
+    (0, (26, 5, 13)),     # rest product 65: not a multiple of any blk
+    (1, (3, 26, 7)),
+])
+def test_blend_windows_kernel_matches_jnp(axis, shape):
+    rng = np.random.default_rng(7)
+    z = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    plan = plan_uniform(26, 2, 4, 1.0)
+    preds = stack_windows(z, plan, axis) * 1.3 + 0.1
+    ref = blend_windows(preds, plan, axis, use_kernel=False)
+    out = blend_windows(preds, plan, axis, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------- comm model
+def test_comm_lp_halo_beats_psum_on_benchmark_configs():
+    for frames in (49, 81):
+        cfg = cm.wan21_comm_config(frames)
+        for K in (4, 8):
+            for r in (0.25, 0.5, 1.0):
+                halo = cm.comm_lp_halo(cfg, K, r)
+                spmd = cm.comm_lp_spmd(cfg, K, r)
+                assert halo < spmd, (frames, K, r, halo, spmd)
+
+
+def test_collective_wire_bytes_conversions():
+    assert cm.collective_wire_bytes("all-reduce", 100.0, 4) == 150.0
+    assert cm.collective_wire_bytes("all-gather", 100.0, 4) == 75.0
+    assert cm.collective_wire_bytes("collective-permute", 100.0, 4) == 100.0
+
+
+# --------------------------------------------------- multi-device (slow)
+HALO_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.core import comm_model as cm
+    from repro.core import plan_uniform
+    from repro.core.lp_step import lp_forward_uniform
+    from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
+
+    mesh = compat.make_mesh((4,), ("data",))
+    rng = np.random.default_rng(0)
+
+    def denoise(x):
+        return jnp.tanh(x) * 0.5 + x
+
+    # bit-accuracy across engines, several geometries incl. edge-clamped r=1
+    for extent, patch, r, axis, shp in [
+        (26, 2, 1.0, 0, (26, 6, 4)),
+        (26, 2, 0.5, 0, (26, 6, 4)),
+        (13, 1, 1.0, 0, (13, 8, 2)),
+        (24, 2, 0.25, 1, (3, 24, 5)),
+    ]:
+        z = jnp.asarray(rng.normal(size=shp).astype(np.float32))
+        plan = plan_uniform(extent, patch, 4, r)
+        ref = lp_forward_uniform(denoise, z, plan, axis=axis)
+        halo = jax.jit(lambda zz: lp_forward_halo(denoise, zz, plan, axis, mesh))(z)
+        psum = jax.jit(lambda zz: lp_forward_shard_map(denoise, zz, plan, axis, mesh))(z)
+        np.testing.assert_allclose(np.asarray(halo), np.asarray(ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(psum), np.asarray(ref), atol=1e-5)
+
+    # collective schedule: no all-reduce; analytic bytes match measured HLO
+    r = 0.5
+    z = jnp.asarray(rng.normal(size=(26, 6, 4)).astype(np.float32))
+    plan = plan_uniform(26, 2, 4, r)
+    hlo = jax.jit(
+        lambda zz: lp_forward_halo(denoise, zz, plan, 0, mesh)
+    ).lower(z).compile().as_text()
+    a = analyze(hlo)
+    assert "all-reduce" not in a.collective_bytes, a.collective_bytes
+    ccfg = cm.VDMCommConfig(
+        latent_dims=(26, 6, 4), latent_channels=1, patch_sizes=(2, 1, 1),
+        d_model=1, num_blocks=1, num_steps=1,
+    )
+    want = cm.lp_halo_step_collectives(ccfg, 4, r, dim=0)
+    for kind in ("all-gather", "collective-permute"):
+        got = a.collective_bytes.get(kind, 0)
+        assert abs(got - want[kind]) <= 0.10 * want[kind], (kind, got, want)
+
+    # and the psum engine's all-reduce really is latent-sized for contrast
+    hlo_psum = jax.jit(
+        lambda zz: lp_forward_shard_map(denoise, zz, plan, 0, mesh)
+    ).lower(z).compile().as_text()
+    ap = analyze(hlo_psum)
+    s_z = z.size * 4
+    assert ap.collective_bytes.get("all-reduce", 0) >= s_z, ap.collective_bytes
+
+    # wire-byte comparison (ring accounting): the halo schedule must move
+    # fewer bytes across the group than one latent-sized all-reduce even
+    # on this tiny toy extent
+    from repro.distributed.collectives import halo_spec
+    spec = halo_spec(plan)
+    row = z.size // plan.extent * 4
+    K = 4
+    halo_wire = K * (K - 1) * spec.core_pad * row + sum(
+        len(t.perm) * t.length * row for t in spec.transfers)
+    psum_wire = 2 * (K - 1) * s_z
+    assert halo_wire < psum_wire, (halo_wire, psum_wire)
+    print("OK", int(halo_wire), int(psum_wire))
+    """
+)
+
+
+@pytest.mark.slow
+def test_halo_multidevice_accuracy_and_bytes():
+    res = subprocess.run(
+        [sys.executable, "-c", HALO_SCRIPT],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+        timeout=580,  # multi-device XLA compiles crawl on tiny CPU quotas
+    )
+    assert res.returncode == 0, f"stdout={res.stdout}\nstderr={res.stderr}"
+    assert "OK" in res.stdout
+
+
+# ----------------------------------------------------------- serving engine
+def test_next_batch_bounded_latency_admission():
+    from repro.configs import get_config
+    from repro.serving.engine import LPServingEngine, VideoRequest
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    eng = LPServingEngine(None, None, cfg, num_partitions=2, max_batch=2,
+                          max_wait_requests=3)
+    ctx = jnp.zeros((1, 4, cfg.context_dim), jnp.float32)
+    eng.submit(VideoRequest(0, ctx, (4, 8, 12)))
+    eng.submit(VideoRequest(1, ctx, (6, 8, 12)))
+    # neither bucket full, nothing aged out yet -> admission waits
+    assert eng._next_batch() == []
+    assert eng._next_batch() == []
+    # third poll: oldest request hits max_wait -> its bucket launches
+    batch = eng._next_batch()
+    assert [r.request_id for r in batch] == [0]
+    # full bucket launches immediately regardless of age
+    eng.submit(VideoRequest(2, ctx, (6, 8, 12)))
+    batch = eng._next_batch()
+    assert sorted(r.request_id for r in batch) == [1, 2]
+    assert eng._queue == []

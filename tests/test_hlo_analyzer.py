@@ -6,11 +6,12 @@ import numpy as np
 import pytest
 
 from repro.analysis.hlo_analyzer import analyze
+from repro.compat import cost_analysis
 
 
 def _flops_xla(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    return c.cost_analysis().get("flops", 0.0), c.as_text()
+    return cost_analysis(c).get("flops", 0.0), c.as_text()
 
 
 def test_single_matmul():
@@ -89,7 +90,7 @@ def test_model_forward_matches_unrolled_xla():
         unrolled = jax.jit(model.loss).lower(params, batch).compile()
     finally:
         scan_util.set_unroll(False)
-    ref_total = unrolled.cost_analysis().get("flops", 0.0)
+    ref_total = cost_analysis(unrolled).get("flops", 0.0)
     a_rolled = analyze(rolled_hlo)
     a_unrolled = analyze(unrolled.as_text())
     assert a_rolled.flops == pytest.approx(a_unrolled.flops, rel=0.02), \
@@ -111,15 +112,15 @@ def test_collectives_inside_while_multiply():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.analysis.hlo_analyzer import analyze
-        mesh = jax.make_mesh((4,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((4,), ("x",))
         def f(v):
             def body(c, _):
                 return c + jax.lax.psum(c, "x"), None
             out, _ = jax.lax.scan(body, v, None, length=7)
             return out
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                           check_vma=False)
+        sm = compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                              check_vma=False)
         hlo = jax.jit(sm).lower(
             jax.ShapeDtypeStruct((128,), jnp.float32)).compile().as_text()
         a = analyze(hlo)

@@ -70,6 +70,22 @@ def test_engine_requeues_failed_batch():
     assert np.isfinite(np.asarray(results[0].latent, np.float32)).all()
 
 
+def test_engine_reuses_compiled_steps_across_batches():
+    """Second batch of the same geometry must hit the compiled-step cache
+    (no retrace): conditioning is traced, not baked into closures."""
+    cfg, eng = _engine(num_steps=2, max_batch=1)
+    eng.submit(_req(cfg, 0))
+    eng.run()
+    compiles_after_first = eng._compiler.compiles
+    assert compiles_after_first >= 1
+    eng.submit(_req(cfg, 1))
+    eng.submit(_req(cfg, 2))
+    results = eng.run()
+    assert len(results) == 2
+    assert eng._compiler.compiles == compiles_after_first
+    assert eng._compiler.hits > 0
+
+
 def test_engine_determinism_across_batching():
     """A request's output must not depend on which batch it rode in —
     but CFG context batching means same-seed requests in one batch are
