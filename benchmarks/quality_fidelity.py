@@ -1,12 +1,45 @@
 """§5.2 quality parity: exactness with a local denoiser + DiT divergence
-statistics (the VBench proxy; see DESIGN.md §6)."""
+statistics (the VBench proxy; see DESIGN.md §6) + the wire-codec quality
+gate (lossy halo exchange must stay within serving tolerance)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import LPStepCompiler, lp_denoise
 from repro.diffusion import FlowMatchEuler, generate_centralized, generate_lp
-from .common import divergence, lp_vs_centralized
+from .common import divergence, lp_vs_centralized, reduced_dit_denoiser
+
+CODEC_PSNR_GATE_DB = 40.0  # int8-residual must stay above this vs exact
+
+
+def codec_gate(steps=4, K=2, r=0.5, print_csv=True):
+    """Wire-codec quality gate on the reduced DiT: the int8-residual
+    halo path must reconstruct within CODEC_PSNR_GATE_DB of the exact
+    fp32 path (bf16 is reported alongside as the near-lossless bound)."""
+    den, z_T, cfg = reduced_dit_denoiser(3, latent=(6, 8, 12))
+    sampler = FlowMatchEuler(steps)
+
+    def den_fast(w, t):
+        return den(w, jnp.full((w.shape[0],), t, jnp.float32))
+
+    outs = {}
+    for name in ("fp32", "bf16", "int8-residual"):
+        comp = LPStepCompiler(den_fast, sampler.update, K, r,
+                              cfg.patch_sizes, (1, 2, 3), uniform=True,
+                              codec=name)
+        outs[name] = lp_denoise(None, z_T, sampler, steps, K, r,
+                                cfg.patch_sizes, (1, 2, 3), uniform=True,
+                                compiler=comp)
+    gates = {}
+    for name in ("bf16", "int8-residual"):
+        d = divergence(outs[name], outs["fp32"])
+        gates[name] = d
+        if print_csv:
+            print(f"quality/codec_{name},0,rel_l2={d['rel_l2']:.5f} "
+                  f"psnr={d['psnr_db']:.1f}dB")
+    assert gates["int8-residual"]["psnr_db"] >= CODEC_PSNR_GATE_DB, gates
+    return gates
 
 
 def run(print_csv=True):
@@ -26,6 +59,7 @@ def run(print_csv=True):
     if print_csv:
         print(f"quality/dit_divergence,0,rel_l2={d['rel_l2']:.4f} "
               f"psnr={d['psnr_db']:.1f}dB")
+    d["codec_gates"] = codec_gate(print_csv=print_csv)
     return d
 
 

@@ -19,6 +19,7 @@ from . import (
     step_latency,
     table1_comm,
     table2_latency,
+    wire_codec,
 )
 
 ALL = {
@@ -30,6 +31,7 @@ ALL = {
     "fig10": fig10_rotation_ablation.run,
     "quality": quality_fidelity.run,
     "step_latency": step_latency.run,
+    "wire_codec": wire_codec.run,
 }
 
 

@@ -69,7 +69,8 @@ def _measured_comm():
     res = subprocess.run(
         [sys.executable, "-c", _COMM_SCRIPT],
         capture_output=True, text=True, cwd=".",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
         timeout=300,
     )
     for line in res.stdout.splitlines():

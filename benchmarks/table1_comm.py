@@ -30,6 +30,10 @@ def rows():
             "LP r=0.5": cm.comm_lp_measured(cfg, 4, 0.5),
             "LP-SPMD (ours)": cm.comm_lp_spmd(cfg, 4, 0.5),
             "LP-halo (ours)": cm.comm_lp_halo(cfg, 4, 0.5),
+            "LP-halo bf16 (ours)": cm.comm_lp_halo_codec(cfg, 4, 0.5, "bf16"),
+            "LP-halo int8 (ours)": cm.comm_lp_halo_codec(cfg, 4, 0.5, "int8"),
+            "LP-halo int8-res (ours)": cm.comm_lp_halo_codec(
+                cfg, 4, 0.5, "int8-residual"),
         }
         for method, bytes_ in ours.items():
             paper = PAPER.get((frames, method))

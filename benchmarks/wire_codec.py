@@ -1,0 +1,197 @@
+"""Wire-codec benchmark -> BENCH_wire_codec.json.
+
+Per codec (fp32 / bf16 / int8 / int4 / int8-residual):
+
+1. **wire bytes** — analytic per-step bytes of the codec'd halo engine
+   (``comm_model.comm_lp_halo_codec``) on the wan21 smoke geometry
+   (49-frame 480p latent, K=4, r=0.5), cross-checked against
+   trip-count-aware HLO measurements of the engine compiled for a 4-way
+   CPU mesh in a subprocess (the device-count XLA flag must not leak);
+2. **step latency** — warm per-step wall time of the compiled LP loop on
+   the reduced WAN DiT, codec round-trips included
+   (``comm.wire.simulate_halo_forward`` through ``LPStepCompiler``);
+3. **reconstruction PSNR** — final-latent divergence vs the exact fp32
+   path for the same seeds/steps (the §5.2 proxy).
+
+Gates (the PR's acceptance bar): int8-residual moves >= 3.5x fewer
+wire bytes than the fp32 halo path, with PSNR >= 40 dB.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LPStepCompiler, lp_denoise
+from repro.core import comm_model as cm
+from repro.diffusion import FlowMatchEuler
+
+from .common import divergence, reduced_dit_denoiser
+
+CODECS = ("fp32", "bf16", "int8", "int4", "int8-residual")
+STEPS = 6
+R = 0.5
+OUT_JSON = "BENCH_wire_codec.json"
+
+_COMM_SCRIPT = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import plan_uniform
+    from repro.core.spmd import lp_forward_halo
+    from repro.distributed.collectives import halo_spec
+
+    mesh = compat.make_mesh((4,), ("data",))
+    # wan21 smoke latent geometry (13, 60, 104, 16), partitioned on height
+    z = jnp.zeros((13, 60, 104, 16), jnp.float32)
+    plan = plan_uniform(60, 2, 4, 0.5, dim=1)
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+    out = {}
+    for name in %s:
+        codec = get_codec(name)
+        if codec.stateful:
+            st = init_halo_wire_state(
+                codec, halo_spec(plan),
+                tuple(s for i, s in enumerate(z.shape) if i != 1))
+            fn = jax.jit(lambda zz, s: lp_forward_halo(
+                den, zz, plan, 1, mesh, codec=codec, codec_state=s)[0])
+            hlo = fn.lower(z, st).compile().as_text()
+        elif name == "fp32":
+            fn = jax.jit(lambda zz: lp_forward_halo(den, zz, plan, 1, mesh))
+            hlo = fn.lower(z).compile().as_text()
+        else:
+            fn = jax.jit(lambda zz: lp_forward_halo(
+                den, zz, plan, 1, mesh, codec=codec))
+            hlo = fn.lower(z).compile().as_text()
+        a = analyze(hlo)
+        out[name] = {k: float(v) for k, v in a.collective_bytes.items()}
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def _measured_comm(codecs):
+    """Per-device collective payloads (HLO accounting) of one codec'd
+    halo LP step per codec, on 4 fake CPU devices in a subprocess."""
+    res = subprocess.run(
+        [sys.executable, "-c", _COMM_SCRIPT % repr(tuple(codecs))],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        timeout=560,
+    )
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[len("JSON:"):])
+    return {"error": res.stderr[-500:]}
+
+
+def run(print_csv=True, measure_hlo=True):
+    den, z_T, cfg = reduced_dit_denoiser(0, latent=(6, 8, 12))
+    sampler = FlowMatchEuler(STEPS)
+
+    def den_fast(w, t):
+        tv = jnp.full((w.shape[0],), t, jnp.float32)
+        return den(w, tv)
+
+    # ---- latency + PSNR on the reduced DiT (simulate-halo engine)
+    quality = {}
+    for K in (2, 4):
+        exact = None
+        for name in CODECS:
+            comp = LPStepCompiler(
+                den_fast, sampler.update, K, R, cfg.patch_sizes, (1, 2, 3),
+                uniform=True, codec=name,
+            )
+
+            def loop():
+                return lp_denoise(None, z_T, sampler, STEPS, K, R,
+                                  cfg.patch_sizes, (1, 2, 3), uniform=True,
+                                  compiler=comp)
+
+            jax.block_until_ready(loop())          # compile
+            t0 = time.perf_counter()
+            z0 = loop()
+            jax.block_until_ready(z0)
+            step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+            if name == "fp32":
+                exact = z0
+                div = {"rel_l2": 0.0, "psnr_db": float("inf")}
+            else:
+                div = divergence(z0, exact)
+            quality[f"{name}/K{K}"] = {
+                "step_ms": step_ms,
+                "compiles": comp.compiles,
+                **div,
+            }
+
+    # ---- wire bytes: analytic model on the wan21 smoke geometry
+    ccfg = cm.wan21_comm_config(49, num_steps=1)
+    K = 4
+    fp32_wire = cm.comm_lp_halo(ccfg, K, R)
+    bytes_rec = {}
+    for name in CODECS:
+        wire = (fp32_wire if name == "fp32"
+                else cm.comm_lp_halo_codec(ccfg, K, R, name))
+        bytes_rec[name] = {
+            "wire_bytes_per_step": wire,
+            "reduction_vs_fp32_halo": fp32_wire / wire,
+            "hlo_modeled_height_step": cm.lp_halo_codec_step_collectives(
+                ccfg, K, R, dim=1, codec=name
+            ),
+        }
+
+    measured = _measured_comm(CODECS) if measure_hlo else {}
+
+    record = {
+        "config": "wan21_dit_1p3b reduced / wan21 49f smoke geometry",
+        "num_steps": STEPS,
+        "overlap_ratio": R,
+        "quality_latency": quality,
+        "comm_modeled": bytes_rec,
+        "comm_measured_per_device": measured,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    # ---- gates
+    red = bytes_rec["int8-residual"]["reduction_vs_fp32_halo"]
+    psnr = min(quality["int8-residual/K2"]["psnr_db"],
+               quality["int8-residual/K4"]["psnr_db"])
+    assert red >= 3.5, f"int8-residual wire reduction {red:.2f}x < 3.5x"
+    assert psnr >= 40.0, f"int8-residual PSNR {psnr:.1f} dB < 40 dB"
+    if isinstance(measured, dict) and "error" not in measured:
+        for name in ("bf16", "int8"):
+            want = bytes_rec[name]["hlo_modeled_height_step"]
+            got = measured.get(name, {})
+            for kind in ("all-gather", "collective-permute"):
+                g, w = got.get(kind, 0), want[kind]
+                assert abs(g - w) <= 0.02 * w, (name, kind, g, w)
+
+    if print_csv:
+        for key, q in quality.items():
+            print(f"wire_codec/{key},{q['step_ms']*1e3:.0f},"
+                  f"psnr={q['psnr_db']:.1f}dB compiles={q['compiles']}")
+        for name, b in bytes_rec.items():
+            print(f"wire_codec/bytes/{name},0,"
+                  f"per_step={b['wire_bytes_per_step']/2**20:.2f}MB "
+                  f"reduction={b['reduction_vs_fp32_halo']:.2f}x")
+        if isinstance(measured, dict) and "error" not in measured:
+            print("wire_codec/hlo_match,0,modeled==measured for "
+                  + ",".join(k for k in measured))
+        print(f"wire_codec/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

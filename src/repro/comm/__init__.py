@@ -1,0 +1,41 @@
+"""Wire-codec subsystem: pluggable (lossy) compression for LP collectives.
+
+The paper's thesis is that LP wins by shrinking wire bytes; the halo
+engine (PR 1) already reduced reconstruction to overlap-slab ppermutes +
+a core all-gather, so the remaining bytes on the wire ARE those payloads.
+This package multiplies that win by compressing them:
+
+  * ``codecs``   — the :class:`Codec` protocol and the stock codecs
+                   (identity/fp32, bf16, int8, int4 — per-slab-scaled).
+  * ``residual`` — temporal-delta coding with error feedback: send only
+                   the quantized *residual* vs the previous timestep's
+                   decoded slab (halo slabs change slowly across the
+                   fused ``lax.scan`` steps of one rotation dim).
+  * ``wire``     — ``compressed_halo_exchange`` / ``compressed_core_gather``
+                   (the SPMD collectives) and ``simulate_halo_forward``
+                   (a bit-faithful single-process mirror used by quality
+                   benchmarks and by the serving engine off-mesh).
+
+Byte accounting lives in ``core/comm_model.comm_lp_halo_codec`` and is
+cross-checked against ``analysis/hlo_analyzer`` on compiled HLO.
+"""
+from .codecs import (  # noqa: F401
+    Bf16Codec,
+    Codec,
+    CODEC_NAMES,
+    IdentityCodec,
+    IntCodec,
+    get_codec,
+)
+from .residual import (  # noqa: F401
+    ResidualCodec,
+    ef_roundtrip,
+    residual_decode,
+    residual_encode,
+)
+from .wire import (  # noqa: F401
+    compressed_core_gather,
+    compressed_halo_exchange,
+    init_halo_wire_state,
+    simulate_halo_forward,
+)

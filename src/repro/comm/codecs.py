@@ -1,0 +1,188 @@
+"""Wire codecs: encode an array into a compact wire dtype (+ tiny meta)
+and decode it back to the compute dtype.
+
+Design rules (all consequences of running inside jit/shard_map/scan):
+
+  * **Static shapes** — ``encode`` maps (shape, f32) -> (wire_shape,
+    wire_dtype) deterministically; ``decode`` takes the *logical* decoded
+    shape because packing codecs (int4) change the stored shape.
+  * **Per-slab scale** — quantizers use one max-abs scale per message,
+    shaped ``(1,) * ndim`` so it broadcasts anywhere and survives
+    ``ppermute`` / ``all_gather`` unchanged.  ``meta`` is a (possibly
+    empty) tuple of such arrays; every leaf crosses the wire next to the
+    payload and is charged in the byte model.
+  * **Zero maps to zero** — a masked (all-zero) slab encodes to a
+    zero wire and decodes to exactly zero, so the halo schedule's
+    "no peer at this offset" ranks stay silent through any codec.
+
+``get_codec`` resolves CLI names: fp32 (exact), bf16, int8, int4, and
+the ``*-residual`` temporal-delta variants from :mod:`.residual`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple, Union
+
+import jax.numpy as jnp
+
+Meta = Tuple[jnp.ndarray, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Protocol + shared accounting. Subclasses implement encode/decode."""
+
+    name: str = "identity"
+    bits: float = 32.0          # wire bits per logical element
+    meta_bytes: int = 0         # scale payload per message, bytes
+    stateful: bool = False      # True => needs carry state (residual)
+
+    # ------------------------------------------------------------ protocol
+    def encode(self, x: jnp.ndarray) -> Tuple[jnp.ndarray, Meta]:
+        raise NotImplementedError
+
+    def decode(self, wire: jnp.ndarray, meta: Meta,
+               shape: Tuple[int, ...]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- accounting
+    def wire_bytes(self, n_elems: int) -> int:
+        """Analytic bytes of one message of ``n_elems`` logical elements
+        (payload + meta) — must agree with the compiled HLO output shapes
+        (cross-checked in comm_model/hlo_analyzer tests)."""
+        return int(math.ceil(n_elems * self.bits / 8)) + self.meta_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(Codec):
+    """fp32 passthrough — the exact baseline path, zero meta."""
+
+    name: str = "fp32"
+    bits: float = 32.0
+
+    def encode(self, x):
+        return x.astype(jnp.float32), ()
+
+    def decode(self, wire, meta, shape):
+        return wire.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(Codec):
+    """bf16 wire: halves bytes, keeps fp32 dynamic range, no meta.
+
+    The payload is bitcast to u16 so the 2-byte message survives XLA's
+    algebraic simplifier — a raw ``convert`` pair around a collective
+    gets commuted across it (``ppermute(bf16(x))`` -> f32 permute + a
+    local round-trip), silently restoring full-width transfers.
+    """
+
+    name: str = "bf16"
+    bits: float = 16.0
+
+    def encode(self, x):
+        import jax
+
+        return jax.lax.bitcast_convert_type(
+            x.astype(jnp.bfloat16), jnp.uint16
+        ), ()
+
+    def decode(self, wire, meta, shape):
+        import jax
+
+        return jax.lax.bitcast_convert_type(wire, jnp.bfloat16).astype(
+            jnp.float32
+        )
+
+
+def _scale_of(x: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """(1,)*ndim max-abs scale; tiny floor so all-zero slabs stay exact."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return (jnp.maximum(amax, 1e-20) / qmax).reshape((1,) * x.ndim)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntCodec(Codec):
+    """Per-slab-scaled symmetric integer quantizer (int8 or packed int4).
+
+    int8: wire int8 in [-127, 127], scale = max|x| / 127.
+    int4: wire int8 with TWO 4-bit codes per byte, packed along the last
+    axis (channels); codes in [-7, 7], scale = max|x| / 7.  An odd last
+    dim is zero-padded before packing and sliced off on decode.
+    """
+
+    name: str = "int8"
+    bits: float = 8.0
+    meta_bytes: int = 4
+
+    @property
+    def qmax(self) -> int:
+        return 127 if self.bits == 8 else 7
+
+    def encode(self, x):
+        scale = _scale_of(x, self.qmax)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                     -self.qmax, self.qmax).astype(jnp.int32)
+        if self.bits == 8:
+            return q.astype(jnp.int8), (scale,)
+        # int4: pack adjacent pairs of the last axis into one byte
+        c = x.shape[-1]
+        if c % 2:
+            q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+        lo = q[..., 0::2] & 0xF
+        hi = (q[..., 1::2] & 0xF) << 4
+        return (lo | hi).astype(jnp.int8), (scale,)
+
+    def decode(self, wire, meta, shape):
+        (scale,) = meta
+        if self.bits == 8:
+            return wire.astype(jnp.float32) * scale
+        p = wire.astype(jnp.int32)
+        lo = ((p & 0xF) ^ 8) - 8
+        hi = (((p >> 4) & 0xF) ^ 8) - 8
+        q = jnp.stack([lo, hi], axis=-1).reshape(
+            wire.shape[:-1] + (2 * wire.shape[-1],)
+        )[..., : shape[-1]]
+        return q.astype(jnp.float32) * scale
+
+    def wire_bytes(self, n_elems: int) -> int:
+        # packing is along the channel axis; for even channel counts this
+        # ceil is exact, and wan21 latents have C=16
+        return int(math.ceil(n_elems * self.bits / 8)) + self.meta_bytes
+
+
+def int4_wire_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Stored shape of an int4-packed message of logical ``shape``."""
+    return shape[:-1] + ((shape[-1] + 1) // 2,)
+
+
+CODEC_NAMES = ("fp32", "bf16", "int8", "int4", "int8-residual",
+               "int4-residual")
+
+
+def get_codec(name: Union[str, Codec, None]) -> Codec:
+    """Resolve a CLI name (or pass a Codec through). ``None`` => fp32."""
+    if name is None:
+        return IdentityCodec()
+    if isinstance(name, Codec):
+        return name
+    base = {
+        "identity": IdentityCodec(),
+        "fp32": IdentityCodec(),
+        "bf16": Bf16Codec(),
+        "int8": IntCodec(name="int8", bits=8.0),
+        "int4": IntCodec(name="int4", bits=4.0),
+    }
+    if name in base:
+        return base[name]
+    if name.endswith("-residual"):
+        from .residual import ResidualCodec
+
+        inner = name[: -len("-residual")]
+        if inner in base and base[inner].meta_bytes:
+            return ResidualCodec(base=base[inner], name=name)
+        raise ValueError(
+            f"residual coding needs a quantizing base codec, got {inner!r}"
+        )
+    raise ValueError(f"unknown wire codec {name!r}; know {CODEC_NAMES}")

@@ -1,0 +1,348 @@
+"""Codec-aware LP collectives + a bit-faithful single-process mirror.
+
+Two SPMD building blocks (called per-device, inside shard_map):
+
+  * :func:`compressed_halo_exchange` — wraps
+    ``distributed/collectives.halo_exchange``: same transfer schedule,
+    but each slab crosses the wire through a :class:`~.codecs.Codec`
+    (wire payload + per-slab scale meta per ppermute round).
+  * :func:`compressed_core_gather` — the core-slice all-gather with the
+    same codec (each rank quantizes its normalized core; wire + scales
+    are gathered and decoded locally).
+
+Residual codecs thread explicit state (previous decoded slabs + error
+carries, see :mod:`.residual`); the state is created by
+:func:`init_halo_wire_state` with a leading lp-axis dim so shard_map can
+slice it per rank, and it rides the caller's ``lax.scan`` carry.
+
+:func:`simulate_halo_forward` replays the exact same arithmetic on a
+single device (static Python loop over ranks): used by the serving
+engine when no mesh is attached, by quality/PSNR benchmarks, and by
+tests as the oracle for the SPMD path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.collectives import HaloSpec, halo_spec
+
+from .codecs import Codec, get_codec
+from .residual import ResidualCodec, residual_decode, residual_encode
+
+WireState = Dict[str, Any]
+
+
+def init_halo_wire_state(codec, spec: HaloSpec,
+                         rest_shape: Tuple[int, ...]) -> WireState:
+    """Zeroed codec state for one halo-LP geometry.
+
+    Every leaf has a leading ``K`` dim (the lp axis) so shard_map slices
+    one rank's state with ``P(lp_axis)``; ``simulate_halo_forward``
+    indexes the same leaves with Python rank ints.  ``ag_prev`` is the
+    decoded gathered-core table — identical on every rank by
+    construction, kept per-rank (K, K, ...) so the layout is uniform.
+    Stateless codecs get an empty dict (still scan-carry compatible).
+    """
+    codec = get_codec(codec)
+    if not codec.stateful:
+        return {}
+    K = spec.num_partitions
+    rest = tuple(rest_shape)
+
+    def z(shape):
+        return jnp.zeros(shape, jnp.float32)
+
+    return {
+        "pp_send": tuple(z((K, t.length) + rest) for t in spec.transfers),
+        "pp_err": tuple(z((K, t.length) + rest) for t in spec.transfers),
+        "pp_recv": tuple(z((K, t.length) + rest) for t in spec.transfers),
+        "ag_prev": z((K, K, spec.core_pad) + rest),
+        "ag_err": z((K, spec.core_pad) + rest),
+    }
+
+
+def _pin(x):
+    """Keep the encoded dtype ON the wire.
+
+    XLA's algebraic simplifier happily commutes converts across
+    collectives (``convert_f32(ppermute(bf16 x))`` becomes
+    ``ppermute(f32 x)`` + a fused round-trip), which preserves values
+    but silently restores full-width transfers.  An optimization
+    barrier on both sides of every collective pins the compact dtype to
+    the collective op — this is what makes the analytic byte model
+    (``comm_model.comm_lp_halo_codec``) match the compiled HLO.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _ppermute_msg(wire, meta, axis_name, perm):
+    """Ship (payload, scales) through one ppermute round."""
+    wire, meta = _pin((wire, meta))
+    got_wire = jax.lax.ppermute(wire, axis_name, perm)
+    got_meta = tuple(jax.lax.ppermute(m, axis_name, perm) for m in meta)
+    return _pin((got_wire, got_meta))
+
+
+def _gather_msg(wire, meta, axis_name):
+    """All-gather (payload, scales) with the wire dtype pinned."""
+    wire, meta = _pin((wire, meta))
+    wires = jax.lax.all_gather(wire, axis_name, axis=0, tiled=False)
+    metas = tuple(
+        jax.lax.all_gather(m, axis_name, axis=0, tiled=False) for m in meta
+    )
+    return _pin((wires, metas))
+
+
+# ----------------------------------------------------------- SPMD pieces
+def compressed_halo_exchange(
+    wpred: jnp.ndarray,
+    spec: HaloSpec,
+    rank: jnp.ndarray,
+    axis_name: str,
+    codec: Codec,
+    state: WireState,
+) -> Tuple[jnp.ndarray, WireState]:
+    """Codec twin of ``collectives.halo_exchange`` (same contract: padded
+    window-first ``wpred`` in, ``(core_pad + max_transfer, ...)`` f32
+    accumulator out), plus the updated per-rank codec state.
+
+    Each transfer round sends ``codec.encode`` of the (masked) slab —
+    for residual codecs, of the temporal delta with the EF carry — and
+    accumulates the decoded slab.  Ranks without a peer at an offset
+    send a zero slab and decode ppermute's implicit zeros to exactly
+    zero (codecs map 0 -> 0), so the schedule semantics are unchanged.
+    """
+    stateful = isinstance(codec, ResidualCodec)
+    base = codec.base if stateful else codec
+    acc_len = spec.core_pad + spec.max_transfer
+    trail = (1,) * (wpred.ndim - 1)
+    acc = jnp.zeros((acc_len,) + wpred.shape[1:], jnp.float32)
+    K = spec.num_partitions
+    new_state = dict(state) if stateful else {}
+    if stateful:
+        new_state["pp_send"] = list(state["pp_send"])
+        new_state["pp_err"] = list(state["pp_err"])
+        new_state["pp_recv"] = list(state["pp_recv"])
+    # own window -> own core (local, never coded)
+    own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
+    own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
+    acc = jax.lax.dynamic_update_slice_in_dim(
+        acc, own.astype(jnp.float32), 0, 0
+    )
+    for ti, t in enumerate(spec.transfers):
+        slab = jax.lax.dynamic_slice_in_dim(
+            wpred, jnp.asarray(t.src_start)[rank], t.length, 0
+        )
+        valid = jnp.arange(t.length) < jnp.asarray(t.src_len)[rank]
+        slab = slab * valid.reshape((t.length,) + trail).astype(slab.dtype)
+        if stateful:
+            wire, meta, n_send, n_err = residual_encode(
+                base, slab, state["pp_send"][ti], state["pp_err"][ti]
+            )
+            new_state["pp_send"][ti] = n_send
+            new_state["pp_err"][ti] = n_err
+        else:
+            wire, meta = codec.encode(slab)
+        got_wire, got_meta = _ppermute_msg(wire, meta, axis_name, t.perm)
+        if stateful:
+            got, n_recv = residual_decode(
+                base, got_wire, got_meta, state["pp_recv"][ti], slab.shape
+            )
+            new_state["pp_recv"][ti] = n_recv
+        else:
+            got = codec.decode(got_wire, got_meta, slab.shape)
+        dst = jnp.asarray(t.dst_start)[rank]
+        cur = jax.lax.dynamic_slice_in_dim(acc, dst, t.length, 0)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
+    if stateful:
+        new_state["pp_send"] = tuple(new_state["pp_send"])
+        new_state["pp_err"] = tuple(new_state["pp_err"])
+        new_state["pp_recv"] = tuple(new_state["pp_recv"])
+    return acc, new_state
+
+
+def compressed_core_gather(
+    core: jnp.ndarray,
+    rank: jnp.ndarray,
+    axis_name: str,
+    codec: Codec,
+    state: WireState,
+    num_partitions: int,
+) -> Tuple[jnp.ndarray, WireState]:
+    """All-gather of the normalized core slices through the codec.
+
+    ``core``: (core_pad, ...) f32.  Returns the decoded (K, core_pad,
+    ...) stack plus updated state.  Residual codecs delta-code against
+    ``ag_prev`` (the previous gathered table — identical on all ranks,
+    so each rank's own row doubles as its sender reference) with an EF
+    carry on the rank's own core.
+    """
+    stateful = isinstance(codec, ResidualCodec)
+    base = codec.base if stateful else codec
+    K = num_partitions
+    if not stateful:
+        wire, meta = codec.encode(core)
+        wires, metas = _gather_msg(wire, meta, axis_name)
+        return codec.decode(wires, metas, (K,) + core.shape), {}
+    corrected = core - state["ag_prev"][rank] + state["ag_err"]
+    wire, meta = base.encode(corrected)
+    wires, metas = _gather_msg(wire, meta, axis_name)
+    d_all = base.decode(wires, metas, (K,) + core.shape)
+    gathered = state["ag_prev"] + d_all
+    new_err = corrected - d_all[rank]
+    out_state = dict(state)
+    out_state["ag_prev"] = gathered
+    out_state["ag_err"] = new_err
+    return gathered, out_state
+
+
+# ---------------------------------------------------- single-process mirror
+def simulate_halo_forward(
+    denoise_fn,
+    z: jnp.ndarray,
+    plan,
+    axis: int,
+    codec=None,
+    state: Optional[WireState] = None,
+):
+    """Single-device replay of the codec'd halo-LP forward pass.
+
+    Bit-faithful to ``core/spmd.lp_forward_halo(..., codec=...)``: every
+    rank's slab is encoded with its own per-slab scale and state slice,
+    delivery follows ``halo_spec``'s exact schedule, cores are
+    normalized then round-tripped through the gather codec.  Stateless
+    codecs return just the latent; stateful ones return
+    ``(latent, new_state)`` (global-layout state, see
+    :func:`init_halo_wire_state`).
+    """
+    from repro.core.spmd import stack_windows, window_weights
+
+    codec = get_codec(codec)
+    stateful = isinstance(codec, ResidualCodec)
+    base = codec.base if stateful else codec
+    spec = halo_spec(plan)
+    K = plan.num_partitions
+    windows = stack_windows(z, plan, axis)
+    preds = jax.vmap(denoise_fn)(windows).astype(jnp.float32)
+    w = jnp.asarray(window_weights(plan))
+    wshape = [1] * preds.ndim
+    wshape[0] = K
+    wshape[axis + 1] = plan.window
+    wp = jnp.moveaxis(preds * w.reshape(wshape), axis + 1, 1)  # (K, W, rest)
+    wp = jnp.pad(wp, [(0, 0), (0, spec.pad)] + [(0, 0)] * (wp.ndim - 2))
+    rest = wp.shape[2:]
+    trail = (1,) * len(rest)
+    if stateful and state is None:
+        raise ValueError(f"codec {codec.name!r} needs init_halo_wire_state")
+
+    acc_len = spec.core_pad + spec.max_transfer
+    accs = []
+    for k in range(K):
+        a = jnp.zeros((acc_len,) + rest, jnp.float32)
+        off = spec.core_start[k] - spec.starts[k]
+        accs.append(a.at[: spec.core_pad].set(wp[k, off : off + spec.core_pad]))
+
+    new_state: WireState = {}
+    if stateful:
+        new_state = {
+            "pp_send": [list(jnp.split(s, K)) for s in state["pp_send"]],
+            "pp_err": [list(jnp.split(s, K)) for s in state["pp_err"]],
+            "pp_recv": [list(jnp.split(s, K)) for s in state["pp_recv"]],
+        }
+    for ti, t in enumerate(spec.transfers):
+        msgs = []
+        for j in range(K):  # every rank encodes (state advances SPMD-like)
+            slab = wp[j, t.src_start[j] : t.src_start[j] + t.length]
+            valid = jnp.arange(t.length) < t.src_len[j]
+            slab = slab * valid.reshape((t.length,) + trail)
+            if stateful:
+                wire, meta, n_send, n_err = residual_encode(
+                    base, slab,
+                    state["pp_send"][ti][j], state["pp_err"][ti][j],
+                )
+                new_state["pp_send"][ti][j] = n_send[None]
+                new_state["pp_err"][ti][j] = n_err[None]
+            else:
+                wire, meta = codec.encode(slab)
+            msgs.append((wire, meta))
+        delivered = {k: msgs[j] for j, k in t.perm}
+        for k in range(K):
+            if k in delivered:
+                wire, meta = delivered[k]
+            else:  # ppermute's implicit zeros for peerless ranks
+                wire = jnp.zeros_like(msgs[0][0])
+                meta = tuple(jnp.zeros_like(m) for m in msgs[0][1])
+            shape = (t.length,) + rest
+            if stateful:
+                got, n_recv = residual_decode(
+                    base, wire, meta, state["pp_recv"][ti][k], shape
+                )
+                new_state["pp_recv"][ti][k] = n_recv[None]
+            else:
+                got = codec.decode(wire, meta, shape)
+            dst = t.dst_start[k]
+            accs[k] = accs[k].at[dst : dst + t.length].add(got)
+
+    # normalize own cores (ones-padded normalizer rows, as the SPMD path)
+    norm = plan.normalizer()
+    cores = []
+    for k in range(K):
+        nc = np.ones(spec.core_pad, np.float32)
+        cl = spec.core_len[k]
+        nc[:cl] = norm[spec.core_start[k] : spec.core_end[k]]
+        cores.append(
+            accs[k][: spec.core_pad] / jnp.asarray(nc).reshape((-1,) + trail)
+        )
+
+    core_shape = (spec.core_pad,) + rest
+    if stateful:
+        correcteds, wires, metas = [], [], []
+        for k in range(K):
+            c = cores[k] - state["ag_prev"][k][k] + state["ag_err"][k]
+            wire, meta = base.encode(c)
+            correcteds.append(c)
+            wires.append(wire)
+            metas.append(meta)
+        wires_st = jnp.stack(wires)
+        metas_st = tuple(
+            jnp.stack([m[i] for m in metas]) for i in range(len(metas[0]))
+        )
+        d_all = base.decode(wires_st, metas_st, (K,) + core_shape)
+        gathered = state["ag_prev"][0] + d_all  # replicas are identical
+        new_state["ag_prev"] = jnp.broadcast_to(
+            gathered[None], (K,) + gathered.shape
+        )
+        new_state["ag_err"] = jnp.stack(
+            [correcteds[k] - d_all[k] for k in range(K)]
+        )
+    else:
+        wires, metas = [], []
+        for k in range(K):
+            wire, meta = codec.encode(cores[k])
+            wires.append(wire)
+            metas.append(meta)
+        metas_st = tuple(
+            jnp.stack([m[i] for m in metas]) for i in range(len(metas[0]))
+        )
+        gathered = codec.decode(jnp.stack(wires), metas_st, (K,) + core_shape)
+
+    out = jnp.zeros((plan.extent,) + rest, jnp.float32)
+    for j in range(K):
+        out = out.at[spec.core_start[j] : spec.core_end[j]].set(
+            gathered[j, : spec.core_len[j]]
+        )
+    out = jnp.moveaxis(out, 0, axis).astype(z.dtype)
+    if not stateful:
+        return out
+    new_state["pp_send"] = tuple(
+        jnp.concatenate(s) for s in new_state["pp_send"]
+    )
+    new_state["pp_err"] = tuple(jnp.concatenate(s) for s in new_state["pp_err"])
+    new_state["pp_recv"] = tuple(
+        jnp.concatenate(s) for s in new_state["pp_recv"]
+    )
+    return out, new_state

@@ -228,6 +228,64 @@ def comm_lp_halo(cfg: VDMCommConfig, K: int, r: float = 0.5) -> int:
     )
 
 
+def lp_halo_codec_step_collectives(
+    cfg: VDMCommConfig, K: int, r: float, dim: int, codec="int8"
+) -> dict:
+    """Per-device collective payloads of ONE codec'd halo LP step.
+
+    Same HLO output-shape accounting as :func:`lp_halo_step_collectives`
+    but through a ``comm.codecs`` codec: every ppermute round ships the
+    coded slab (``codec.bits`` per element) plus its per-slab scale
+    meta, and the core all-gather ships K coded core slices plus K
+    scales.  Matches ``analysis/hlo_analyzer`` on the compiled HLO
+    exactly (the codecs pin their wire dtype to the collectives).
+    """
+    from repro.comm.codecs import get_codec
+    from repro.distributed.collectives import halo_spec
+
+    codec = get_codec(codec)
+    spec = halo_spec(_halo_plan(cfg, K, r, dim))
+    row_el = cfg.latent_elems // cfg.latent_dims[dim]  # elems per latent row
+    pp = sum(
+        codec.wire_bytes(t.length * row_el) for t in spec.transfers
+    )
+    ag = K * codec.wire_bytes(spec.core_pad * row_el)
+    return {"all-gather": ag, "collective-permute": pp}
+
+
+def comm_lp_halo_codec(
+    cfg: VDMCommConfig, K: int, r: float = 0.5, codec="int8"
+) -> int:
+    """Codec-compressed halo LP: group wire bytes over the full schedule.
+
+    :func:`comm_lp_halo` with every payload squeezed through a wire
+    codec (``core/spmd.lp_forward_halo(..., codec=...)``): each rank's
+    coded core slice (+ scale meta) crosses K-1 links in the ring
+    all-gather, and each scheduled ppermute pair moves one coded slab
+    (+ meta).  With int8 this is ~4x below the fp32 halo path — and the
+    residual variants spend the same bytes on a temporally-delta-coded
+    payload, so the quality cost shrinks without moving more data.
+    """
+    from repro.comm.codecs import get_codec
+    from repro.distributed.collectives import halo_spec
+
+    codec = get_codec(codec)
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
+    per_dim = {}
+    for dim in dims:
+        spec = halo_spec(_halo_plan(cfg, K, r, dim))
+        row_el = cfg.latent_elems // cfg.latent_dims[dim]
+        ag = K * (K - 1) * codec.wire_bytes(spec.core_pad * row_el)
+        pp = sum(
+            len(t.perm) * codec.wire_bytes(t.length * row_el)
+            for t in spec.transfers
+        )
+        per_dim[dim] = ag + pp
+    return sum(
+        per_dim[rotation_dim(i, dims)] for i in range(1, cfg.num_steps + 1)
+    )
+
+
 def collective_wire_bytes(kind: str, payload_bytes: float, K: int) -> float:
     """HLO output-shape payload -> ring wire bytes per device.
 

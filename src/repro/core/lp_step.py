@@ -106,6 +106,17 @@ class LPStepCompiler:
     ``forward`` overrides the per-step LP engine, e.g.
     ``lambda fn, z, plan, axis: lp_forward_halo(fn, z, plan, axis, mesh)``
     to run the halo-exchange collective inside the compiled step.
+
+    ``codec`` (a ``comm.codecs`` name or instance) compresses the LP
+    wire payloads.  Stateless codecs (bf16/int8/int4) only change the
+    per-step forward; residual codecs carry state (previous decoded
+    slabs + error-feedback carries) which this cache threads through the
+    ``lax.scan`` carry — never through re-traced closures — so a T-step
+    denoise still compiles at most once per rotation dim.  With a codec
+    and no custom ``forward``, steps run through
+    ``comm.wire.simulate_halo_forward`` (the single-process mirror of
+    the halo collective; pass a mesh-bound ``forward`` for real SPMD,
+    stateful hooks take/return ``(pred, state)``).
     """
 
     def __init__(
@@ -121,6 +132,7 @@ class LPStepCompiler:
         use_kernel: Optional[bool] = None,
         donate: bool = True,
         maxsize: int = 32,
+        codec=None,
     ):
         self.denoise_fn = denoise_fn
         self.update_fn = update_fn
@@ -133,9 +145,23 @@ class LPStepCompiler:
         self.use_kernel = use_kernel
         self.donate = donate
         self.maxsize = maxsize
+        if codec is not None:
+            from repro.comm.codecs import get_codec
+
+            codec = get_codec(codec)
+            if not uniform and forward is None:
+                raise ValueError(
+                    "wire codecs need the uniform-window halo geometry "
+                    "(uniform=True) or a custom forward hook"
+                )
+        self.codec = codec
         self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
         self.compiles = 0
         self.hits = 0
+
+    @property
+    def stateful(self) -> bool:
+        return self.codec is not None and self.codec.stateful
 
     # ------------------------------------------------------------- plans
     def _plan(self, dim: int, extent: int):
@@ -152,9 +178,38 @@ class LPStepCompiler:
     def _forward(self, fn: DenoiseFn, z, plan, axis):
         if self.forward is not None:
             return self.forward(fn, z, plan, axis)
+        if self.codec is not None:
+            from repro.comm.wire import simulate_halo_forward
+
+            return simulate_halo_forward(fn, z, plan, axis, self.codec)
         if self.uniform:
             return lp_forward_uniform(fn, z, plan, axis, use_kernel=self.use_kernel)
         return lp_forward(fn, z, plan, axis)
+
+    def _forward_stateful(self, fn: DenoiseFn, z, plan, axis, state):
+        """Codec-state-threading forward: returns (pred, new_state)."""
+        if self.forward is not None:
+            return self.forward(fn, z, plan, axis, state)
+        from repro.comm.wire import simulate_halo_forward
+
+        return simulate_halo_forward(fn, z, plan, axis, self.codec, state)
+
+    def init_codec_state(self, dim: int, z: jnp.ndarray):
+        """Zeroed residual-codec state for (rotation dim, latent geometry).
+
+        ``lp_denoise`` creates this fresh at the start of every same-dim
+        scan run (temporal deltas are only meaningful between consecutive
+        steps along one rotation dim) — which also guarantees no codec
+        state leaks across serving requests."""
+        if not self.stateful:
+            return None
+        from repro.comm.wire import init_halo_wire_state
+        from repro.distributed.collectives import halo_spec
+
+        axis = self.spatial_axes[dim]
+        plan = self._plan(dim, z.shape[axis])
+        rest = tuple(s for i, s in enumerate(z.shape) if i != axis)
+        return init_halo_wire_state(self.codec, halo_spec(plan), rest)
 
     # ------------------------------------------------------------- build
     def step_fn(
@@ -163,6 +218,7 @@ class LPStepCompiler:
         key = (
             dim, n, tuple(z.shape), jnp.result_type(z).name,
             _abstract_sig(scalars), _abstract_sig(extras),
+            None if self.codec is None else self.codec.name,
         )
         cached = self._cache.get(key)
         if cached is not None:
@@ -173,7 +229,27 @@ class LPStepCompiler:
         plan = self._plan(dim, z.shape[axis])
         den, upd = self.denoise_fn, self.update_fn
 
-        if n == 1:
+        if self.stateful:
+            # codec state rides the scan carry next to z — the step stays
+            # one compiled function per rotation dim
+            if n == 1:
+                def step(zc, st, t, sc, extras):
+                    pred, st = self._forward_stateful(
+                        lambda w: den(w, t, *extras), zc, plan, axis, st
+                    )
+                    return upd(zc, pred, sc), st
+            else:
+                def step(zc, st, ts, scs, extras):
+                    def body(carry, x):
+                        zb, s = carry
+                        t, sc = x
+                        pred, s = self._forward_stateful(
+                            lambda w: den(w, t, *extras), zb, plan, axis, s
+                        )
+                        return (upd(zb, pred, sc), s), None
+                    (out, st), _ = jax.lax.scan(body, (zc, st), (ts, scs))
+                    return out, st
+        elif n == 1:
             def step(zc, t, sc, extras):
                 pred = self._forward(lambda w: den(w, t, *extras), zc, plan, axis)
                 return upd(zc, pred, sc)
@@ -210,6 +286,7 @@ def lp_denoise(
     compiler: Optional[LPStepCompiler] = None,
     fuse_scan: bool = True,
     step_hook: Optional[Callable[[int], None]] = None,
+    codec=None,
 ) -> jnp.ndarray:
     """Full T-step LP denoising on the compiled fast path.
 
@@ -222,6 +299,12 @@ def lp_denoise(
     most once per rotation dim.  ``step_hook(i)`` fires outside the
     compiled region (fault injection, straggler accounting); setting it
     disables scan fusion so the hook really does run between steps.
+
+    ``codec`` compresses LP wire payloads (ignored when ``compiler`` is
+    given — the compiler owns the codec then).  Residual-codec state is
+    zeroed at the start of every same-dim run and discarded at its end:
+    temporal deltas live inside one fused scan, and state can never leak
+    across calls (or serving requests).
     """
     if step_hook is not None:
         fuse_scan = False
@@ -240,7 +323,7 @@ def lp_denoise(
             raise ValueError("need denoise_fn when no compiler is given")
         comp = LPStepCompiler(
             denoise_fn, sampler.update, num_partitions, overlap_ratio,
-            patch_sizes, spatial_axes, uniform=uniform,
+            patch_sizes, spatial_axes, uniform=uniform, codec=codec,
         )
     # group consecutive same-dim steps into scan-fused runs
     runs: list = []
@@ -259,14 +342,21 @@ def lp_denoise(
                 step_hook(i)
         ts = [np.float32(sampler.timestep(i)) for i in idxs]
         scs = [sampler.step_scalars(i) for i in idxs]
+        st = comp.init_codec_state(dim, z) if comp.stateful else None
         if len(idxs) == 1:
             fn = comp.step_fn(dim, z, 1, scs[0], extras)
-            z = fn(z, ts[0], scs[0], extras)
+            if comp.stateful:
+                z, _ = fn(z, st, ts[0], scs[0], extras)
+            else:
+                z = fn(z, ts[0], scs[0], extras)
         else:
             ts_arr = jnp.asarray(np.stack(ts))
             scs_arr = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *scs)
             fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras)
-            z = fn(z, ts_arr, scs_arr, extras)
+            if comp.stateful:
+                z, _ = fn(z, st, ts_arr, scs_arr, extras)
+            else:
+                z = fn(z, ts_arr, scs_arr, extras)
     return z
 
 

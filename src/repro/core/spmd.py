@@ -108,6 +108,54 @@ def blend_windows(
     return (acc / norm).astype(preds.dtype)
 
 
+def blend_windows_coded(
+    preds: jnp.ndarray, plan: UniformPlan, axis: int,
+    codec="int8", use_kernel: bool | None = None,
+) -> jnp.ndarray:
+    """Blend stacked window predictions that crossed a quantized wire.
+
+    Each of the K window predictions is round-tripped through the codec
+    exactly as the stacked engine would ship it (one per-slab scale per
+    window).  For int8 the round trip is fully fused on TPU: a two-phase
+    Pallas quantize (``kernels/wire_codec.int8_quantize``) and a
+    dequantize+blend kernel (``dequant_blend``) that never materializes
+    the dequantized f32 windows in HBM.  Other codecs decode and reuse
+    :func:`blend_windows`.
+    """
+    from repro.comm.codecs import get_codec
+
+    codec = get_codec(codec)
+    K = plan.num_partitions
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if codec.name == "int8" and use_kernel:
+        from repro.kernels import ops
+
+        interpret = jax.default_backend() != "tpu"
+        p = jnp.moveaxis(preds, axis + 1, 1)         # (K, W, rest...)
+        rest = p.shape[2:]
+        flat = int(np.prod(rest)) if rest else 1
+        p = p.reshape(K, plan.window, flat)
+        wires, scales = [], []
+        for k in range(K):
+            wire, scale = ops.int8_quantize(p[k], interpret=interpret)
+            wires.append(wire)
+            scales.append(scale[0, 0])
+        out = ops.dequant_blend(
+            jnp.stack(wires), jnp.stack(scales),
+            jnp.asarray(window_weights(plan)),
+            jnp.asarray(plan.normalizer()),
+            plan.starts, plan.window, plan.extent,
+            interpret=interpret, out_dtype=preds.dtype,
+        )
+        return jnp.moveaxis(out.reshape((plan.extent,) + rest), 0, axis)
+    roundtripped = jnp.stack([
+        codec.decode(*codec.encode(preds[k]), preds[k].shape)
+        for k in range(K)
+    ]).astype(preds.dtype)
+    return blend_windows(roundtripped, plan, axis, use_kernel=use_kernel)
+
+
 def lp_forward_stacked(
     denoise_fn: DenoiseFn, z: jnp.ndarray, plan: UniformPlan, axis: int
 ) -> jnp.ndarray:
@@ -214,6 +262,24 @@ def lp_forward_shard_map(
     return fn(z)
 
 
+# ------------------------------------------------------- engine selection
+LP_IMPLS = ("auto", "gspmd", "shard_map", "halo")
+
+
+def select_lp_impl(num_partitions: int) -> str:
+    """Resolve ``lp_impl="auto"`` to a concrete SPMD engine.
+
+    The halo schedule's wire bytes are ``K(K-1) core_pad row + Σ_t
+    |perm_t| len_t row`` vs the psum's ``2(K-1) S_z``
+    (``comm_model.comm_lp_halo`` vs ``comm_lp_spmd``): at K=2 the
+    edge-clamped windows span nearly the whole extent and halo is
+    break-even, so keep the psum engine there; from K>=3 the overlap
+    slabs shrink like r·D/K and halo wins at any r<=1 (ROADMAP, PR 1
+    measurements — strictly better for K>=4 on every benchmark config).
+    """
+    return "shard_map" if num_partitions <= 2 else "halo"
+
+
 # ---------------------------------------------------------- halo-exchange
 def lp_forward_halo(
     denoise_fn: DenoiseFn,
@@ -222,7 +288,9 @@ def lp_forward_halo(
     axis: int,
     mesh: Mesh,
     lp_axis: str = "data",
-) -> jnp.ndarray:
+    codec=None,
+    codec_state=None,
+):
     """Halo-exchange LP forward: the fast-path collective schedule.
 
     Same math as :func:`lp_forward_shard_map`, but reconstruction never
@@ -239,6 +307,14 @@ def lp_forward_halo(
     Wire bytes per device ~ (K-1)/K * S_z + halo slabs, vs the psum's
     2 (K-1)/K * S_z (``comm_model.comm_lp_halo`` vs ``comm_lp_spmd``);
     there is no all-reduce in the compiled HLO at all.
+
+    ``codec`` (a ``comm.codecs`` name or instance) additionally squeezes
+    every wire payload — ppermute slabs and the core all-gather — through
+    a wire codec (``comm_model.comm_lp_halo_codec`` for the byte model).
+    Residual codecs are stateful: pass ``codec_state`` from
+    ``comm.wire.init_halo_wire_state`` (leading lp-axis dim) and this
+    returns ``(latent, new_state)`` instead of just the latent — the
+    compiled-step cache threads it through the ``lax.scan`` carry.
     """
     from repro.distributed.collectives import halo_exchange, halo_spec
 
@@ -259,35 +335,94 @@ def lp_forward_halo(
         norm_core[k, : core_len[k]] = norm[plan.core_start[k] : plan.core_end[k]]
     norm_core = jnp.asarray(norm_core)
 
-    def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
-        k = jax.lax.axis_index(lp_axis)
+    if codec is not None:
+        from repro.comm.codecs import get_codec
+
+        codec = get_codec(codec)
+        if codec.stateful and codec_state is None:
+            raise ValueError(
+                f"codec {codec.name!r} is stateful: pass codec_state from "
+                "comm.wire.init_halo_wire_state"
+            )
+
+    def _weighted_window(z_rep, k):
         window = jax.lax.dynamic_slice_in_dim(z_rep, starts[k], plan.window, axis)
         pred = denoise_fn(window).astype(jnp.float32)
         wshape = [1] * pred.ndim
         wshape[axis] = plan.window
         wpred = pred * weights[k].reshape(wshape)
         wpred = jnp.moveaxis(wpred, axis, 0)
-        wpred = jnp.pad(wpred, [(0, spec.pad)] + [(0, 0)] * (wpred.ndim - 1))
-        acc = halo_exchange(wpred, spec, k, lp_axis)
-        nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
-        core = (acc[: spec.core_pad] / norm_core[k].reshape(nshape)).astype(
-            z_rep.dtype
-        )
-        gathered = jax.lax.all_gather(core, lp_axis, axis=0, tiled=False)
-        out = jnp.zeros(
-            (plan.extent,) + core.shape[1:], z_rep.dtype
-        )
+        return jnp.pad(wpred, [(0, spec.pad)] + [(0, 0)] * (wpred.ndim - 1))
+
+    def _reassemble(gathered, dtype):
+        out = jnp.zeros((plan.extent,) + gathered.shape[2:], gathered.dtype)
         for j in range(K):  # cores tile [0, extent): static local reassembly
             out = jax.lax.dynamic_update_slice_in_dim(
                 out, gathered[j, : core_len[j]], plan.core_start[j], 0
             )
-        return jnp.moveaxis(out, 0, axis)
+        return jnp.moveaxis(out, 0, axis).astype(dtype)
+
+    if codec is None:
+        def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
+            k = jax.lax.axis_index(lp_axis)
+            wpred = _weighted_window(z_rep, k)
+            acc = halo_exchange(wpred, spec, k, lp_axis)
+            nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
+            core = (acc[: spec.core_pad] / norm_core[k].reshape(nshape)).astype(
+                z_rep.dtype
+            )
+            gathered = jax.lax.all_gather(core, lp_axis, axis=0, tiled=False)
+            return _reassemble(gathered, z_rep.dtype)
+
+        fn = compat.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=P(),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return fn(z)
+
+    from repro.comm.wire import (
+        compressed_core_gather,
+        compressed_halo_exchange,
+    )
+
+    if not codec.stateful:
+        def per_device_codec(z_rep: jnp.ndarray) -> jnp.ndarray:
+            k = jax.lax.axis_index(lp_axis)
+            wpred = _weighted_window(z_rep, k)
+            acc, _ = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, {})
+            nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
+            core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
+            gathered, _ = compressed_core_gather(core, k, lp_axis, codec, {}, K)
+            return _reassemble(gathered, z_rep.dtype)
+
+        fn = compat.shard_map(
+            per_device_codec,
+            mesh=mesh,
+            in_specs=P(),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return fn(z)
+
+    def per_device_stateful(z_rep: jnp.ndarray, state):
+        k = jax.lax.axis_index(lp_axis)
+        st = jax.tree.map(lambda s: s[0], state)  # drop the lp-axis dim
+        wpred = _weighted_window(z_rep, k)
+        acc, st = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, st)
+        nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
+        core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
+        gathered, st = compressed_core_gather(core, k, lp_axis, codec, st, K)
+        out = _reassemble(gathered, z_rep.dtype)
+        return out, jax.tree.map(lambda s: s[None], st)
 
     fn = compat.shard_map(
-        per_device,
+        per_device_stateful,
         mesh=mesh,
-        in_specs=P(),
-        out_specs=P(),
+        in_specs=(P(), P(lp_axis)),
+        out_specs=(P(), P(lp_axis)),
         check_vma=False,
     )
-    return fn(z)
+    return fn(z, codec_state)

@@ -1,11 +1,14 @@
-"""Gradient compression for the slow cross-pod axis (beyond-paper,
-per-assignment distributed-optimization tricks).
+"""Gradient compression for the slow cross-pod axis.
 
-Scheme: bf16 all-reduce with fp32 error feedback.  Gradients are cast to
-bf16 before crossing the inter-pod links (halving the bytes of the
-dominant collective); the quantization residual is kept host-side and
-added back into the next step's gradient, so the *accumulated* update is
-unbiased (error-feedback / EF14 construction).
+Scheme: bf16 all-reduce with fp32 error feedback — gradients cross the
+inter-pod links in bf16, and the quantization residual is carried and
+re-injected so the *accumulated* update stays unbiased (EF14).
+
+This module is now a thin wrapper: the error-feedback round-trip has
+been generalized into the wire-codec subsystem
+(``comm.residual.ef_roundtrip`` over any ``comm.codecs.Codec``), which
+also powers the residual-compressed halo exchange for LP serving.  The
+original gradient API is kept for the training path.
 """
 from __future__ import annotations
 
@@ -13,6 +16,11 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.comm.codecs import Bf16Codec
+from repro.comm.residual import ef_roundtrip
+
+_BF16 = Bf16Codec()
 
 
 def init_error_feedback(params) -> Any:
@@ -22,10 +30,7 @@ def init_error_feedback(params) -> Any:
 def compress_decompress(g: jnp.ndarray, err: jnp.ndarray
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One leaf: add residual, round-trip through bf16, new residual."""
-    corrected = g.astype(jnp.float32) + err
-    sent = corrected.astype(jnp.bfloat16)          # what crosses the pod link
-    back = sent.astype(jnp.float32)
-    return back, corrected - back
+    return ef_roundtrip(_BF16, g, err)
 
 
 def compressed_psum(grads, err_state, axis_name: Optional[str]):

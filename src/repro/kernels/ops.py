@@ -13,6 +13,8 @@ from .flash_attention import flash_attention as _flash
 from .mamba_ssd import mamba_ssd as _ssd
 from .guidance_update import guidance_update as _guidance
 from .latent_blend import latent_blend as _blend
+from .wire_codec import dequant_blend as _dequant_blend
+from .wire_codec import int8_quantize as _int8_quantize
 
 
 def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,
@@ -34,6 +36,25 @@ def latent_blend(preds, weights, normalizer, starts: Tuple[int, ...],
                  window: int, extent: int, *, blk_f=512, interpret=True):
     return _blend(preds, weights, normalizer, tuple(int(s) for s in starts),
                   window, extent, blk_f=blk_f, interpret=interpret)
+
+
+def int8_quantize(x, *, qmax=127, blk_r=256, interpret=True):
+    """(wire int8, scale (1,1)) — fused per-slab max-abs + quantize."""
+    return _int8_quantize(x, qmax=qmax, blk_r=blk_r, interpret=interpret)
+
+
+def dequant_blend(wire, scales, weights, normalizer, starts: Tuple[int, ...],
+                  window: int, extent: int, *, blk_f=512, interpret=True,
+                  out_dtype=None):
+    """Fused int8 dequantize + position-aware blend (latent_blend twin)."""
+    import jax.numpy as _jnp
+
+    return _dequant_blend(
+        wire, scales.reshape(-1), weights, normalizer,
+        tuple(int(s) for s in starts), window, extent, blk_f=blk_f,
+        interpret=interpret,
+        out_dtype=out_dtype if out_dtype is not None else _jnp.float32,
+    )
 
 
 def guidance_update(z, cond, uncond, w: float, dt: float, *,

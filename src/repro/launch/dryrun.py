@@ -1,5 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The dry-run compiles against fake CPU devices by construction; pinning
+# the platform (unless the caller overrides) skips jax's TPU runtime
+# probe, which hangs for minutes on hosts with libtpu but no TPU.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes and extract memory/cost/collective evidence.
 
@@ -121,19 +125,30 @@ def _mem_summary(compiled) -> Dict[str, float]:
 
 
 def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
-                 lp_impl: str = "gspmd"):
+                 lp_impl: str = "gspmd", wire_codec: Optional[str] = None):
     """Build the jitted LP denoising step (one forward pass, dim=height)."""
     from repro.core import plan_uniform
     from repro.core.spmd import (
         lp_forward_gspmd,
         lp_forward_halo,
         lp_forward_shard_map,
+        select_lp_impl,
     )
     from repro.diffusion.cfg import cfg_combine
     from repro.diffusion.sampler import FlowMatchEuler
     from repro.models import dit
 
     K = mesh.shape["data"]
+    if lp_impl == "auto":
+        # comm-model break-even rule; a wire codec implies the halo
+        # engine (that's where the codec layer lives)
+        lp_impl = "halo" if wire_codec not in (None, "fp32") \
+            else select_lp_impl(K)
+    if wire_codec not in (None, "fp32") and lp_impl != "halo":
+        raise ValueError(
+            f"--wire-codec {wire_codec} needs the halo engine; got "
+            f"--lp-impl {lp_impl} (the measured HLO would be uncoded)"
+        )
     h_lat = shape.height // 8
     plan = plan_uniform(h_lat, cfg.patch_sizes[1], K, parallel.overlap_ratio, dim=1)
     sampler = FlowMatchEuler(shape.num_steps)
@@ -168,7 +183,29 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
         if lp_impl == "shard_map":
             pred = lp_forward_shard_map(denoise, z, plan, 2, mesh, "data")
         elif lp_impl == "halo":
-            pred = lp_forward_halo(denoise, z, plan, 2, mesh, "data")
+            if wire_codec in (None, "fp32"):
+                pred = lp_forward_halo(denoise, z, plan, 2, mesh, "data")
+            else:
+                from repro.comm import get_codec, init_halo_wire_state
+                from repro.distributed.collectives import halo_spec
+
+                codec = get_codec(wire_codec)
+                if codec.stateful:
+                    # single-step lowering: a zero carry inside the step
+                    # (collective shapes are state-independent, which is
+                    # what the dry run measures)
+                    st = init_halo_wire_state(
+                        codec, halo_spec(plan),
+                        tuple(s for i, s in enumerate(z.shape) if i != 2),
+                    )
+                    pred, _ = lp_forward_halo(
+                        denoise, z, plan, 2, mesh, "data",
+                        codec=codec, codec_state=st,
+                    )
+                else:
+                    pred = lp_forward_halo(
+                        denoise, z, plan, 2, mesh, "data", codec=codec
+                    )
         else:
             pred = lp_forward_gspmd(denoise, z, plan, 2, mesh, "data")
         return sampler.step(z, pred, 1)
@@ -182,6 +219,7 @@ def lower_cell(
     multi_pod: bool = False,
     lp_impl: str = "gspmd",
     mesh=None,
+    wire_codec: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Lower + compile one cell; return the §Dry-run record."""
     cfg = get_config(arch)
@@ -336,7 +374,8 @@ def lower_cell(
             fn = jax.jit(decode, donate_argnums=(2,))
             lowered = fn.lower(params_sds, batch_sds, cache_sds)
         elif shape.kind == "vdm_generate":
-            step = _vdm_lp_step(cfg, shape, mesh, parallel, lp_impl)
+            step = _vdm_lp_step(cfg, shape, mesh, parallel, lp_impl,
+                                wire_codec=wire_codec)
             batch_sds = jax.tree.map(
                 lambda l: jax.ShapeDtypeStruct(
                     l.shape, l.dtype, sharding=NamedSharding(mesh, P())
@@ -380,7 +419,11 @@ def main(argv=None) -> int:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--lp-impl", default="gspmd",
-                    choices=["gspmd", "shard_map", "halo"])
+                    choices=["auto", "gspmd", "shard_map", "halo"])
+    from repro.comm.codecs import CODEC_NAMES
+
+    ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
+                    help="compress LP halo payloads (halo/auto impls)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -401,7 +444,8 @@ def main(argv=None) -> int:
         for arch, shape in todo:
             tag = f"{arch} x {shape} [{'2x16x16' if multi_pod else '16x16'}]"
             try:
-                rec = lower_cell(arch, shape, multi_pod, args.lp_impl, mesh=mesh)
+                rec = lower_cell(arch, shape, multi_pod, args.lp_impl,
+                                 mesh=mesh, wire_codec=args.wire_codec)
                 if rec.get("skipped"):
                     print(f"SKIP {tag}: {rec['skipped']}", flush=True)
                 else:

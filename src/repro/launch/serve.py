@@ -1,7 +1,7 @@
 """Serving driver CLI — LP video generation service.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 4 --steps 6 \
-      --partitions 2 --overlap 0.5
+      --partitions 2 --overlap 0.5 [--lp-impl auto] [--wire-codec int8-residual]
 """
 from __future__ import annotations
 
@@ -10,6 +10,7 @@ import argparse
 import jax
 
 from repro import models
+from repro.comm.codecs import CODEC_NAMES
 from repro.configs import get_config
 from repro.models import dit, frontends
 from repro.serving.engine import LPServingEngine, VideoRequest
@@ -22,6 +23,11 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=2)
     ap.add_argument("--overlap", type=float, default=0.5)
     ap.add_argument("--frames-latent", type=int, default=6)
+    ap.add_argument("--lp-impl", default="auto",
+                    choices=["auto", "uniform", "shard_map", "halo"],
+                    help="LP engine; auto = psum math at K=2, halo beyond")
+    ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
+                    help="compress LP halo wire payloads")
     args = ap.parse_args(argv)
 
     cfg = get_config("wan21-dit-1.3b").reduced()
@@ -34,7 +40,10 @@ def main(argv=None):
     engine = LPServingEngine(fwd, params, cfg,
                              num_partitions=args.partitions,
                              overlap_ratio=args.overlap,
-                             num_steps=args.steps)
+                             num_steps=args.steps,
+                             lp_impl=args.lp_impl,
+                             wire_codec=args.wire_codec)
+    print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name}")
     for i in range(args.requests):
         engine.submit(VideoRequest(
             request_id=i,

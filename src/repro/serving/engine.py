@@ -17,7 +17,14 @@ Production behaviours implemented (scaled to the container):
     (runtime/straggler.py) when imbalance exceeds the threshold;
   * failure handling: a denoise step that raises re-queues the whole
     batch (LP state is just (z_t, i) — restartable at step granularity,
-    checkpointed every ``ckpt_every_steps``).
+    checkpointed every ``ckpt_every_steps``);
+  * engine auto-selection + wire codecs: ``lp_impl="auto"`` picks the
+    psum engine at K=2 and the halo engine beyond (the comm-model
+    break-even, ``core/spmd.select_lp_impl``); ``wire_codec`` squeezes
+    the halo payloads through ``comm/`` codecs (bf16/int8/int4, or
+    int8-residual temporal-delta with error feedback).  Residual codec
+    state is zeroed at the start of every same-dim scan run inside
+    ``lp_denoise``, so state can never leak across batches/requests.
 """
 from __future__ import annotations
 
@@ -30,8 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.codecs import get_codec
 from repro.configs.base import ArchConfig
 from repro.core import LPStepCompiler, lp_denoise
+from repro.core.spmd import select_lp_impl
 from repro.diffusion.pipeline import make_guided_step_denoiser
 from repro.diffusion.sampler import FlowMatchEuler
 from repro.runtime.straggler import StragglerState
@@ -67,6 +76,10 @@ class LPServingEngine:
         max_batch: int = 4,
         max_wait_requests: int = 8,
         uniform: bool = True,
+        lp_impl: str = "auto",
+        wire_codec: Optional[str] = None,
+        mesh=None,
+        lp_axis: str = "data",
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -83,6 +96,52 @@ class LPServingEngine:
         self._enqueued_at: Dict[int, int] = {}       # request_id -> poll no.
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
         self._sampler = FlowMatchEuler(num_steps)
+        # Engine selection: "auto" follows the comm model (psum at K=2,
+        # halo beyond — select_lp_impl); a non-trivial wire codec implies
+        # the halo-family engine, which is where the codec layer lives.
+        self.codec = get_codec(wire_codec)
+        codec_active = self.codec.name not in ("fp32", "identity")
+        explicit_halo = lp_impl == "halo"
+        if lp_impl == "auto":
+            lp_impl = "halo" if codec_active else select_lp_impl(self.K)
+        if codec_active and lp_impl != "halo":
+            raise ValueError(
+                f"wire_codec={self.codec.name!r} needs the halo engine "
+                f"(the codec layer lives there), got lp_impl={lp_impl!r}"
+            )
+        self.lp_impl = lp_impl
+        self.mesh = mesh
+        forward = None
+        compiler_codec = None
+        if mesh is not None:
+            from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
+
+            if self.lp_impl == "halo":
+                codec = self.codec
+                if codec.stateful:
+                    forward = (lambda fn, z, plan, axis, st:
+                               lp_forward_halo(fn, z, plan, axis, mesh,
+                                               lp_axis, codec=codec,
+                                               codec_state=st))
+                else:
+                    forward = (lambda fn, z, plan, axis:
+                               lp_forward_halo(fn, z, plan, axis, mesh,
+                                               lp_axis, codec=codec))
+                compiler_codec = codec
+            else:
+                forward = (lambda fn, z, plan, axis:
+                           lp_forward_shard_map(fn, z, plan, axis, mesh,
+                                                lp_axis))
+        elif self.lp_impl == "halo" and (codec_active or explicit_halo):
+            # off-mesh: the single-process mirror of the halo collective
+            # (comm.wire.simulate_halo_forward — LPStepCompiler's codec
+            # default), bit-faithful incl. the codec round-trips.  Only
+            # taken when a codec is active or halo was asked for by name:
+            # with fp32 wires an auto-selected halo has nothing to
+            # simulate and the uniform vmapped engine is the same math
+            # for a fraction of the dispatch work.
+            compiler_codec = self.codec
+        # else: uniform vmapped engine (psum-equivalent math, no wire)
         # Hoisted out of the batch loop: conditioning is traced, so this
         # closure (and every step it compiles) is batch-independent.
         self._guided = make_guided_step_denoiser(dit_forward, params, cfg)
@@ -94,6 +153,8 @@ class LPServingEngine:
             patch_sizes=cfg.patch_sizes,
             spatial_axes=(1, 2, 3),
             uniform=uniform,
+            forward=forward,
+            codec=compiler_codec,
         )
 
     # ------------------------------------------------------------- queue

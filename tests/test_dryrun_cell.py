@@ -8,7 +8,11 @@ import tempfile
 import pytest
 
 CMD = [sys.executable, "-m", "repro.launch.dryrun"]
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# JAX_PLATFORMS pinned: without it jax probes the TPU runtime in the
+# stripped subprocess env and can hang past the test timeout on hosts
+# that ship libtpu without a TPU.
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
 
 
 def _run(args, timeout=420):

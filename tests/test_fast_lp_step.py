@@ -218,7 +218,8 @@ def test_halo_multidevice_accuracy_and_bytes():
         [sys.executable, "-c", HALO_SCRIPT],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
         cwd="/root/repo",
         timeout=580,  # multi-device XLA compiles crawl on tiny CPU quotas
     )
