@@ -1,0 +1,190 @@
+"""Hybrid LP×TP benchmark -> BENCH_hybrid_lp_tp.json.
+
+The §11 composition on a 2D ``(lp=M, tp=T)`` mesh
+(``core/hybrid.lp_forward_halo_hybrid``), measured on 8 fake CPU devices
+(mesh 4x2) in a subprocess so the device-count XLA flag never leaks:
+
+1. **wire bytes** — per-device collective payloads of one hybrid halo
+   step per codec (fp32 / bf16 / int8 / int8-residual), measured from
+   the compiled 2D-mesh HLO (``analysis/hlo_analyzer``) and cross-checked
+   EXACTLY against ``comm_model.lp_halo_hybrid_step_collectives`` — the
+   acceptance contract of the hybrid engine.  The intra-group Phi_m psum
+   is reported separately (all-reduce row) and never charged to LP.
+2. **psum contrast** — the same step through the psum engine
+   (``lp_forward_shard_map``) on the same mesh: its all-reduce is
+   latent-sized; the hybrid halo schedule must move fewer wire bytes.
+3. **step latency** — warm per-step wall time of both engines on the
+   fake mesh (CPU collectives: directional only, recorded for trend).
+
+Gates: exact analytic==measured byte match for fp32/bf16/int8, and
+hybrid halo wire bytes < psum wire bytes at M=4.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+MESH_M, MESH_T = 4, 2
+R = 0.5
+OUT_JSON = "BENCH_hybrid_lp_tp.json"
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os, json, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import comm_model as cm
+    from repro.core import plan_uniform
+    from repro.core.hybrid import lp_forward_halo_hybrid
+    from repro.core.lp_step import lp_forward_uniform
+    from repro.core.spmd import lp_forward_shard_map
+    from repro.distributed.collectives import halo_spec
+    from repro.launch.mesh import make_hybrid_mesh
+
+    M, T, R = %(M)d, %(T)d, %(R)s
+    mesh = make_hybrid_mesh(M, T)
+    # wan21 smoke latent geometry (13, 60, 104, 16), partitioned on height
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(13, 60, 104, 16)).astype(np.float32))
+    plan = plan_uniform(60, 2, M, R, dim=1)
+
+    d = 16
+    w1 = jnp.asarray(rng.normal(size=(d, d)).astype(np.float32)) * 0.05
+    def tp_denoise(window):
+        # Megatron-pattern Phi_m: each tp rank contracts half the
+        # channels, the group psums the partials over the tp axis
+        tp = jax.lax.axis_index("model")
+        half = d // T
+        w_slice = jax.lax.dynamic_slice_in_dim(w1, tp * half, half, 0)
+        x_slice = jax.lax.dynamic_slice_in_dim(window, tp * half, half, 3)
+        partial = jnp.einsum("thwc,cd->thwd", x_slice, w_slice)
+        return jnp.tanh(window) * 0.5 + jax.lax.psum(partial, "model")
+
+    def ref_denoise(x):
+        return jnp.tanh(x) * 0.5 + jnp.einsum("thwc,cd->thwd", x, w1)
+
+    ccfg = cm.VDMCommConfig(
+        latent_dims=(13, 60, 104), latent_channels=16,
+        patch_sizes=(1, 2, 2), d_model=1, num_blocks=1, num_steps=1,
+    )
+    ref = lp_forward_uniform(ref_denoise, z, plan, axis=1)
+
+    def timed(fn, *a):
+        jax.block_until_ready(fn(*a))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(*a)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3 * 1e3
+
+    out = {"mesh": [M, T], "measured": {}, "modeled": {}, "latency_ms": {},
+           "rel_err": {}}
+    for name in ("fp32", "bf16", "int8", "int8-residual"):
+        codec = get_codec(name)
+        if codec.stateful:
+            st = init_halo_wire_state(
+                codec, halo_spec(plan),
+                tuple(s for i, s in enumerate(z.shape) if i != 1))
+            fn = jax.jit(lambda zz, s: lp_forward_halo_hybrid(
+                tp_denoise, zz, plan, 1, mesh, codec=codec,
+                codec_state=s)[0])
+            hlo = fn.lower(z, st).compile().as_text()
+            val = np.asarray(fn(z, st))
+        else:
+            c = None if name == "fp32" else codec
+            fn = jax.jit(lambda zz: lp_forward_halo_hybrid(
+                tp_denoise, zz, plan, 1, mesh, codec=c))
+            hlo = fn.lower(z).compile().as_text()
+            val = np.asarray(fn(z))
+            out["latency_ms"][name] = timed(fn, z)
+        a = analyze(hlo)
+        out["measured"][name] = {k: float(v)
+                                 for k, v in a.collective_bytes.items()}
+        out["modeled"][name] = cm.lp_halo_hybrid_step_collectives(
+            ccfg, M, T, R, dim=1, codec=name)
+        out["rel_err"][name] = float(
+            np.linalg.norm(val - np.asarray(ref))
+            / np.linalg.norm(np.asarray(ref)))
+
+    # psum-engine contrast on the same 2D mesh
+    fn_psum = jax.jit(lambda zz: lp_forward_shard_map(
+        tp_denoise, zz, plan, 1, mesh, "data"))
+    a = analyze(fn_psum.lower(z).compile().as_text())
+    out["measured"]["psum"] = {k: float(v)
+                               for k, v in a.collective_bytes.items()}
+    out["latency_ms"]["psum"] = timed(fn_psum, z)
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def _ring_wire(collectives: dict, K: int) -> float:
+    """Per-device ring wire bytes from HLO output-shape payloads."""
+    from repro.core.comm_model import collective_wire_bytes
+
+    return sum(
+        collective_wire_bytes(kind, b, K)
+        for kind, b in collectives.items()
+    )
+
+
+def run(print_csv=True):
+    res = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT % {"M": MESH_M, "T": MESH_T, "R": R}],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        timeout=560,
+    )
+    rec = None
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rec = json.loads(line[len("JSON:"):])
+    if rec is None:
+        raise RuntimeError(
+            f"hybrid subprocess failed:\n{res.stdout}\n{res.stderr[-2000:]}")
+
+    # ---- gates: analytic == measured, exactly, for the LP collectives
+    for name in ("fp32", "bf16", "int8"):
+        want = rec["modeled"][name]
+        got = rec["measured"][name]
+        for kind in ("all-gather", "collective-permute"):
+            assert got.get(kind, 0) == want[kind], (name, kind, got, want)
+    # the hybrid halo schedule must beat the psum engine's wire bytes
+    # (compare the LP collectives only; the Phi_m psum is identical in
+    # both programs and excluded)
+    lp_kinds = ("all-gather", "collective-permute")
+    halo_wire = _ring_wire(
+        {k: rec["measured"]["fp32"].get(k, 0) for k in lp_kinds}, MESH_M)
+    psum_all = rec["measured"]["psum"].get("all-reduce", 0)
+    phi_psum = rec["measured"]["fp32"].get("all-reduce", 0)
+    psum_wire = _ring_wire({"all-reduce": psum_all - phi_psum}, MESH_M)
+    assert halo_wire < psum_wire, (halo_wire, psum_wire)
+
+    rec["wire_per_device"] = {"halo_fp32": halo_wire, "psum": psum_wire,
+                              "reduction": psum_wire / halo_wire}
+    with open(OUT_JSON, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if print_csv:
+        for name, m in rec["modeled"].items():
+            print(f"hybrid_lp_tp/bytes/{name},0,"
+                  f"ag={m['all-gather']} pp={m['collective-permute']} "
+                  f"(modeled==measured)")
+        for name, ms in rec["latency_ms"].items():
+            print(f"hybrid_lp_tp/latency/{name},{ms*1e3:.0f},step_ms={ms:.1f}")
+        w = rec["wire_per_device"]
+        print(f"hybrid_lp_tp/wire,0,halo={w['halo_fp32']/2**20:.2f}MB "
+              f"psum={w['psum']/2**20:.2f}MB "
+              f"reduction={w['reduction']:.2f}x")
+        print(f"hybrid_lp_tp/json,0,wrote {OUT_JSON}")
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ from . import (
     fig8_gpu_scaling,
     fig9_duration,
     fig10_rotation_ablation,
+    hybrid_lp_tp,
     quality_fidelity,
     step_latency,
     table1_comm,
@@ -32,6 +33,7 @@ ALL = {
     "quality": quality_fidelity.run,
     "step_latency": step_latency.run,
     "wire_codec": wire_codec.run,
+    "hybrid_lp_tp": hybrid_lp_tp.run,
 }
 
 

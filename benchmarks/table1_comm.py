@@ -34,6 +34,18 @@ def rows():
             "LP-halo int8 (ours)": cm.comm_lp_halo_codec(cfg, 4, 0.5, "int8"),
             "LP-halo int8-res (ours)": cm.comm_lp_halo_codec(
                 cfg, 4, 0.5, "int8-residual"),
+            # GSPMD with a codec is value-faithful but its psum still
+            # ships f32 — zero byte savings, kept to show why the halo
+            # family is the codec path (comm_model.comm_lp_gspmd_codec)
+            "LP-gspmd int8 (ours)": cm.comm_lp_gspmd_codec(
+                cfg, 4, 0.5, "int8"),
+            # §11 hybrid on the same 4 devices as a 2x2 (lp, tp) mesh:
+            # group wire bytes of the inter-group halo schedule (the
+            # intra-group Phi_m traffic is the TP model's, Eq. 50)
+            "LP×TP 2x2 halo (ours)": cm.comm_lp_halo_hybrid(
+                cfg, 2, 2, 0.5),
+            "LP×TP 2x2 halo int8 (ours)": cm.comm_lp_halo_hybrid(
+                cfg, 2, 2, 0.5, "int8"),
         }
         for method, bytes_ in ours.items():
             paper = PAPER.get((frames, method))

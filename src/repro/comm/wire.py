@@ -105,6 +105,7 @@ def compressed_halo_exchange(
     axis_name: str,
     codec: Codec,
     state: WireState,
+    eager_sends: bool = False,
 ) -> Tuple[jnp.ndarray, WireState]:
     """Codec twin of ``collectives.halo_exchange`` (same contract: padded
     window-first ``wpred`` in, ``(core_pad + max_transfer, ...)`` f32
@@ -115,6 +116,12 @@ def compressed_halo_exchange(
     accumulates the decoded slab.  Ranks without a peer at an offset
     send a zero slab and decode ppermute's implicit zeros to exactly
     zero (codecs map 0 -> 0), so the schedule semantics are unchanged.
+
+    ``eager_sends`` mirrors ``halo_exchange``: every round is encoded and
+    its ppermute issued before any decode/accumulate, so the wires are
+    mutually independent and can overlap the local work (and each other)
+    under XLA's async collective scheduling.  Values are identical either
+    way — only the op ordering changes.
     """
     stateful = isinstance(codec, ResidualCodec)
     base = codec.base if stateful else codec
@@ -127,13 +134,9 @@ def compressed_halo_exchange(
         new_state["pp_send"] = list(state["pp_send"])
         new_state["pp_err"] = list(state["pp_err"])
         new_state["pp_recv"] = list(state["pp_recv"])
-    # own window -> own core (local, never coded)
-    own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
-    own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
-    acc = jax.lax.dynamic_update_slice_in_dim(
-        acc, own.astype(jnp.float32), 0, 0
-    )
-    for ti, t in enumerate(spec.transfers):
+
+    def send(ti: int, t) -> Tuple:
+        """Encode + issue one round; returns (wire, meta, slab_shape)."""
         slab = jax.lax.dynamic_slice_in_dim(
             wpred, jnp.asarray(t.src_start)[rank], t.length, 0
         )
@@ -148,16 +151,32 @@ def compressed_halo_exchange(
         else:
             wire, meta = codec.encode(slab)
         got_wire, got_meta = _ppermute_msg(wire, meta, axis_name, t.perm)
+        return got_wire, got_meta, slab.shape
+
+    def deposit(acc, ti: int, t, msg) -> jnp.ndarray:
+        got_wire, got_meta, slab_shape = msg
         if stateful:
             got, n_recv = residual_decode(
-                base, got_wire, got_meta, state["pp_recv"][ti], slab.shape
+                base, got_wire, got_meta, state["pp_recv"][ti], slab_shape
             )
             new_state["pp_recv"][ti] = n_recv
         else:
-            got = codec.decode(got_wire, got_meta, slab.shape)
+            got = codec.decode(got_wire, got_meta, slab_shape)
         dst = jnp.asarray(t.dst_start)[rank]
         cur = jax.lax.dynamic_slice_in_dim(acc, dst, t.length, 0)
-        acc = jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
+        return jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
+
+    msgs = ([send(ti, t) for ti, t in enumerate(spec.transfers)]
+            if eager_sends else None)
+    # own window -> own core (local, never coded)
+    own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
+    own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
+    acc = jax.lax.dynamic_update_slice_in_dim(
+        acc, own.astype(jnp.float32), 0, 0
+    )
+    for ti, t in enumerate(spec.transfers):
+        msg = msgs[ti] if eager_sends else send(ti, t)
+        acc = deposit(acc, ti, t, msg)
     if stateful:
         new_state["pp_send"] = tuple(new_state["pp_send"])
         new_state["pp_err"] = tuple(new_state["pp_err"])

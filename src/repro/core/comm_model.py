@@ -286,6 +286,64 @@ def comm_lp_halo_codec(
     )
 
 
+def lp_halo_hybrid_step_collectives(
+    cfg: VDMCommConfig, M: int, T: int, r: float, dim: int, codec="fp32"
+) -> dict:
+    """Per-device collective payloads of ONE hybrid LP×TP halo step.
+
+    On the 2D ``(lp=M, tp=T)`` mesh every LP collective names only the
+    group axis, so each device's halo payloads are **identical to the 1D
+    codec'd halo step over M partitions** — T-independent by
+    construction.  This is the exact analytic-bytes contract the hybrid
+    engine is tested against: the all-gather / collective-permute entries
+    of the compiled 2D-mesh HLO (``analysis/hlo_analyzer`` accounting)
+    must match these numbers exactly; any all-reduce in that HLO belongs
+    to the intra-group Phi_m (TP psums) and is charged to the intra-group
+    model (``comm_tp``), not to LP.
+    """
+    if T < 1:
+        raise ValueError(f"tp size T={T} must be >= 1")
+    return lp_halo_codec_step_collectives(cfg, M, r, dim, codec=codec)
+
+
+def comm_lp_halo_hybrid(
+    cfg: VDMCommConfig, M: int, T: int, r: float = 0.5, codec="fp32"
+) -> int:
+    """Hybrid LP×TP halo engine: group wire bytes over the full schedule.
+
+    §11 composition on an ``(M, T)`` mesh
+    (``core/hybrid.lp_forward_halo_hybrid``): the inter-group halo
+    schedule runs once per tp rank — T parallel lp rings, each moving the
+    1D codec'd halo bytes — so the group aggregate is ``T x
+    comm_lp_halo_codec(M)`` while per-device bytes (and therefore wire
+    *time* on a torus, where the T rings are disjoint physical links)
+    stay exactly at the 1D model.  Intra-group Phi_m traffic (TP psums,
+    CFG-pair gathers) is intentionally excluded: Phi_m is a black box
+    whose cost is the caller's intra-group model (``comm_tp`` /
+    ``comm_nmp`` on the sub-latent, cf. Eq. 50).
+    """
+    if T < 1:
+        raise ValueError(f"tp size T={T} must be >= 1")
+    return T * comm_lp_halo_codec(cfg, M, r, codec=codec)
+
+
+def comm_lp_gspmd_codec(cfg: VDMCommConfig, K: int, r: float,
+                        codec="int8") -> int:
+    """GSPMD stacked engine with a wire codec: bytes are UNCHANGED.
+
+    ``lp_forward_gspmd(..., codec=...)`` round-trips every window through
+    the codec before the stacked reduce (value-faithful to a codec'd
+    wire), but the reduce the partitioner emits still ships f32 — GSPMD
+    has no reduce-then-decode hook.  Kept as an explicit model so
+    benchmark tables can show WHY the halo family is the codec path:
+    same quality cost as the codec'd halo engine, zero byte savings.
+    """
+    from repro.comm.codecs import get_codec
+
+    get_codec(codec)  # validate the name
+    return comm_lp_spmd(cfg, K, r)
+
+
 def collective_wire_bytes(kind: str, payload_bytes: float, K: int) -> float:
     """HLO output-shape payload -> ring wire bytes per device.
 

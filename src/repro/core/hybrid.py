@@ -6,21 +6,46 @@ patch-aligned overlapping machinery (K -> M in Eqs. 7-10), and each group
 runs an arbitrary intra-group operator Phi_m (Eq. 43) — NMP / TP / PP /
 plain jit — as a black box over its sub-latent.
 
-On the production mesh this is realized by the GSPMD LP engine with the
-"data" axis as the group axis and "model" as the intra-group TP axis
-(launch/dryrun._vdm_lp_step); this module provides the explicit reference
-composition + the group-assignment bookkeeping used by tests and the
-hybrid example.
+Two compositions live here:
+
+* :func:`lp_forward_halo_hybrid` — the production engine on a 2D
+  ``(lp, tp)`` mesh: the PR 1 halo schedule (overlap-slab ppermutes +
+  core all-gather, full ``comm/`` codec support including residual state)
+  runs over the **group axis**, while each group executes the
+  tensor-parallel DiT forward as a black-box Phi_m over the ``tp`` axis.
+  The halo ppermute rounds are issued eagerly (no data dependence between
+  rounds) so XLA's async collective scheduler can overlap them with the
+  tail of the intra-group forward.
+* :func:`hybrid_forward` — the single-process reference composition
+  (explicit Phi_m list, paper-exact partitions) used by tests and the
+  hybrid example, plus the :class:`GroupLayout` bookkeeping of Eq. 42.
+
+Mesh contract for the SPMD engine (see docs/hybrid_lp_tp.md):
+
+* the mesh has an LP **group** axis of size M == plan.num_partitions and
+  a **tp** axis of size T >= 1 (extra axes are tolerated and treated as
+  replicated);
+* ``z`` is replicated everywhere; ``denoise_fn`` runs per device inside
+  the manual (shard_map) region and may use any ``tp_axis`` collectives
+  internally (Megatron psums, CFG-pair gathers, ...), but must return the
+  same value on every tp rank of a group (end with a tp reduction);
+* every LP collective names only ``lp_axis``, so each tp rank exchanges
+  with its same-tp peer in the neighbor groups — per-device wire bytes
+  are exactly the 1D halo model (``comm_model.comm_lp_halo_hybrid``),
+  independent of T.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from .lp_step import lp_forward
 from .partition import PartitionPlan, plan_partition
+from .uniform import UniformPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,3 +97,138 @@ def hybrid_forward(
         return next(op_iter)(sub)
 
     return lp_forward(dispatch, z, plan, extent_axis)
+
+
+# ------------------------------------------------------- 2D-mesh SPMD engine
+@dataclasses.dataclass(frozen=True)
+class HybridMeshSpec:
+    """Group-axis halo schedule bound to a concrete ``(lp, tp)`` mesh.
+
+    ``halo`` is the plain 1D ``distributed.collectives.HaloSpec`` over the
+    M groups — the wire schedule is T-independent because every transfer
+    names only the lp axis (each tp rank talks to its same-tp peer).
+    """
+
+    lp_axis: str
+    tp_axis: Optional[str]
+    num_groups: int                 # M — lp-axis size == plan partitions
+    tp_size: int                    # T — 1 when no tp axis on the mesh
+    halo: "HaloSpec"                # group-axis transfer schedule
+
+    @property
+    def mesh_shape(self) -> Tuple[int, int]:
+        return (self.num_groups, self.tp_size)
+
+
+def hybrid_halo_spec(
+    plan: UniformPlan, mesh: Mesh, lp_axis: str = "data",
+    tp_axis: Optional[str] = "model",
+) -> HybridMeshSpec:
+    """Validate the 2D-mesh contract and build the group-axis halo spec."""
+    from repro.distributed.collectives import halo_spec
+
+    M = plan.num_partitions
+    if lp_axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no lp axis {lp_axis!r}: {mesh.axis_names}")
+    if mesh.shape[lp_axis] != M:
+        raise ValueError(
+            f"lp axis {lp_axis!r} has size {mesh.shape[lp_axis]}, plan has "
+            f"M={M} groups"
+        )
+    tp = 1
+    if tp_axis is not None and tp_axis in mesh.axis_names:
+        tp = mesh.shape[tp_axis]
+    else:
+        tp_axis = None
+    return HybridMeshSpec(
+        lp_axis=lp_axis, tp_axis=tp_axis, num_groups=M, tp_size=tp,
+        halo=halo_spec(plan),
+    )
+
+
+def lp_forward_halo_hybrid(
+    denoise_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    z: jnp.ndarray,
+    plan: UniformPlan,
+    axis: int,
+    mesh: Mesh,
+    lp_axis: str = "data",
+    tp_axis: Optional[str] = "model",
+    codec=None,
+    codec_state=None,
+    eager_sends: bool = True,
+):
+    """Hybrid LP×TP halo forward on a 2D ``(lp, tp)`` mesh.
+
+    Same reconstruction math as ``core/spmd.lp_forward_halo`` — slice the
+    group window, run Phi_m, trapezoid-weight, exchange only the overlap
+    slabs over the **group axis**, normalize the own core analytically and
+    all-gather the disjoint cores — but composed with tensor parallelism:
+
+    * ``denoise_fn`` is the black-box intra-group operator Phi_m (Eq. 43).
+      It runs per device inside the manual region and may issue any
+      ``tp_axis`` collectives (Megatron-style psums,
+      :func:`tp_cfg_combine`, ...).  Its output must be tp-replicated
+      within the group.
+    * Every LP collective (ppermute rounds + core all-gather) names only
+      ``lp_axis``: wire bytes per device are exactly the 1D halo/codec
+      model (T-independent); group-aggregate bytes are T x that, carried
+      on T parallel lp rings.
+    * ``eager_sends`` (default on) issues all ppermute rounds before any
+      accumulation so the halo wires can overlap the tail of the DiT
+      forward and each other under async collective scheduling.
+
+    ``codec`` / ``codec_state`` behave as in ``lp_forward_halo``: any
+    ``comm.codecs`` codec compresses every wire payload; residual codecs
+    take state with a leading lp-axis dim (``comm.wire.
+    init_halo_wire_state``) and the call returns ``(latent, new_state)``.
+    State is sharded ``P(lp_axis)`` — replicated over tp, which stays
+    consistent because the codec arithmetic is deterministic and its
+    inputs are tp-replicated by the Phi_m contract.
+
+    Implementation: ``spmd.lp_forward_halo`` already names only
+    ``lp_axis`` in its collectives, so the hybrid engine IS that
+    function behind the validated 2D-mesh contract
+    (:func:`hybrid_halo_spec`) plus the eager-send default — one body to
+    maintain, verified per-engine by the conformance matrix.
+    """
+    hybrid_halo_spec(plan, mesh, lp_axis, tp_axis)  # validate the contract
+    from .spmd import lp_forward_halo
+
+    return lp_forward_halo(
+        denoise_fn, z, plan, axis, mesh, lp_axis,
+        codec=codec, codec_state=codec_state, eager_sends=eager_sends,
+    )
+
+
+# ------------------------------------------------ intra-group Phi_m helpers
+def tp_cfg_branch(tp_axis: str) -> jnp.ndarray:
+    """This device's CFG branch (0 = cond, 1 = uncond) on the tp axis.
+
+    Ranks alternate branches (``rank % 2``).  This extracts exactly
+    **2-way** parallelism — the CFG pair is the only axis being split —
+    so it pays off at T == 2; at larger T the extra ranks recompute a
+    branch redundantly (correct, but wasted FLOPs).  For T > 2 compose
+    real tensor parallelism inside the forward (Megatron psums over
+    ``tp_axis``) instead of, or in addition to, the CFG split.
+    """
+    return jax.lax.axis_index(tp_axis) % 2
+
+
+def tp_cfg_combine(pred_branch: jnp.ndarray, tp_axis: str,
+                   guidance) -> jnp.ndarray:
+    """Gather the CFG pair computed on alternating tp ranks and combine.
+
+    Each tp rank computed ONE guidance branch of the window prediction
+    (halving the per-device DiT batch vs the batched-CFG replication at
+    T == 2; see :func:`tp_cfg_branch` for the T > 2 caveat); the pair is
+    reunited with one intra-group all-gather — a window-sized wire on
+    the fast intra-group links, never crossing the group axis.  Only
+    rows 0 and 1 of the gathered stack are read, so redundant branches
+    on T > 2 ranks are ignored.  Output is tp-replicated, satisfying
+    the Phi_m contract.
+    """
+    from repro.diffusion.cfg import cfg_combine
+
+    stack = jax.lax.all_gather(pred_branch, tp_axis, axis=0, tiled=False)
+    return cfg_combine(stack[0], stack[1], guidance)

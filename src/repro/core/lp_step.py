@@ -117,6 +117,12 @@ class LPStepCompiler:
     ``comm.wire.simulate_halo_forward`` (the single-process mirror of
     the halo collective; pass a mesh-bound ``forward`` for real SPMD,
     stateful hooks take/return ``(pred, state)``).
+
+    ``mesh_shape`` records the ``(lp, tp)`` mesh the ``forward`` hook is
+    bound to (e.g. ``(M, T)`` for the hybrid engine).  It is part of the
+    cache key together with the full partition geometry ``(K, r)``, so a
+    mid-request :meth:`replan` — straggler eviction, elastic mesh change
+    — can NEVER be served a stale entry compiled for the old mesh shape.
     """
 
     def __init__(
@@ -133,6 +139,7 @@ class LPStepCompiler:
         donate: bool = True,
         maxsize: int = 32,
         codec=None,
+        mesh_shape: Optional[Tuple[int, ...]] = None,
     ):
         self.denoise_fn = denoise_fn
         self.update_fn = update_fn
@@ -145,6 +152,7 @@ class LPStepCompiler:
         self.use_kernel = use_kernel
         self.donate = donate
         self.maxsize = maxsize
+        self.mesh_shape = None if mesh_shape is None else tuple(mesh_shape)
         if codec is not None:
             from repro.comm.codecs import get_codec
 
@@ -158,6 +166,48 @@ class LPStepCompiler:
         self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
         self.compiles = 0
         self.hits = 0
+        # re-planning bookkeeping: the epoch bumps on every geometry
+        # change so in-flight loops (lp_denoise) reset codec residual
+        # state exactly once at the next step boundary; state_inits
+        # counts init_codec_state calls (regression-tested).
+        self.plan_epoch = 0
+        self.state_inits = 0
+
+    def replan(
+        self,
+        num_partitions: Optional[int] = None,
+        overlap_ratio: Optional[float] = None,
+        mesh_shape: Optional[Tuple[int, ...]] = None,
+        forward: Optional[Callable] = None,
+    ) -> bool:
+        """Mid-request re-plan: swap the partition geometry / mesh shape.
+
+        Safe to call from a ``lp_denoise`` ``step_hook`` (straggler- or
+        elasticity-triggered): the full geometry ``(K, r, mesh_shape)``
+        is part of the step-cache key, so entries compiled for the old
+        plan can never be hit again (they age out of the LRU), and the
+        ``plan_epoch`` bump makes the in-flight denoise loop re-derive
+        its rotation dims and re-zero codec residual state exactly once
+        — old-geometry state shapes would be garbage on the new plan.
+        Returns True when anything actually changed.
+        """
+        changed = False
+        if num_partitions is not None and num_partitions != self.num_partitions:
+            self.num_partitions = num_partitions
+            changed = True
+        if overlap_ratio is not None and overlap_ratio != self.overlap_ratio:
+            self.overlap_ratio = overlap_ratio
+            changed = True
+        if mesh_shape is not None and tuple(mesh_shape) != self.mesh_shape:
+            self.mesh_shape = tuple(mesh_shape)
+            changed = True
+        if forward is not None and forward is not self.forward:
+            # a new mesh needs a re-bound collective hook
+            self.forward = forward
+            changed = True
+        if changed:
+            self.plan_epoch += 1
+        return changed
 
     @property
     def stateful(self) -> bool:
@@ -206,6 +256,7 @@ class LPStepCompiler:
         from repro.comm.wire import init_halo_wire_state
         from repro.distributed.collectives import halo_spec
 
+        self.state_inits += 1
         axis = self.spatial_axes[dim]
         plan = self._plan(dim, z.shape[axis])
         rest = tuple(s for i, s in enumerate(z.shape) if i != axis)
@@ -219,6 +270,11 @@ class LPStepCompiler:
             dim, n, tuple(z.shape), jnp.result_type(z).name,
             _abstract_sig(scalars), _abstract_sig(extras),
             None if self.codec is None else self.codec.name,
+            # full plan geometry + epoch: a mid-request replan (new K/r,
+            # new mesh shape, re-bound forward hook) can never be served
+            # an entry compiled for the old plan
+            self.num_partitions, self.overlap_ratio, self.mesh_shape,
+            self.plan_epoch,
         )
         cached = self._cache.get(key)
         if cached is not None:
@@ -302,21 +358,17 @@ def lp_denoise(
 
     ``codec`` compresses LP wire payloads (ignored when ``compiler`` is
     given — the compiler owns the codec then).  Residual-codec state is
-    zeroed at the start of every same-dim run and discarded at its end:
-    temporal deltas live inside one fused scan, and state can never leak
-    across calls (or serving requests).
+    zeroed at every rotation-dim switch (and at every mid-request
+    re-plan, exactly once) and discarded at the end of the call:
+    temporal deltas only span consecutive same-dim steps — whether fused
+    into one scan or stepped through a hook — and state can never leak
+    across calls (or serving requests).  A ``step_hook`` may call
+    ``compiler.replan(...)`` (straggler / elastic re-planning): the next
+    step re-derives its rotation dims and compiles against the new
+    geometry; stale cache entries for the old plan are unreachable.
     """
     if step_hook is not None:
         fuse_scan = False
-    dims = usable_dims(
-        [z_T.shape[spatial_axes[d]] for d in range(3)],
-        patch_sizes,
-        num_partitions,
-    )
-    if not dims:
-        raise ValueError(
-            f"no latent dim has >= {num_partitions} patches; reduce K"
-        )
     comp = compiler
     if comp is None:
         if denoise_fn is None:
@@ -325,38 +377,86 @@ def lp_denoise(
             denoise_fn, sampler.update, num_partitions, overlap_ratio,
             patch_sizes, spatial_axes, uniform=uniform, codec=codec,
         )
-    # group consecutive same-dim steps into scan-fused runs
-    runs: list = []
-    for i in range(1, num_steps + 1):
-        dim = rotation_dim(i, dims)
-        if fuse_scan and runs and runs[-1][0] == dim:
-            runs[-1][1].append(i)
-        else:
-            runs.append((dim, [i]))
+
+    def _dims():
+        # from the compiler's CURRENT geometry: a step_hook may replan K
+        # mid-request (runtime/straggler + runtime/elastic)
+        dims = usable_dims(
+            [z_T.shape[comp.spatial_axes[d]] for d in range(3)],
+            comp.patch_sizes,
+            comp.num_partitions,
+        )
+        if not dims:
+            raise ValueError(
+                f"no latent dim has >= {comp.num_partitions} patches; reduce K"
+            )
+        return dims
+
+    dims = _dims()
     # private copy: the first step donates its input buffer, and the
     # caller's z_T must survive the call
     z = jnp.array(z_T, copy=True) if comp.donate else jnp.asarray(z_T)
-    for dim, idxs in runs:
+
+    if fuse_scan:
+        # group consecutive same-dim steps into scan-fused runs; codec
+        # state is zeroed per run (consecutive runs always switch dims,
+        # so there is never same-dim state to carry between them)
+        runs: list = []
+        for i in range(1, num_steps + 1):
+            dim = rotation_dim(i, dims)
+            if runs and runs[-1][0] == dim:
+                runs[-1][1].append(i)
+            else:
+                runs.append((dim, [i]))
+        for dim, idxs in runs:
+            ts = [np.float32(sampler.timestep(i)) for i in idxs]
+            scs = [sampler.step_scalars(i) for i in idxs]
+            st = comp.init_codec_state(dim, z) if comp.stateful else None
+            if len(idxs) == 1:
+                fn = comp.step_fn(dim, z, 1, scs[0], extras)
+                if comp.stateful:
+                    z, _ = fn(z, st, ts[0], scs[0], extras)
+                else:
+                    z = fn(z, ts[0], scs[0], extras)
+            else:
+                ts_arr = jnp.asarray(np.stack(ts))
+                scs_arr = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs)), *scs
+                )
+                fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras)
+                if comp.stateful:
+                    z, _ = fn(z, st, ts_arr, scs_arr, extras)
+                else:
+                    z = fn(z, ts_arr, scs_arr, extras)
+        return z
+
+    # Unfused (step_hook) path: one compiled step per call, codec state
+    # carried across consecutive same-dim steps (temporal deltas stay
+    # meaningful between steps) and reset on a dim switch or a re-plan.
+    # The hook may call ``comp.replan(...)``: the epoch bump re-derives
+    # the rotation dims and resets residual state exactly once — old
+    # state shapes would be garbage on the new plan.
+    cur_state = None
+    cur_dim = None
+    cur_epoch = comp.plan_epoch
+    for i in range(1, num_steps + 1):
         if step_hook is not None:
-            for i in idxs:
-                step_hook(i)
-        ts = [np.float32(sampler.timestep(i)) for i in idxs]
-        scs = [sampler.step_scalars(i) for i in idxs]
-        st = comp.init_codec_state(dim, z) if comp.stateful else None
-        if len(idxs) == 1:
-            fn = comp.step_fn(dim, z, 1, scs[0], extras)
-            if comp.stateful:
-                z, _ = fn(z, st, ts[0], scs[0], extras)
-            else:
-                z = fn(z, ts[0], scs[0], extras)
+            step_hook(i)
+        if comp.plan_epoch != cur_epoch:      # mid-request re-plan
+            cur_epoch = comp.plan_epoch
+            dims = _dims()
+            cur_state, cur_dim = None, None
+        dim = rotation_dim(i, dims)
+        t = np.float32(sampler.timestep(i))
+        sc = sampler.step_scalars(i)
+        if comp.stateful and (cur_state is None or dim != cur_dim):
+            cur_state = comp.init_codec_state(dim, z)
+        cur_dim = dim
+        fn = comp.step_fn(dim, z, 1, sc, extras)
+        if comp.stateful:
+            z, cur_state = fn(z, cur_state, t, sc, extras)
         else:
-            ts_arr = jnp.asarray(np.stack(ts))
-            scs_arr = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *scs)
-            fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras)
-            if comp.stateful:
-                z, _ = fn(z, st, ts_arr, scs_arr, extras)
-            else:
-                z = fn(z, ts_arr, scs_arr, extras)
+            z = fn(z, t, sc, extras)
     return z
 
 

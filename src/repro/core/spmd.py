@@ -149,10 +149,12 @@ def blend_windows_coded(
             interpret=interpret, out_dtype=preds.dtype,
         )
         return jnp.moveaxis(out.reshape((plan.extent,) + rest), 0, axis)
-    roundtripped = jnp.stack([
-        codec.decode(*codec.encode(preds[k]), preds[k].shape)
-        for k in range(K)
-    ]).astype(preds.dtype)
+    # vmapped over the stacked axis (one per-slab scale per window): under
+    # GSPMD this keeps the axis sharded over the lp axis — a per-k Python
+    # loop of dynamic slices would force an all-gather of the stack
+    roundtripped = jax.vmap(
+        lambda p: codec.decode(*codec.encode(p), p.shape)
+    )(preds).astype(preds.dtype)
     return blend_windows(roundtripped, plan, axis, use_kernel=use_kernel)
 
 
@@ -181,8 +183,21 @@ def lp_forward_gspmd(
     axis: int,
     mesh: Mesh,
     lp_axis: str = "data",
+    codec=None,
 ) -> jnp.ndarray:
     """LP forward with GSPMD sharding constraints on the stacked axis.
+
+    ``codec`` routes the stacked reduce through
+    :func:`blend_windows_coded`: every window prediction is round-tripped
+    through the wire codec (vmapped over the sharded stacked axis, one
+    per-slab scale per window) before the scatter-sum, so the engine's
+    output is bit-faithful to what a codec'd wire would deliver instead
+    of silently shipping f32 values.  Note the *transfer* the partitioner
+    emits still carries f32 (a psum must reduce decoded values — GSPMD
+    offers no hook to reduce-then-decode), which is exactly why the halo
+    family, not GSPMD, is the production codec path; see
+    ``comm_model.comm_lp_gspmd_codec``.  Stateless codecs only (residual
+    state needs the explicit halo schedule).
 
     Caveat (jax 0.4.x): the legacy partitioner lowers the stacked-axis
     reduce to an all-reduce over EVERY device when the mesh has additional
@@ -191,6 +206,17 @@ def lp_forward_gspmd(
     the dry-run, is unaffected by values).  Meshes with Auto axis types
     (jax >= 0.5) lower it correctly.
     """
+    if codec is not None:
+        from repro.comm.codecs import get_codec
+
+        codec = get_codec(codec)
+        if codec.stateful:
+            raise ValueError(
+                f"codec {codec.name!r} is stateful; the GSPMD engine only "
+                "supports stateless codecs (use the halo engines)"
+            )
+        if codec.name == "fp32":
+            codec = None
     windows = stack_windows(z, plan, axis)
     spec = [None] * windows.ndim
     spec[0] = lp_axis
@@ -204,7 +230,11 @@ def lp_forward_gspmd(
     # jnp form always: the partitioner must see the scatter-sum to lower
     # it to a reduce over the lp axis (an opaque kernel would force an
     # all-gather of the stacked windows instead)
-    out = blend_windows(preds, plan, axis, use_kernel=False)
+    if codec is not None:
+        out = blend_windows_coded(preds, plan, axis, codec=codec,
+                                  use_kernel=False)
+    else:
+        out = blend_windows(preds, plan, axis, use_kernel=False)
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
 
 
@@ -263,10 +293,10 @@ def lp_forward_shard_map(
 
 
 # ------------------------------------------------------- engine selection
-LP_IMPLS = ("auto", "gspmd", "shard_map", "halo")
+LP_IMPLS = ("auto", "gspmd", "shard_map", "halo", "halo_hybrid")
 
 
-def select_lp_impl(num_partitions: int) -> str:
+def select_lp_impl(num_partitions: int, tp: int = 1) -> str:
     """Resolve ``lp_impl="auto"`` to a concrete SPMD engine.
 
     The halo schedule's wire bytes are ``K(K-1) core_pad row + Σ_t
@@ -276,8 +306,17 @@ def select_lp_impl(num_partitions: int) -> str:
     break-even, so keep the psum engine there; from K>=3 the overlap
     slabs shrink like r·D/K and halo wins at any r<=1 (ROADMAP, PR 1
     measurements — strictly better for K>=4 on every benchmark config).
+
+    ``tp`` is the intra-group tensor-parallel degree: on a 2D ``(lp,
+    tp)`` mesh the break-even is unchanged (both engines' per-device
+    wire bytes are T-independent — each tp rank runs the lp collective
+    on its own ring), but the halo family must be the *hybrid* engine
+    (``core/hybrid.lp_forward_halo_hybrid``), whose eager-send ordering
+    lets the halo rounds overlap the tail of the intra-group forward.
     """
-    return "shard_map" if num_partitions <= 2 else "halo"
+    if num_partitions <= 2:
+        return "shard_map"
+    return "halo_hybrid" if tp > 1 else "halo"
 
 
 # ---------------------------------------------------------- halo-exchange
@@ -290,6 +329,7 @@ def lp_forward_halo(
     lp_axis: str = "data",
     codec=None,
     codec_state=None,
+    eager_sends: bool = False,
 ):
     """Halo-exchange LP forward: the fast-path collective schedule.
 
@@ -315,6 +355,14 @@ def lp_forward_halo(
     ``comm.wire.init_halo_wire_state`` (leading lp-axis dim) and this
     returns ``(latent, new_state)`` instead of just the latent — the
     compiled-step cache threads it through the ``lax.scan`` carry.
+
+    All collectives name only ``lp_axis``, so the engine composes with
+    extra mesh axes for free: the denoiser may use them internally (the
+    hybrid LP×TP engine, ``core/hybrid.lp_forward_halo_hybrid``, is this
+    function behind a validated 2D-mesh contract).  ``eager_sends``
+    issues every ppermute round before any accumulation (see
+    ``distributed.collectives.halo_exchange``) so async collective
+    scheduling can overlap the rounds with the tail of the denoiser.
     """
     from repro.distributed.collectives import halo_exchange, halo_spec
 
@@ -366,7 +414,8 @@ def lp_forward_halo(
         def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
             k = jax.lax.axis_index(lp_axis)
             wpred = _weighted_window(z_rep, k)
-            acc = halo_exchange(wpred, spec, k, lp_axis)
+            acc = halo_exchange(wpred, spec, k, lp_axis,
+                                eager_sends=eager_sends)
             nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
             core = (acc[: spec.core_pad] / norm_core[k].reshape(nshape)).astype(
                 z_rep.dtype
@@ -392,7 +441,9 @@ def lp_forward_halo(
         def per_device_codec(z_rep: jnp.ndarray) -> jnp.ndarray:
             k = jax.lax.axis_index(lp_axis)
             wpred = _weighted_window(z_rep, k)
-            acc, _ = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, {})
+            acc, _ = compressed_halo_exchange(wpred, spec, k, lp_axis,
+                                              codec, {},
+                                              eager_sends=eager_sends)
             nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
             core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
             gathered, _ = compressed_core_gather(core, k, lp_axis, codec, {}, K)
@@ -411,7 +462,8 @@ def lp_forward_halo(
         k = jax.lax.axis_index(lp_axis)
         st = jax.tree.map(lambda s: s[0], state)  # drop the lp-axis dim
         wpred = _weighted_window(z_rep, k)
-        acc, st = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, st)
+        acc, st = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, st,
+                                           eager_sends=eager_sends)
         nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
         core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
         gathered, st = compressed_core_gather(core, k, lp_axis, codec, st, K)

@@ -179,7 +179,11 @@ def halo_spec(plan) -> HaloSpec:
 
 
 def halo_exchange(
-    wpred: jnp.ndarray, spec: HaloSpec, rank: jnp.ndarray, axis_name: str
+    wpred: jnp.ndarray,
+    spec: HaloSpec,
+    rank: jnp.ndarray,
+    axis_name: str,
+    eager_sends: bool = False,
 ) -> jnp.ndarray:
     """Cross-rank reduction of overlapping window predictions, halo-only.
 
@@ -192,23 +196,39 @@ def halo_exchange(
 
     Communication: one ppermute of slab size per transfer round — O(halo)
     bytes instead of the O(S_z) psum of the naive reconstruction.
+
+    ``eager_sends`` issues every ppermute round up front, before any
+    accumulation: the rounds carry no data dependence on each other, so
+    XLA's async collective scheduler can start them all while the local
+    own-core copy (and, on the hybrid mesh, the tail of the intra-group
+    Phi_m forward that produces late rows of ``wpred``) is still in
+    flight.  The default ordering interleaves send/accumulate per round,
+    which serializes the rounds through the accumulator chain.
     """
     K = spec.num_partitions
     acc_len = spec.core_pad + spec.max_transfer
     trail = (1,) * (wpred.ndim - 1)
     acc = jnp.zeros((acc_len,) + wpred.shape[1:], wpred.dtype)
-    # own window -> own core (no communication)
-    own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
-    own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
-    acc = jax.lax.dynamic_update_slice_in_dim(acc, own, 0, 0)
-    for t in spec.transfers:
+
+    def send(t: HaloTransfer) -> jnp.ndarray:
         slab = jax.lax.dynamic_slice_in_dim(
             wpred, jnp.asarray(t.src_start)[rank], t.length, 0
         )
         valid = jnp.arange(t.length) < jnp.asarray(t.src_len)[rank]
         slab = slab * valid.reshape((t.length,) + trail).astype(slab.dtype)
-        got = jax.lax.ppermute(slab, axis_name, t.perm)
+        return jax.lax.ppermute(slab, axis_name, t.perm)
+
+    def deposit(acc, t: HaloTransfer, got: jnp.ndarray) -> jnp.ndarray:
         dst = jnp.asarray(t.dst_start)[rank]
         cur = jax.lax.dynamic_slice_in_dim(acc, dst, t.length, 0)
-        acc = jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
+        return jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
+
+    received = [send(t) for t in spec.transfers] if eager_sends else None
+    # own window -> own core (no communication)
+    own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
+    own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
+    acc = jax.lax.dynamic_update_slice_in_dim(acc, own, 0, 0)
+    for ti, t in enumerate(spec.transfers):
+        got = received[ti] if eager_sends else send(t)
+        acc = deposit(acc, t, got)
     return acc

@@ -128,6 +128,7 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                  lp_impl: str = "gspmd", wire_codec: Optional[str] = None):
     """Build the jitted LP denoising step (one forward pass, dim=height)."""
     from repro.core import plan_uniform
+    from repro.core.hybrid import lp_forward_halo_hybrid
     from repro.core.spmd import (
         lp_forward_gspmd,
         lp_forward_halo,
@@ -139,15 +140,20 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
     from repro.models import dit
 
     K = mesh.shape["data"]
+    tp = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") \
+        else dict(mesh.shape).get("model", 1)
     if lp_impl == "auto":
         # comm-model break-even rule; a wire codec implies the halo
-        # engine (that's where the codec layer lives)
-        lp_impl = "halo" if wire_codec not in (None, "fp32") \
-            else select_lp_impl(K)
-    if wire_codec not in (None, "fp32") and lp_impl != "halo":
+        # family (that's where the codec layer lives)
+        if wire_codec not in (None, "fp32"):
+            lp_impl = "halo_hybrid" if tp > 1 else "halo"
+        else:
+            lp_impl = select_lp_impl(K, tp)
+    if wire_codec not in (None, "fp32") and lp_impl == "shard_map":
         raise ValueError(
-            f"--wire-codec {wire_codec} needs the halo engine; got "
-            f"--lp-impl {lp_impl} (the measured HLO would be uncoded)"
+            f"--wire-codec {wire_codec} needs the halo family (or gspmd's "
+            f"value-faithful blend); got --lp-impl {lp_impl} (the measured "
+            "HLO would be uncoded)"
         )
     h_lat = shape.height // 8
     plan = plan_uniform(h_lat, cfg.patch_sizes[1], K, parallel.overlap_ratio, dim=1)
@@ -180,11 +186,39 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                     pred, P("pod", *([None] * (pred.ndim - 1))))
             return cfg_combine(pred[:b], pred[b:], guidance)
 
+        def denoise_tp_cfg(window):
+            # hybrid Phi_m at T=2: the two tp ranks take one CFG branch
+            # each — half the DiT batch per device, pair reunited by one
+            # intra-group all-gather (core/hybrid.tp_cfg_combine).  The
+            # split is 2-way only, so larger T falls back to the batched
+            # CFG denoiser (see the dispatch below).
+            from repro.core.hybrid import tp_cfg_branch, tp_cfg_combine
+
+            br = tp_cfg_branch("model")
+            my_ctx = jax.lax.dynamic_slice_in_dim(
+                ctx, br * ctx.shape[0] // 2, ctx.shape[0] // 2, 0
+            )
+            pred = dit.forward(params, window, t, my_ctx, cfg,
+                               kv_chunk=kv_chunk)
+            return tp_cfg_combine(pred, "model", guidance)
+
         if lp_impl == "shard_map":
             pred = lp_forward_shard_map(denoise, z, plan, 2, mesh, "data")
-        elif lp_impl == "halo":
+        elif lp_impl in ("halo", "halo_hybrid"):
+            hybrid = lp_impl == "halo_hybrid"
+            den = denoise_tp_cfg if (hybrid and tp == 2) else denoise
+            if hybrid:
+                def fwd(fn, zz, pl, ax, st=None, **kw):
+                    return lp_forward_halo_hybrid(
+                        fn, zz, pl, ax, mesh, "data", "model",
+                        codec_state=st, **kw)
+            else:
+                def fwd(fn, zz, pl, ax, st=None, **kw):
+                    return lp_forward_halo(
+                        fn, zz, pl, ax, mesh, "data",
+                        codec_state=st, **kw)
             if wire_codec in (None, "fp32"):
-                pred = lp_forward_halo(denoise, z, plan, 2, mesh, "data")
+                pred = fwd(den, z, plan, 2)
             else:
                 from repro.comm import get_codec, init_halo_wire_state
                 from repro.distributed.collectives import halo_spec
@@ -198,16 +232,12 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                         codec, halo_spec(plan),
                         tuple(s for i, s in enumerate(z.shape) if i != 2),
                     )
-                    pred, _ = lp_forward_halo(
-                        denoise, z, plan, 2, mesh, "data",
-                        codec=codec, codec_state=st,
-                    )
+                    pred, _ = fwd(den, z, plan, 2, st=st, codec=codec)
                 else:
-                    pred = lp_forward_halo(
-                        denoise, z, plan, 2, mesh, "data", codec=codec
-                    )
+                    pred = fwd(den, z, plan, 2, codec=codec)
         else:
-            pred = lp_forward_gspmd(denoise, z, plan, 2, mesh, "data")
+            pred = lp_forward_gspmd(denoise, z, plan, 2, mesh, "data",
+                                    codec=wire_codec)
         return sampler.step(z, pred, 1)
 
     return step
@@ -419,11 +449,16 @@ def main(argv=None) -> int:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--lp-impl", default="gspmd",
-                    choices=["auto", "gspmd", "shard_map", "halo"])
+                    choices=["auto", "gspmd", "shard_map", "halo",
+                             "halo_hybrid"])
     from repro.comm.codecs import CODEC_NAMES
 
     ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
-                    help="compress LP halo payloads (halo/auto impls)")
+                    help="compress LP halo payloads (halo/auto impls; "
+                         "gspmd takes stateless codecs value-faithfully)")
+    ap.add_argument("--mesh", default=None,
+                    help="MxT hybrid mesh (LP groups x intra-group TP), "
+                         "e.g. 4x2 — replaces the production mesh")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -437,12 +472,22 @@ def main(argv=None) -> int:
         todo.append((args.arch, args.shape))
 
     meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.mesh:
+        meshes = [False]  # --mesh overrides; one iteration, one mesh
     results = []
     failures = 0
     for multi_pod in meshes:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        if args.mesh:
+            from repro.launch.mesh import make_hybrid_mesh, parse_mesh
+
+            m, t = parse_mesh(args.mesh)
+            mesh = make_hybrid_mesh(m, t)
+            mesh_tag = f"{m}x{t}"
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            mesh_tag = "2x16x16" if multi_pod else "16x16"
         for arch, shape in todo:
-            tag = f"{arch} x {shape} [{'2x16x16' if multi_pod else '16x16'}]"
+            tag = f"{arch} x {shape} [{mesh_tag}]"
             try:
                 rec = lower_cell(arch, shape, multi_pod, args.lp_impl,
                                  mesh=mesh, wire_codec=args.wire_codec)

@@ -32,3 +32,39 @@ def local_mesh(model: int = 1, data: Optional[int] = None):
     if data is None:
         data = n // model
     return make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh(spec: str) -> Tuple[int, int]:
+    """Parse a ``--mesh MxT`` CLI argument into ``(lp_groups, tp)``.
+
+    ``M`` is the LP group-axis size (== K partitions of the inter-group
+    plan), ``T`` the intra-group tensor-parallel degree; ``"4x2"`` ->
+    ``(4, 2)``.  A bare ``"4"`` means no tp axis, ``(4, 1)``.
+    """
+    parts = spec.lower().replace("×", "x").split("x")
+    if not 1 <= len(parts) <= 2:
+        raise ValueError(f"--mesh wants MxT (e.g. 4x2), got {spec!r}")
+    try:
+        m = int(parts[0])
+        t = int(parts[1]) if len(parts) == 2 else 1
+    except ValueError as e:
+        raise ValueError(f"--mesh wants MxT (e.g. 4x2), got {spec!r}") from e
+    if m < 2 or t < 1:
+        raise ValueError(f"--mesh needs M>=2 LP groups and T>=1, got {spec!r}")
+    return m, t
+
+
+def make_hybrid_mesh(lp: int, tp: int = 1):
+    """``(lp, tp)`` mesh named ("data", "model") over the first lp*tp
+    devices — the hybrid LP x TP engine's layout.  Built directly from a
+    reshaped device array so a mesh smaller than the host's device count
+    works on every jax version (tests place K=3 rings on 8 fake CPUs).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = lp * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"mesh {lp}x{tp} needs {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(lp, tp), ("data", "model"))

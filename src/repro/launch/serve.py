@@ -24,10 +24,16 @@ def main(argv=None):
     ap.add_argument("--overlap", type=float, default=0.5)
     ap.add_argument("--frames-latent", type=int, default=6)
     ap.add_argument("--lp-impl", default="auto",
-                    choices=["auto", "uniform", "shard_map", "halo"],
-                    help="LP engine; auto = psum math at K=2, halo beyond")
+                    choices=["auto", "uniform", "shard_map", "halo",
+                             "halo_hybrid"],
+                    help="LP engine; auto = psum math at K=2, halo beyond "
+                         "(hybrid halo when the mesh has a tp axis)")
     ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
                     help="compress LP halo wire payloads")
+    ap.add_argument("--mesh", default=None,
+                    help="MxT hybrid mesh (LP groups x intra-group TP), "
+                         "e.g. 4x2; M must equal --partitions.  Needs "
+                         "M*T local devices")
     args = ap.parse_args(argv)
 
     cfg = get_config("wan21-dit-1.3b").reduced()
@@ -37,13 +43,26 @@ def main(argv=None):
     def fwd(p, z, t, c, cfg_model):
         return dit.forward(p, z, t, c, cfg_model)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_hybrid_mesh, parse_mesh
+
+        m, t = parse_mesh(args.mesh)
+        if m != args.partitions:
+            raise SystemExit(
+                f"--mesh {args.mesh}: LP axis {m} != --partitions "
+                f"{args.partitions}")
+        mesh = make_hybrid_mesh(m, t)
+
     engine = LPServingEngine(fwd, params, cfg,
                              num_partitions=args.partitions,
                              overlap_ratio=args.overlap,
                              num_steps=args.steps,
                              lp_impl=args.lp_impl,
-                             wire_codec=args.wire_codec)
-    print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name}")
+                             wire_codec=args.wire_codec,
+                             mesh=mesh)
+    print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name} "
+          f"tp={engine.tp}")
     for i in range(args.requests):
         engine.submit(VideoRequest(
             request_id=i,

@@ -30,6 +30,45 @@ def reshard_tree(tree: Any, mesh: Mesh, parallel: ParallelConfig) -> Any:
     )
 
 
+def replan_lp_compiler(compiler, new_mesh_shape, forward=None) -> bool:
+    """Mid-request elastic re-plan of a live LP step compiler.
+
+    Retargets ``compiler`` (a ``core/lp_step.LPStepCompiler``) at a new
+    ``(lp, tp)`` mesh shape — straggler-group eviction
+    (``runtime.straggler.StragglerState.propose_group_eviction``), a
+    failed host, or a scale-up.  The lp-axis size becomes the new K.
+
+    Contract (regression-tested in tests/test_replan.py):
+
+    * the full plan geometry is part of the step-cache key, so no step
+      compiled for the old mesh shape is ever reused;
+    * the compiler's ``plan_epoch`` bump makes an in-flight
+      ``lp_denoise`` loop reset codec residual state exactly once at the
+      next step boundary (old state shapes are garbage on the new plan);
+    * a compiler whose ``forward`` hook is mesh-bound (the SPMD engines
+      close over a jax ``Mesh`` whose lp axis must equal K) MUST be
+      given a re-bound ``forward`` built on the shrunken/grown mesh
+      whenever K changes — the old hook would reject the new plan at
+      trace time.  This function raises immediately instead of letting
+      that happen mid-denoise.  Simulate-path compilers (``forward is
+      None``) need nothing.
+    """
+    new_mesh_shape = tuple(new_mesh_shape)
+    if (compiler.forward is not None and forward is None
+            and new_mesh_shape[0] != compiler.num_partitions):
+        raise ValueError(
+            "re-planning the lp-axis size of a mesh-bound compiler needs a "
+            "re-bound forward hook (the old hook closes over a mesh with "
+            f"lp={compiler.num_partitions}, new plan wants "
+            f"lp={new_mesh_shape[0]})"
+        )
+    return compiler.replan(
+        num_partitions=new_mesh_shape[0],
+        mesh_shape=new_mesh_shape,
+        forward=forward,
+    )
+
+
 def restore_elastic(
     ckpt_dir: str,
     tree_like: Any,

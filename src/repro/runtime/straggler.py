@@ -28,6 +28,11 @@ class StragglerState:
 
     def observe(self, step_times: Sequence[float]) -> None:
         t = np.asarray(step_times, dtype=np.float64)
+        if len(t) != self.num_partitions:
+            # group count changed without evict() — restart the EMA on
+            # the new layout rather than broadcasting stale history
+            self.num_partitions = len(t)
+            self._ema = None
         if self._ema is None:
             self._ema = t
         else:
@@ -44,6 +49,48 @@ class StragglerState:
     def needs_rebalance(self) -> bool:
         s = self.speeds
         return bool((s.max() - s.min()) / s.max() > self.rebalance_threshold)
+
+    @property
+    def slowest(self) -> int:
+        """Index of the slowest group (largest step-time EMA)."""
+        if self._ema is None:
+            return 0
+        return int(np.argmax(self._ema))
+
+    def evict(self, group: int) -> None:
+        """Drop ``group`` from the tracked layout after an applied
+        eviction: the EMA row is removed so surviving groups keep their
+        history under their NEW indices and the next ``observe`` expects
+        ``num_partitions - 1`` step times."""
+        if not 0 <= group < self.num_partitions:
+            raise ValueError(f"group {group} not in [0, {self.num_partitions})")
+        self.num_partitions -= 1
+        if self._ema is not None:
+            self._ema = np.delete(self._ema, group)
+
+    def propose_group_eviction(
+        self, mesh_shape, slowdown_factor: float = 2.0
+    ):
+        """Mid-request eviction proposal for the hybrid ``(M, T)`` mesh.
+
+        Core re-sizing (:func:`plan_weighted_partition`) absorbs mild
+        imbalance, but a group that is ``>= slowdown_factor`` slower than
+        the median (dying host, broken ICI link) should be dropped from
+        the LP ring entirely: returns ``(evicted_group, new_mesh_shape)``
+        with ``M - 1`` groups, or ``None`` when no group is that far
+        gone.  The caller applies it with
+        ``runtime.elastic.replan_lp_compiler`` — which guarantees the
+        compiled-step cache never reuses an entry for the old mesh shape
+        and codec residual state resets exactly once — and then calls
+        :meth:`evict` so this monitor tracks the shrunken ring.
+        """
+        if self._ema is None or mesh_shape[0] <= 2:
+            return None
+        worst = self.slowest
+        med = float(np.median(np.delete(self._ema, worst)))
+        if med <= 0 or float(self._ema[worst]) < slowdown_factor * med:
+            return None
+        return worst, (mesh_shape[0] - 1,) + tuple(mesh_shape[1:])
 
 
 def plan_weighted_partition(

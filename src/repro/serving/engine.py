@@ -80,6 +80,7 @@ class LPServingEngine:
         wire_codec: Optional[str] = None,
         mesh=None,
         lp_axis: str = "data",
+        tp_axis: str = "model",
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -97,42 +98,60 @@ class LPServingEngine:
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
         self._sampler = FlowMatchEuler(num_steps)
         # Engine selection: "auto" follows the comm model (psum at K=2,
-        # halo beyond — select_lp_impl); a non-trivial wire codec implies
-        # the halo-family engine, which is where the codec layer lives.
+        # halo family beyond — select_lp_impl); a non-trivial wire codec
+        # implies the halo family, which is where the codec layer lives.
+        # On a 2D (lp, tp) mesh the halo family is the hybrid engine:
+        # the group-axis halo schedule with the TP DiT forward as the
+        # black-box intra-group Phi_m.
         self.codec = get_codec(wire_codec)
         codec_active = self.codec.name not in ("fp32", "identity")
-        explicit_halo = lp_impl == "halo"
+        explicit_halo = lp_impl in ("halo", "halo_hybrid")
+        tp = 1
+        if mesh is not None and tp_axis in mesh.axis_names:
+            tp = mesh.shape[tp_axis]
         if lp_impl == "auto":
-            lp_impl = "halo" if codec_active else select_lp_impl(self.K)
-        if codec_active and lp_impl != "halo":
+            if codec_active:
+                lp_impl = "halo_hybrid" if tp > 1 else "halo"
+            else:
+                lp_impl = select_lp_impl(self.K, tp)
+        if codec_active and lp_impl not in ("halo", "halo_hybrid"):
             raise ValueError(
-                f"wire_codec={self.codec.name!r} needs the halo engine "
+                f"wire_codec={self.codec.name!r} needs the halo family "
                 f"(the codec layer lives there), got lp_impl={lp_impl!r}"
             )
         self.lp_impl = lp_impl
         self.mesh = mesh
+        self.tp = tp
         forward = None
         compiler_codec = None
         if mesh is not None:
+            from repro.core.hybrid import lp_forward_halo_hybrid
             from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
 
-            if self.lp_impl == "halo":
+            if self.lp_impl in ("halo", "halo_hybrid"):
                 codec = self.codec
+                if self.lp_impl == "halo_hybrid":
+                    def halo_fwd(fn, z, plan, axis, **kw):
+                        return lp_forward_halo_hybrid(
+                            fn, z, plan, axis, mesh, lp_axis, tp_axis, **kw)
+                else:
+                    def halo_fwd(fn, z, plan, axis, **kw):
+                        return lp_forward_halo(
+                            fn, z, plan, axis, mesh, lp_axis, **kw)
                 if codec.stateful:
                     forward = (lambda fn, z, plan, axis, st:
-                               lp_forward_halo(fn, z, plan, axis, mesh,
-                                               lp_axis, codec=codec,
-                                               codec_state=st))
+                               halo_fwd(fn, z, plan, axis, codec=codec,
+                                        codec_state=st))
                 else:
                     forward = (lambda fn, z, plan, axis:
-                               lp_forward_halo(fn, z, plan, axis, mesh,
-                                               lp_axis, codec=codec))
+                               halo_fwd(fn, z, plan, axis, codec=codec))
                 compiler_codec = codec
             else:
                 forward = (lambda fn, z, plan, axis:
                            lp_forward_shard_map(fn, z, plan, axis, mesh,
                                                 lp_axis))
-        elif self.lp_impl == "halo" and (codec_active or explicit_halo):
+        elif self.lp_impl in ("halo", "halo_hybrid") and \
+                (codec_active or explicit_halo):
             # off-mesh: the single-process mirror of the halo collective
             # (comm.wire.simulate_halo_forward — LPStepCompiler's codec
             # default), bit-faithful incl. the codec round-trips.  Only
@@ -155,6 +174,7 @@ class LPServingEngine:
             uniform=uniform,
             forward=forward,
             codec=compiler_codec,
+            mesh_shape=None if mesh is None else (self.K, tp),
         )
 
     # ------------------------------------------------------------- queue

@@ -1,0 +1,244 @@
+"""LP engine conformance matrix — the single source of truth.
+
+One parametrized suite asserting numerical equivalence across every LP
+SPMD engine x K x rotation dim x wire codec, against the fp32 psum-math
+reference (``lp_forward_uniform``).  Cells with an exact wire (fp32
+codec, or no codec) must match to 1e-5; lossy codecs are gated at the
+documented PSNR floors below (vs the fp32 reference — int8-family cells
+sit >= 40 dB, int4 trades quality for an 8x wire and gets its own
+documented floor; see docs/hybrid_lp_tp.md).
+
+Engines (``ENGINE_CODECS`` is the support matrix — a future engine joins
+the suite by adding a row here and a branch in the subprocess runner):
+
+  * ``psum``        — ``core/spmd.lp_forward_shard_map`` (fp32 wire only)
+  * ``gspmd``       — ``core/spmd.lp_forward_gspmd`` (stateless codecs,
+                      value-faithful blend; single-axis mesh on jax 0.4.x)
+  * ``halo``        — ``core/spmd.lp_forward_halo`` (all codecs)
+  * ``halo_hybrid`` — ``core/hybrid.lp_forward_halo_hybrid`` on a
+                      ``(K, 2)`` mesh with a Megatron-style TP Phi_m
+                      (all codecs)
+  * ``simulate``    — ``comm.wire.simulate_halo_forward``, the
+                      single-process mirror (all codecs; runs in-process
+                      in the fast tier too)
+
+The SPMD cells run on 8 fake CPU devices in one subprocess per K (the
+device-count XLA flag must not leak into this process).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import get_codec, init_halo_wire_state, simulate_halo_forward
+from repro.core import plan_uniform
+from repro.core.lp_step import lp_forward_uniform
+from repro.distributed.collectives import halo_spec
+
+# ------------------------------------------------------------ the matrix
+KS = (2, 3, 4)
+# z is (T, H, W, C); dim d partitions axis d with patch PATCHES[d]
+Z_SHAPE = (8, 12, 10, 4)
+PATCHES = (1, 2, 2)
+R = 0.5
+
+ALL_CODECS = ("fp32", "bf16", "int8", "int4", "int8-residual")
+STATELESS = ("fp32", "bf16", "int8", "int4")
+ENGINE_CODECS = {
+    "psum": ("fp32",),            # the psum engine has no codec layer
+    "gspmd": STATELESS,           # residual state needs the halo schedule
+    "halo": ALL_CODECS,
+    "halo_hybrid": ALL_CODECS,
+    "simulate": ALL_CODECS,
+}
+# documented PSNR floors (dB) for lossy wires vs the fp32 psum reference,
+# single forward pass on N(0,1) latents; exact cells use allclose 1e-5
+PSNR_FLOOR_DB = {
+    "bf16": 50.0,
+    "int8": 40.0,
+    "int8-residual": 40.0,
+    "int4": 24.0,
+    "int4-residual": 24.0,
+}
+
+
+def _psnr(a, b) -> float:
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    mse = float(np.mean((a - b) ** 2))
+    return float(10 * np.log10(float(np.abs(b).max()) ** 2 / max(mse, 1e-30)))
+
+
+def _check_cell(out, ref, codec_name: str, tag: str) -> None:
+    if codec_name == "fp32":
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-5, err_msg=tag
+        )
+    else:
+        db = _psnr(out, ref)
+        floor = PSNR_FLOOR_DB[codec_name]
+        assert db >= floor, f"{tag}: {db:.1f} dB < {floor} dB floor"
+
+
+def _cells_for(engine: str, K: int):
+    for dim in range(3):
+        for codec in ENGINE_CODECS[engine]:
+            yield dim, codec
+
+
+# --------------------------------------------- fast tier: simulate engine
+def _den(x):
+    return jnp.tanh(x) * 0.5 + x
+
+
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("dim", [0, 1, 2])
+@pytest.mark.parametrize("codec_name", ALL_CODECS + ("int4-residual",))
+def test_simulate_engine_conformance(K, dim, codec_name):
+    """The single-process mirror passes every cell of the matrix without
+    needing fake devices — this is the tier-1 face of the suite."""
+    rng = np.random.default_rng(7)
+    z = jnp.asarray(rng.normal(size=Z_SHAPE).astype(np.float32))
+    plan = plan_uniform(Z_SHAPE[dim], PATCHES[dim], K, R, dim)
+    ref = lp_forward_uniform(_den, z, plan, axis=dim)
+    codec = get_codec(codec_name)
+    if codec.stateful:
+        rest = tuple(s for i, s in enumerate(Z_SHAPE) if i != dim)
+        st = init_halo_wire_state(codec, halo_spec(plan), rest)
+        out, _ = simulate_halo_forward(_den, z, plan, dim, codec, st)
+    else:
+        out = simulate_halo_forward(_den, z, plan, dim, codec_name)
+    _check_cell(out, ref, codec_name, f"simulate/K{K}/dim{dim}/{codec_name}")
+
+
+# ------------------------------------------- slow tier: SPMD engine matrix
+SPMD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import plan_uniform
+    from repro.core.hybrid import lp_forward_halo_hybrid
+    from repro.core.lp_step import lp_forward_uniform
+    from repro.core.spmd import (
+        lp_forward_gspmd, lp_forward_halo, lp_forward_shard_map)
+    from repro.distributed.collectives import halo_spec
+    from repro.launch.mesh import make_hybrid_mesh
+
+    K = %(K)d
+    Z_SHAPE, PATCHES, R = %(Z_SHAPE)r, %(PATCHES)r, %(R)r
+    mesh1 = Mesh(np.asarray(jax.devices()[:K]), ("data",))
+    mesh2 = make_hybrid_mesh(K, 2)
+
+    rng = np.random.default_rng(7)
+    z = jnp.asarray(rng.normal(size=Z_SHAPE).astype(np.float32))
+    C = Z_SHAPE[-1]
+    w1 = jnp.asarray(rng.normal(size=(C, C)).astype(np.float32)) * 0.1
+
+    def den(x):  # same math every engine computes
+        return jnp.tanh(x) * 0.5 + jnp.einsum("...c,cd->...d", x, w1)
+
+    def tp_den(x):  # Megatron Phi_m: half the contraction per tp rank
+        tp = jax.lax.axis_index("model")
+        half = C // 2
+        ws = jax.lax.dynamic_slice_in_dim(w1, tp * half, half, 0)
+        xs = jax.lax.dynamic_slice_in_dim(x, tp * half, half, x.ndim - 1)
+        part = jnp.einsum("...c,cd->...d", xs, ws)
+        return jnp.tanh(x) * 0.5 + jax.lax.psum(part, "model")
+
+    def run_cell(engine, dim, name, plan, rest):
+        codec = get_codec(name)
+        st = (init_halo_wire_state(codec, halo_spec(plan), rest)
+              if codec.stateful else None)
+        c = None if name == "fp32" else codec
+        if engine == "psum":
+            return jax.jit(lambda zz: lp_forward_shard_map(
+                den, zz, plan, dim, mesh1, "data"))(z)
+        if engine == "gspmd":
+            return jax.jit(lambda zz: lp_forward_gspmd(
+                den, zz, plan, dim, mesh1, "data", codec=c))(z)
+        if engine == "halo":
+            if st is not None:
+                return jax.jit(lambda zz, s: lp_forward_halo(
+                    den, zz, plan, dim, mesh1, "data", codec=codec,
+                    codec_state=s))(z, st)[0]
+            return jax.jit(lambda zz: lp_forward_halo(
+                den, zz, plan, dim, mesh1, "data", codec=c))(z)
+        if engine == "halo_hybrid":
+            if st is not None:
+                return jax.jit(lambda zz, s: lp_forward_halo_hybrid(
+                    tp_den, zz, plan, dim, mesh2, codec=codec,
+                    codec_state=s))(z, st)[0]
+            return jax.jit(lambda zz: lp_forward_halo_hybrid(
+                tp_den, zz, plan, dim, mesh2, codec=c))(z)
+        raise ValueError(engine)
+
+    cells = %(CELLS)r
+    for engine, dim, name in cells:
+        plan = plan_uniform(Z_SHAPE[dim], PATCHES[dim], K, R, dim)
+        rest = tuple(s for i, s in enumerate(Z_SHAPE) if i != dim)
+        ref = lp_forward_uniform(den, z, plan, axis=dim)
+        out = run_cell(engine, dim, name, plan, rest)
+        a = np.asarray(out, np.float64)
+        b = np.asarray(ref, np.float64)
+        mse = float(np.mean((a - b) ** 2))
+        db = float(10 * np.log10(float(np.abs(b).max()) ** 2
+                                 / max(mse, 1e-30)))
+        rel = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        print(f"CELL {engine} dim={dim} codec={name} "
+              f"psnr={db:.1f} rel={rel:.2e}")
+    print(f"DONE {len(cells)}")
+    """
+)
+
+
+def _run_matrix(K: int):
+    cells = [
+        (engine, dim, codec)
+        for engine in ("psum", "gspmd", "halo", "halo_hybrid")
+        for dim, codec in _cells_for(engine, K)
+    ]
+    res = subprocess.run(
+        [sys.executable, "-c", SPMD_SCRIPT % {
+            "K": K, "Z_SHAPE": Z_SHAPE, "PATCHES": PATCHES, "R": R,
+            "CELLS": cells,
+        }],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        cwd="/root/repo",
+        timeout=580,
+    )
+    assert res.returncode == 0, f"stdout={res.stdout}\nstderr={res.stderr}"
+    lines = [l for l in res.stdout.splitlines() if l.startswith("CELL ")]
+    assert f"DONE {len(cells)}" in res.stdout, res.stdout
+    assert len(lines) == len(cells)
+    return cells, lines
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("K", KS)
+def test_spmd_engine_conformance_matrix(K):
+    """Every SPMD engine x dim x supported codec, on 8 fake CPU devices.
+
+    Exact cells (fp32) must sit at numerical-noise PSNR; lossy cells at
+    their documented floors.  ONE subprocess per K amortizes the ~50
+    tiny XLA compiles."""
+    cells, lines = _run_matrix(K)
+    for (engine, dim, codec), line in zip(cells, lines):
+        db = float(line.split("psnr=")[1].split()[0])
+        rel = float(line.split("rel=")[1].split()[0])
+        tag = f"{engine}/K{K}/dim{dim}/{codec}: {line}"
+        if codec == "fp32":
+            assert rel < 1e-5, tag
+        else:
+            assert db >= PSNR_FLOOR_DB[codec], (
+                f"{tag} < {PSNR_FLOOR_DB[codec]} dB floor"
+            )

@@ -1,0 +1,151 @@
+"""Mid-request re-planning regression tests (ROADMAP open item).
+
+A straggler-triggered re-plan (runtime/straggler.py proposal applied via
+runtime/elastic.replan_lp_compiler from a ``lp_denoise`` step hook) must:
+
+  * reset codec residual state EXACTLY once (old state shapes are
+    garbage on the new plan; re-zeroing more than once throws away the
+    temporal-delta reference and wastes wire quality);
+  * never serve a ``LPStepCompiler`` cache entry compiled for the old
+    mesh shape / partition geometry (the full geometry is in the key);
+  * keep the denoise loop running — rotation dims are re-derived from
+    the compiler's new geometry at the next step boundary.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LPStepCompiler, lp_denoise
+from repro.diffusion.sampler import FlowMatchEuler
+from repro.runtime.elastic import replan_lp_compiler
+from repro.runtime.straggler import StragglerState
+
+
+def _den(w, t):
+    return jnp.tanh(w) * 0.1 + w * 1e-4 * t
+
+
+def _single_dim_z(seed=0):
+    # spatial (8, 2, 2) with patches (1, 2, 2): only dim 0 has enough
+    # patches, for every K in this test — one rotation dim, so every
+    # state reset is attributable to either the start or the re-plan
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(1, 8, 2, 2, 3)).astype(np.float32))
+
+
+def test_replan_resets_codec_state_exactly_once_and_never_reuses_stale():
+    z = _single_dim_z()
+    sampler = FlowMatchEuler(10)
+    comp = LPStepCompiler(
+        _den, sampler.update, 4, 0.5, (1, 2, 2), (1, 2, 3),
+        uniform=True, codec="int8-residual", mesh_shape=(4, 1),
+    )
+
+    # straggler EMA: group 3 is 5x slower -> propose evicting it
+    straggler = StragglerState(num_partitions=4)
+    for _ in range(5):
+        straggler.observe([1.0, 1.0, 1.0, 5.0])
+    proposal = straggler.propose_group_eviction((4, 1))
+    assert proposal is not None
+    evicted, new_shape = proposal
+    assert evicted == 3 and new_shape == (3, 1)
+
+    replanned = {"n": 0}
+
+    def hook(i):
+        if i == 6:
+            assert replan_lp_compiler(comp, new_shape)
+            replanned["n"] += 1
+
+    out = lp_denoise(None, z, sampler, 10, 4, 0.5, (1, 2, 2), (1, 2, 3),
+                     uniform=True, compiler=comp, step_hook=hook)
+    assert np.isfinite(np.asarray(out)).all()
+    assert replanned["n"] == 1
+    # applying the eviction keeps the monitor consistent on the new ring
+    straggler.evict(evicted)
+    assert straggler.num_partitions == 3
+    straggler.observe([1.0, 1.0, 1.0])  # new layout: no shape blowup
+    assert not straggler.needs_rebalance()
+    # geometry swapped in place
+    assert comp.num_partitions == 3 and comp.mesh_shape == (3, 1)
+    assert comp.plan_epoch == 1
+    # codec residual state was (re)zeroed exactly twice: once at step 1,
+    # once — and only once — at the re-plan boundary (state otherwise
+    # carries across the same-dim steps of the unfused loop)
+    assert comp.state_inits == 2, comp.state_inits
+    # exactly one compile per geometry; every other step was a cache hit
+    # on its OWN geometry's entry (a stale K=4 hit after the re-plan
+    # would leave compiles at 1)
+    assert comp.compiles == 2, comp.compiles
+    assert comp.hits == 8, comp.hits
+    # both geometries present in the key space, old one merely dormant
+    keys = list(comp._cache.keys())
+    assert {k[-4] for k in keys} == {3, 4}  # num_partitions key slot
+
+
+def test_replan_mesh_bound_compiler_requires_rebound_forward():
+    """A compiler whose forward hook closes over a Mesh must get a
+    re-bound hook when K changes — fail fast, not at trace time."""
+    import pytest
+
+    def fake_mesh_bound_forward(fn, z, plan, axis):  # stands in for an
+        raise AssertionError("never traced")          # SPMD engine hook
+
+    comp = LPStepCompiler(
+        _den, FlowMatchEuler(2).update, 4, 0.5, (1, 2, 2), (1, 2, 3),
+        uniform=True, forward=fake_mesh_bound_forward, mesh_shape=(4, 2),
+    )
+    with pytest.raises(ValueError, match="re-bound forward"):
+        replan_lp_compiler(comp, (3, 2))
+    # tp-only change keeps K: the old hook stays valid, no error
+    assert replan_lp_compiler(comp, (4, 1))
+    # and a re-bound hook makes the K change legal
+    def new_forward(fn, z, plan, axis):
+        raise AssertionError("never traced")
+
+    assert replan_lp_compiler(comp, (3, 2), forward=new_forward)
+    assert comp.num_partitions == 3 and comp.forward is new_forward
+
+
+def test_straggler_ema_survives_layout_change_without_evict():
+    st = StragglerState(num_partitions=4)
+    st.observe([1.0, 1.0, 1.0, 2.0])
+    st.observe([1.0, 1.0, 1.0])  # caller shrank without evict(): reset
+    assert st.num_partitions == 3
+    assert st.speeds.shape == (3,)
+
+
+def test_replan_noop_is_free():
+    comp = LPStepCompiler(
+        _den, FlowMatchEuler(2).update, 4, 0.5, (1, 2, 2), (1, 2, 3),
+        uniform=True, codec="int8-residual", mesh_shape=(4, 2),
+    )
+    assert not replan_lp_compiler(comp, (4, 2))
+    assert comp.plan_epoch == 0 and comp.state_inits == 0
+
+
+def test_unfused_loop_carries_residual_state_across_same_dim_steps():
+    """Without a re-plan, a hooked (unfused) single-dim run inits codec
+    state ONCE — the temporal-delta reference survives between steps
+    instead of being re-zeroed per step (pre-PR behavior)."""
+    z = _single_dim_z(1)
+    sampler = FlowMatchEuler(6)
+    comp = LPStepCompiler(
+        _den, sampler.update, 2, 0.5, (1, 2, 2), (1, 2, 3),
+        uniform=True, codec="int8-residual",
+    )
+    lp_denoise(None, z, sampler, 6, 2, 0.5, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp, step_hook=lambda i: None)
+    assert comp.state_inits == 1, comp.state_inits
+    assert comp.compiles == 1 and comp.hits == 5
+
+
+def test_straggler_no_eviction_below_threshold():
+    st = StragglerState(num_partitions=4)
+    for _ in range(5):
+        st.observe([1.0, 1.1, 1.0, 1.2])  # mild imbalance: re-size cores,
+    assert st.propose_group_eviction((4, 1)) is None   # don't evict
+    # K=2 rings can't shrink further
+    st2 = StragglerState(num_partitions=2)
+    for _ in range(5):
+        st2.observe([1.0, 99.0])
+    assert st2.propose_group_eviction((2, 1)) is None

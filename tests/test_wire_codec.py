@@ -106,6 +106,115 @@ def test_get_codec_names_and_errors():
         get_codec("bf16-residual")  # residual needs a quantizing base
 
 
+# ------------------------------------ property tests: round-trip bounds
+@pytest.mark.parametrize("name,qmax", [("int8", 127), ("int4", 7)])
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3, width=32,
+                          allow_nan=False), min_size=4, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_int_codec_roundtrip_error_bounded_by_half_step(name, qmax, vals):
+    """Per-slab-scaled symmetric quantizers: |decode(encode(x)) - x| is
+    bounded by half a quantization step, max|x| / (2 qmax), everywhere
+    (values inside the clip range by construction of the scale)."""
+    arr = np.asarray(vals, np.float32).reshape(1, -1)
+    x = jnp.asarray(arr)
+    out = np.asarray(_roundtrip(get_codec(name), x))
+    step = float(np.abs(arr).max()) / qmax
+    bound = step / 2 + 1e-6 * max(step, 1.0)
+    assert float(np.abs(out - arr).max()) <= bound
+
+
+@given(st.lists(st.floats(min_value=-50.0, max_value=50.0, width=32,
+                          allow_nan=False), min_size=8, max_size=48),
+       st.integers(min_value=1, max_value=12))
+@settings(max_examples=25, deadline=None)
+def test_residual_ef_tracks_trajectory(vals, steps):
+    """Property: over any trajectory, the residual decoder's
+    reconstruction error stays bounded by one quantization step of the
+    *delta* (EF re-injects each step's error, so it never integrates)."""
+    from repro.comm.residual import residual_decode, residual_encode
+
+    base = IntCodec(name="int8", bits=8.0)
+    x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+    prev_s = jnp.zeros_like(x)
+    err = jnp.zeros_like(x)
+    prev_r = jnp.zeros_like(x)
+    for i in range(steps):
+        xi = x * (1.0 + 0.1 * i)
+        err_old = err
+        wire, meta, prev_s, err = residual_encode(base, xi, prev_s, err)
+        x_hat, prev_r = residual_decode(base, wire, meta, prev_r, xi.shape)
+        # sender and receiver references stay identical (the protocol's
+        # no-extra-communication invariant)
+        np.testing.assert_array_equal(np.asarray(prev_s), np.asarray(prev_r))
+        # exact EF identity: this step's reconstruction error equals the
+        # error-carry difference — error moves into the carry instead of
+        # accumulating in the stream
+        np.testing.assert_allclose(np.asarray(x_hat - xi),
+                                   np.asarray(err_old - err), atol=1e-4)
+        # and the carry itself stays below one quantization step
+        step_q = float(jnp.abs(xi - (prev_s - base.decode(
+            wire, meta, xi.shape)) + err_old).max()) / 127
+        assert float(jnp.abs(err).max()) <= step_q / 2 + 1e-4
+
+
+# ------------------------- property tests: scan-carry state invariants
+def _state_sig(state):
+    return jax.tree.map(lambda l: (jnp.shape(l), jnp.result_type(l).name),
+                        state)
+
+
+@given(st.sampled_from([(26, 2, 2), (26, 2, 4), (24, 2, 3), (13, 1, 4)]))
+@settings(max_examples=8, deadline=None)
+def test_residual_state_shape_dtype_stable_under_scan(geom):
+    """The residual wire state must be a fixed-point of one halo step
+    (same treedef/shapes/dtypes), or the ``lax.scan`` carry in
+    ``LPStepCompiler`` would fail to typecheck — and it must actually
+    run under scan."""
+    extent, patch, K = geom
+    plan = plan_uniform(extent, patch, K, 0.5)
+    codec = get_codec("int8-residual")
+    rest = (3, 2)
+    st_ = init_halo_wire_state(codec, halo_spec(plan), rest)
+    z = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(extent,) + rest).astype(np.float32))
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+
+    def step(carry, _):
+        zz, s = carry
+        out, s = simulate_halo_forward(den, zz, plan, 0, codec, s)
+        return (zz - 0.1 * out, s), None
+
+    out_sig = jax.eval_shape(lambda c: step(c, None)[0], (z, st_))
+    assert _state_sig(out_sig[1]) == _state_sig(st_)
+    (z3, st3), _ = jax.lax.scan(step, (z, st_), None, length=3)
+    assert np.isfinite(np.asarray(z3)).all()
+    assert _state_sig(st3) == _state_sig(st_)
+
+
+def test_residual_state_zeroed_across_same_dim_runs():
+    """Fresh state is all-zeros and two identical runs from fresh state
+    are bit-identical — the 'state re-zeroed per same-dim run' hygiene
+    ``lp_denoise`` relies on to keep requests independent."""
+    plan = plan_uniform(26, 2, 4, 0.5)
+    codec = get_codec("int8-residual")
+    rest = (6, 4)
+    st0 = init_halo_wire_state(codec, halo_spec(plan), rest)
+    assert all(float(jnp.abs(l).max()) == 0.0 for l in jax.tree.leaves(st0))
+    z = jnp.asarray(np.random.default_rng(3)
+                    .normal(size=(26,) + rest).astype(np.float32))
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+
+    def run():
+        s = init_halo_wire_state(codec, halo_spec(plan), rest)
+        zz = z
+        for _ in range(3):
+            out, s = simulate_halo_forward(den, zz, plan, 0, codec, s)
+            zz = zz - 0.1 * out
+        return zz
+
+    np.testing.assert_array_equal(np.asarray(run()), np.asarray(run()))
+
+
 # ------------------------------------------------------- error feedback
 def test_error_feedback_accumulation_bounded_20_steps():
     """int8 + EF: the accumulated decoded stream tracks the true sum to
