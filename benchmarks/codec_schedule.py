@@ -1,0 +1,233 @@
+"""Step-policy benchmark -> BENCH_codec_schedule.json.
+
+Compares three wire policies on the wan21 smoke config (49-frame 480p
+geometry for bytes, reduced WAN DiT for quality):
+
+  * ``fp32``          — the uncompressed halo baseline;
+  * ``int8-residual`` — PR 2's best fixed codec;
+  * ``scheduled``     — the PR 4 auto-plan at a 40 dB floor
+    (``policy.auto_plan``): sigma-scheduled codecs, int4-residual while
+    the trajectory is high-noise, int8-residual tail.
+
+Per policy it records analytic wire bytes per denoise
+(``comm_model.comm_lp_halo_scheduled``), end-latent PSNR vs the exact
+fp32 path, and the compile count of the segmented-scan execution.  The
+measured-HLO cross-check compiles the halo engine once per schedule
+segment codec on 4 fake CPU devices and requires the analytic
+per-device step model to match the compiled collectives EXACTLY.
+
+Gates (the PR's acceptance bar):
+  * scheduled moves >= 2.5x fewer wire bytes than the fp32 halo path;
+  * scheduled PSNR >= 40 dB (the floor the autotuner was asked for);
+  * compiles <= 3 x num_segments per denoise;
+  * analytic bytes == measured HLO bytes, exactly, per segment.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LPStepCompiler, lp_denoise
+from repro.core import comm_model as cm
+from repro.diffusion import FlowMatchEuler
+from repro.policy import auto_plan
+
+from .common import divergence, reduced_dit_denoiser
+
+STEPS = 6
+K = 4
+R = 0.5
+PSNR_FLOOR = 40.0
+OUT_JSON = "BENCH_codec_schedule.json"
+
+_COMM_SCRIPT = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import plan_uniform
+    from repro.core.spmd import lp_forward_halo
+    from repro.distributed.collectives import halo_spec
+
+    mesh = compat.make_mesh((4,), ("data",))
+    # wan21 smoke latent geometry (13, 60, 104, 16), partitioned on height
+    z = jnp.zeros((13, 60, 104, 16), jnp.float32)
+    plan = plan_uniform(60, 2, 4, 0.5, dim=1)
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+    out = {}
+    for name in %s:
+        codec = get_codec(name)
+        if codec.stateful:
+            st = init_halo_wire_state(
+                codec, halo_spec(plan),
+                tuple(s for i, s in enumerate(z.shape) if i != 1))
+            fn = jax.jit(lambda zz, s: lp_forward_halo(
+                den, zz, plan, 1, mesh, codec=codec, codec_state=s)[0])
+            hlo = fn.lower(z, st).compile().as_text()
+        elif name == "fp32":
+            fn = jax.jit(lambda zz: lp_forward_halo(den, zz, plan, 1, mesh))
+            hlo = fn.lower(z).compile().as_text()
+        else:
+            fn = jax.jit(lambda zz: lp_forward_halo(
+                den, zz, plan, 1, mesh, codec=codec))
+            hlo = fn.lower(z).compile().as_text()
+        a = analyze(hlo)
+        out[name] = {k: float(v) for k, v in a.collective_bytes.items()}
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def _measured_comm(codecs):
+    """Per-device collective payloads (HLO output-shape accounting) of
+    one halo LP step per codec, on 4 fake CPU devices in a subprocess."""
+    res = subprocess.run(
+        [sys.executable, "-c", _COMM_SCRIPT % repr(tuple(codecs))],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        timeout=560,
+    )
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[len("JSON:"):])
+    return {"error": res.stderr[-500:]}
+
+
+def run(print_csv=True, measure_hlo=True):
+    sampler = FlowMatchEuler(STEPS)
+    ccfg = cm.wan21_comm_config(49, num_steps=STEPS)
+    plan = auto_plan(ccfg, K, R, sampler, STEPS, psnr_floor_db=PSNR_FLOOR)
+
+    policies = {
+        "fp32": ("fp32",) * STEPS,
+        "int8-residual": ("int8-residual",) * STEPS,
+        "scheduled": plan.step_codecs,
+    }
+
+    # ---- analytic wire bytes per denoise (group aggregate)
+    bytes_rec = {}
+    fp32_wire = cm.comm_lp_halo_scheduled(ccfg, K, R, policies["fp32"])
+    for name, step_codecs in policies.items():
+        wire = cm.comm_lp_halo_scheduled(ccfg, K, R, step_codecs)
+        bytes_rec[name] = {
+            "wire_bytes_per_denoise": wire,
+            "reduction_vs_fp32_halo": fp32_wire / wire,
+            "segments": [
+                {k: v for k, v in seg.items() if k != "per_dim"}
+                for seg in cm.lp_halo_scheduled_segments(
+                    ccfg, K, R, step_codecs)
+            ],
+        }
+
+    # ---- PSNR + compile count on the reduced DiT (simulate-halo engine)
+    den, z_T, cfg = reduced_dit_denoiser(3, latent=(6, 8, 12))
+
+    def den_fast(w, t):
+        return den(w, jnp.full((w.shape[0],), t, jnp.float32))
+
+    quality = {}
+    outs = {}
+    for name in policies:
+        kwargs = ({"schedule": plan.schedule.spec} if name == "scheduled"
+                  else {"codec": name})
+        comp = LPStepCompiler(
+            den_fast, sampler.update, K, R, cfg.patch_sizes, (1, 2, 3),
+            uniform=True, **kwargs,
+        )
+
+        def loop():
+            return lp_denoise(None, z_T, sampler, STEPS, K, R,
+                              cfg.patch_sizes, (1, 2, 3), uniform=True,
+                              compiler=comp)
+
+        jax.block_until_ready(loop())          # compile
+        compiles = comp.compiles
+        t0 = time.perf_counter()
+        z0 = loop()
+        jax.block_until_ready(z0)
+        step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+        outs[name] = z0
+        div = ({"rel_l2": 0.0, "psnr_db": float("inf")} if name == "fp32"
+               else divergence(z0, outs["fp32"]))
+        quality[name] = {"step_ms": step_ms, "compiles": compiles, **div}
+
+    # ---- measured HLO per schedule segment (exact-match contract)
+    seg_codecs = sorted({seg.codec for seg in plan.segments})
+    measured = _measured_comm(seg_codecs) if measure_hlo else {}
+    hlo_match = {}
+    if isinstance(measured, dict) and "error" not in measured:
+        for name in seg_codecs:
+            want = cm.lp_halo_codec_step_collectives(ccfg, K, R, dim=1,
+                                                     codec=name)
+            got = measured[name]
+            for kind in ("all-gather", "collective-permute"):
+                assert got.get(kind, 0) == want[kind], (
+                    f"{name}/{kind}: measured {got.get(kind)} != analytic "
+                    f"{want[kind]} (exact-match contract)"
+                )
+            assert "all-reduce" not in got, (name, got)
+            hlo_match[name] = {"modeled": want, "measured": got}
+
+    record = {
+        "config": "wan21_dit_1p3b reduced / wan21 49f smoke geometry",
+        "num_steps": STEPS,
+        "num_partitions": K,
+        "overlap_ratio": R,
+        "psnr_floor_db": PSNR_FLOOR,
+        "auto_plan": {
+            "lp_impl": plan.lp_impl,
+            "schedule": plan.schedule.spec,
+            "step_codecs": list(plan.step_codecs),
+            "num_segments": plan.num_segments,
+            "envelope_db": plan.envelope_db,
+        },
+        "comm_modeled": bytes_rec,
+        "quality_latency": quality,
+        "comm_measured_per_device": measured,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    # ---- gates
+    red = bytes_rec["scheduled"]["reduction_vs_fp32_halo"]
+    psnr = quality["scheduled"]["psnr_db"]
+    compiles = quality["scheduled"]["compiles"]
+    assert red >= 2.5, f"scheduled wire reduction {red:.2f}x < 2.5x"
+    assert psnr >= PSNR_FLOOR, (
+        f"scheduled PSNR {psnr:.1f} dB < {PSNR_FLOOR} dB floor"
+    )
+    assert compiles <= 3 * plan.num_segments, (
+        f"{compiles} compiles > 3 x {plan.num_segments} segments"
+    )
+    # scheduled bytes must decompose into fixed-codec step sums
+    seg_sum = sum(s["wire_bytes"]
+                  for s in bytes_rec["scheduled"]["segments"])
+    assert seg_sum == bytes_rec["scheduled"]["wire_bytes_per_denoise"]
+
+    if print_csv:
+        for name, q in quality.items():
+            print(f"codec_schedule/{name},{q['step_ms']*1e3:.0f},"
+                  f"psnr={q['psnr_db']:.1f}dB compiles={q['compiles']} "
+                  f"reduction={bytes_rec[name]['reduction_vs_fp32_halo']:.2f}x")
+        print(f"codec_schedule/plan,0,{plan.schedule.spec} "
+              f"segments={plan.num_segments}")
+        if hlo_match:
+            print("codec_schedule/hlo_match,0,modeled==measured exactly "
+                  "for " + ",".join(sorted(hlo_match)))
+        print(f"codec_schedule/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,7 @@ import time
 import traceback
 
 from . import (
+    codec_schedule,
     fig6_fig7_overlap,
     fig8_gpu_scaling,
     fig9_duration,
@@ -34,6 +35,7 @@ ALL = {
     "step_latency": step_latency.run,
     "wire_codec": wire_codec.run,
     "hybrid_lp_tp": hybrid_lp_tp.run,
+    "codec_schedule": codec_schedule.run,
 }
 
 

@@ -253,26 +253,25 @@ def lp_halo_codec_step_collectives(
     return {"all-gather": ag, "collective-permute": pp}
 
 
-def comm_lp_halo_codec(
-    cfg: VDMCommConfig, K: int, r: float = 0.5, codec="int8"
-) -> int:
-    """Codec-compressed halo LP: group wire bytes over the full schedule.
+def _halo_codec_group_bytes_per_dim(
+    cfg: VDMCommConfig, K: int, r: float, codec
+) -> dict:
+    """Group wire bytes of ONE codec'd halo step, per rotation dim.
 
-    :func:`comm_lp_halo` with every payload squeezed through a wire
-    codec (``core/spmd.lp_forward_halo(..., codec=...)``): each rank's
-    coded core slice (+ scale meta) crosses K-1 links in the ring
-    all-gather, and each scheduled ppermute pair moves one coded slab
-    (+ meta).  With int8 this is ~4x below the fp32 halo path — and the
-    residual variants spend the same bytes on a temporally-delta-coded
-    payload, so the quality cost shrinks without moving more data.
+    The single per-dim formula every halo byte model composes: each
+    rank's coded core slice (+ scale meta) crosses K-1 links in the
+    ring all-gather, and each scheduled ppermute pair moves one coded
+    slab (+ meta).  Shared by :func:`comm_lp_halo_codec` (fixed codec)
+    and :func:`lp_halo_scheduled_segments` (per-step codecs) so the
+    "scheduled == sum of fixed-codec steps" exact-match contract can
+    never drift between the two.
     """
     from repro.comm.codecs import get_codec
     from repro.distributed.collectives import halo_spec
 
     codec = get_codec(codec)
-    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
-    per_dim = {}
-    for dim in dims:
+    out = {}
+    for dim in usable_dims(cfg.latent_dims, cfg.patch_sizes, K):
         spec = halo_spec(_halo_plan(cfg, K, r, dim))
         row_el = cfg.latent_elems // cfg.latent_dims[dim]
         ag = K * (K - 1) * codec.wire_bytes(spec.core_pad * row_el)
@@ -280,10 +279,84 @@ def comm_lp_halo_codec(
             len(t.perm) * codec.wire_bytes(t.length * row_el)
             for t in spec.transfers
         )
-        per_dim[dim] = ag + pp
+        out[dim] = ag + pp
+    return out
+
+
+def comm_lp_halo_codec(
+    cfg: VDMCommConfig, K: int, r: float = 0.5, codec="int8"
+) -> int:
+    """Codec-compressed halo LP: group wire bytes over the full schedule.
+
+    :func:`comm_lp_halo` with every payload squeezed through a wire
+    codec (``core/spmd.lp_forward_halo(..., codec=...)``).  With int8
+    this is ~4x below the fp32 halo path — and the residual variants
+    spend the same bytes on a temporally-delta-coded payload, so the
+    quality cost shrinks without moving more data.
+    """
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
+    per_dim = _halo_codec_group_bytes_per_dim(cfg, K, r, codec)
     return sum(
         per_dim[rotation_dim(i, dims)] for i in range(1, cfg.num_steps + 1)
     )
+
+
+def comm_lp_halo_scheduled(
+    cfg: VDMCommConfig, K: int, r: float, step_codecs: Sequence[str]
+) -> int:
+    """Sigma-scheduled halo LP: group wire bytes over a per-step codec
+    assignment.
+
+    ``step_codecs[i]`` names the wire codec of forward pass ``i + 1``
+    (the ``policy/`` layer resolves sigma thresholds against the
+    sampler's trajectory; this model is deliberately sigma-blind).  The
+    step count is ``len(step_codecs)`` — it overrides ``cfg.num_steps``
+    so a resolved schedule can never silently disagree with the model.
+    Each step moves exactly the bytes of the fixed-codec halo step on
+    its rotation dim (:func:`comm_lp_halo_codec` per-dim terms): a
+    segment boundary changes which codec encodes, not the message
+    layout, so per-segment totals are sums of fixed-codec step bytes —
+    the property the conformance suite and
+    ``benchmarks/codec_schedule.py`` check against measured HLO.
+    """
+    return sum(
+        seg["wire_bytes"] for seg in
+        lp_halo_scheduled_segments(cfg, K, r, step_codecs)
+    )
+
+
+def lp_halo_scheduled_segments(
+    cfg: VDMCommConfig, K: int, r: float, step_codecs: Sequence[str]
+) -> Tuple[dict, ...]:
+    """Per-segment byte breakdown of :func:`comm_lp_halo_scheduled`.
+
+    One entry per contiguous same-codec step run: ``{"codec", "start",
+    "stop", "wire_bytes", "per_dim"}`` with 1-indexed inclusive step
+    bounds and ``per_dim`` the single-step group bytes per rotation dim
+    (each must match the measured HLO of the fixed-codec engine
+    exactly).
+    """
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
+    per_dim_by_codec: dict = {}
+
+    def per_dim(codec_name: str) -> dict:
+        if codec_name not in per_dim_by_codec:
+            per_dim_by_codec[codec_name] = \
+                _halo_codec_group_bytes_per_dim(cfg, K, r, codec_name)
+        return per_dim_by_codec[codec_name]
+
+    segments = []
+    for i, name in enumerate(step_codecs, start=1):
+        if segments and segments[-1]["codec"] == name:
+            segments[-1]["stop"] = i
+            segments[-1]["wire_bytes"] += per_dim(name)[rotation_dim(i, dims)]
+        else:
+            segments.append({
+                "codec": name, "start": i, "stop": i,
+                "wire_bytes": per_dim(name)[rotation_dim(i, dims)],
+                "per_dim": dict(per_dim(name)),
+            })
+    return tuple(segments)
 
 
 def lp_halo_hybrid_step_collectives(

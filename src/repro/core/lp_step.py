@@ -123,6 +123,18 @@ class LPStepCompiler:
     cache key together with the full partition geometry ``(K, r)``, so a
     mid-request :meth:`replan` — straggler eviction, elastic mesh change
     — can NEVER be served a stale entry compiled for the old mesh shape.
+
+    ``schedule`` (a ``policy.CodecSchedule`` or spec string) varies the
+    wire codec over the denoise: ``lp_denoise`` resolves the sigma
+    thresholds against the sampler's trajectory and runs each (dim-run x
+    codec-segment) as its own ``lax.scan``, passing the segment codec to
+    :meth:`step_fn` per call.  The segment codec is part of the cache
+    key, residual state is created fresh per segment (reset exactly once
+    at every boundary), and compiles stay <= 3 x num_segments per
+    denoise.  ``forward_factory`` is the scheduled twin of ``forward``:
+    called with each segment's codec, it returns the mesh-bound hook for
+    that codec (stateless hooks take ``(fn, z, plan, axis)``, stateful
+    ones ``(fn, z, plan, axis, state)`` and return ``(pred, state)``).
     """
 
     def __init__(
@@ -140,6 +152,8 @@ class LPStepCompiler:
         maxsize: int = 32,
         codec=None,
         mesh_shape: Optional[Tuple[int, ...]] = None,
+        schedule=None,
+        forward_factory: Optional[Callable] = None,
     ):
         self.denoise_fn = denoise_fn
         self.update_fn = update_fn
@@ -153,6 +167,30 @@ class LPStepCompiler:
         self.donate = donate
         self.maxsize = maxsize
         self.mesh_shape = None if mesh_shape is None else tuple(mesh_shape)
+        self.forward_factory = forward_factory
+        if schedule is not None:
+            from repro.policy.schedule import parse_schedule
+
+            schedule = parse_schedule(schedule)
+            if codec is not None:
+                raise ValueError(
+                    "pass codec= (fixed) or schedule= (sigma-varying), "
+                    "not both"
+                )
+            if forward is not None and forward_factory is None:
+                raise ValueError(
+                    "a codec schedule cannot run through a fixed "
+                    "forward= hook (it is bound to one codec and would "
+                    "silently ignore the segments) — pass a "
+                    "forward_factory that binds the hook per segment "
+                    "codec"
+                )
+            if not uniform and forward_factory is None:
+                raise ValueError(
+                    "codec schedules need the uniform-window halo "
+                    "geometry (uniform=True) or a forward_factory hook"
+                )
+        self.schedule = schedule
         if codec is not None:
             from repro.comm.codecs import get_codec
 
@@ -179,6 +217,7 @@ class LPStepCompiler:
         overlap_ratio: Optional[float] = None,
         mesh_shape: Optional[Tuple[int, ...]] = None,
         forward: Optional[Callable] = None,
+        forward_factory: Optional[Callable] = None,
     ) -> bool:
         """Mid-request re-plan: swap the partition geometry / mesh shape.
 
@@ -205,6 +244,10 @@ class LPStepCompiler:
             # a new mesh needs a re-bound collective hook
             self.forward = forward
             changed = True
+        if forward_factory is not None and \
+                forward_factory is not self.forward_factory:
+            self.forward_factory = forward_factory
+            changed = True
         if changed:
             self.plan_epoch += 1
         return changed
@@ -212,6 +255,16 @@ class LPStepCompiler:
     @property
     def stateful(self) -> bool:
         return self.codec is not None and self.codec.stateful
+
+    def _codec_for(self, codec):
+        """Per-call codec resolution: ``None`` means the compiler's own
+        fixed codec (legacy behaviour); segment codecs come in as Codec
+        instances (or names) from the schedule-resolved denoise loop."""
+        if codec is None:
+            return self.codec
+        from repro.comm.codecs import get_codec
+
+        return get_codec(codec)
 
     # ------------------------------------------------------------- plans
     def _plan(self, dim: int, extent: int):
@@ -225,33 +278,42 @@ class LPStepCompiler:
             self.overlap_ratio, dim,
         )
 
-    def _forward(self, fn: DenoiseFn, z, plan, axis):
+    def _forward(self, fn: DenoiseFn, z, plan, axis, codec=None):
+        codec = self._codec_for(codec)
+        if self.forward_factory is not None and codec is not None:
+            return self.forward_factory(codec)(fn, z, plan, axis)
         if self.forward is not None:
             return self.forward(fn, z, plan, axis)
-        if self.codec is not None:
+        if codec is not None:
             from repro.comm.wire import simulate_halo_forward
 
-            return simulate_halo_forward(fn, z, plan, axis, self.codec)
+            return simulate_halo_forward(fn, z, plan, axis, codec)
         if self.uniform:
             return lp_forward_uniform(fn, z, plan, axis, use_kernel=self.use_kernel)
         return lp_forward(fn, z, plan, axis)
 
-    def _forward_stateful(self, fn: DenoiseFn, z, plan, axis, state):
+    def _forward_stateful(self, fn: DenoiseFn, z, plan, axis, state,
+                          codec=None):
         """Codec-state-threading forward: returns (pred, new_state)."""
+        codec = self._codec_for(codec)
+        if self.forward_factory is not None:
+            return self.forward_factory(codec)(fn, z, plan, axis, state)
         if self.forward is not None:
             return self.forward(fn, z, plan, axis, state)
         from repro.comm.wire import simulate_halo_forward
 
-        return simulate_halo_forward(fn, z, plan, axis, self.codec, state)
+        return simulate_halo_forward(fn, z, plan, axis, codec, state)
 
-    def init_codec_state(self, dim: int, z: jnp.ndarray):
+    def init_codec_state(self, dim: int, z: jnp.ndarray, codec=None):
         """Zeroed residual-codec state for (rotation dim, latent geometry).
 
-        ``lp_denoise`` creates this fresh at the start of every same-dim
-        scan run (temporal deltas are only meaningful between consecutive
-        steps along one rotation dim) — which also guarantees no codec
-        state leaks across serving requests."""
-        if not self.stateful:
+        ``lp_denoise`` creates this fresh at the start of every same-dim,
+        same-codec-segment scan run (temporal deltas are only meaningful
+        between consecutive steps along one rotation dim, and a segment
+        boundary switches the wire protocol) — which also guarantees no
+        codec state leaks across serving requests."""
+        codec = self._codec_for(codec)
+        if codec is None or not codec.stateful:
             return None
         from repro.comm.wire import init_halo_wire_state
         from repro.distributed.collectives import halo_spec
@@ -260,16 +322,18 @@ class LPStepCompiler:
         axis = self.spatial_axes[dim]
         plan = self._plan(dim, z.shape[axis])
         rest = tuple(s for i, s in enumerate(z.shape) if i != axis)
-        return init_halo_wire_state(self.codec, halo_spec(plan), rest)
+        return init_halo_wire_state(codec, halo_spec(plan), rest)
 
     # ------------------------------------------------------------- build
     def step_fn(
         self, dim: int, z: jnp.ndarray, n: int, scalars: Any, extras: Tuple,
+        codec=None,
     ) -> Callable:
+        codec = self._codec_for(codec)
         key = (
             dim, n, tuple(z.shape), jnp.result_type(z).name,
             _abstract_sig(scalars), _abstract_sig(extras),
-            None if self.codec is None else self.codec.name,
+            None if codec is None else codec.name,
             # full plan geometry + epoch: a mid-request replan (new K/r,
             # new mesh shape, re-bound forward hook) can never be served
             # an entry compiled for the old plan
@@ -285,13 +349,14 @@ class LPStepCompiler:
         plan = self._plan(dim, z.shape[axis])
         den, upd = self.denoise_fn, self.update_fn
 
-        if self.stateful:
+        if codec is not None and codec.stateful:
             # codec state rides the scan carry next to z — the step stays
-            # one compiled function per rotation dim
+            # one compiled function per (rotation dim, codec segment)
             if n == 1:
                 def step(zc, st, t, sc, extras):
                     pred, st = self._forward_stateful(
-                        lambda w: den(w, t, *extras), zc, plan, axis, st
+                        lambda w: den(w, t, *extras), zc, plan, axis, st,
+                        codec,
                     )
                     return upd(zc, pred, sc), st
             else:
@@ -300,21 +365,24 @@ class LPStepCompiler:
                         zb, s = carry
                         t, sc = x
                         pred, s = self._forward_stateful(
-                            lambda w: den(w, t, *extras), zb, plan, axis, s
+                            lambda w: den(w, t, *extras), zb, plan, axis, s,
+                            codec,
                         )
                         return (upd(zb, pred, sc), s), None
                     (out, st), _ = jax.lax.scan(body, (zc, st), (ts, scs))
                     return out, st
         elif n == 1:
             def step(zc, t, sc, extras):
-                pred = self._forward(lambda w: den(w, t, *extras), zc, plan, axis)
+                pred = self._forward(
+                    lambda w: den(w, t, *extras), zc, plan, axis, codec
+                )
                 return upd(zc, pred, sc)
         else:
             def step(zc, ts, scs, extras):
                 def body(zb, x):
                     t, sc = x
                     pred = self._forward(
-                        lambda w: den(w, t, *extras), zb, plan, axis
+                        lambda w: den(w, t, *extras), zb, plan, axis, codec
                     )
                     return upd(zb, pred, sc), None
                 out, _ = jax.lax.scan(body, zc, (ts, scs))
@@ -343,6 +411,7 @@ def lp_denoise(
     fuse_scan: bool = True,
     step_hook: Optional[Callable[[int], None]] = None,
     codec=None,
+    schedule=None,
 ) -> jnp.ndarray:
     """Full T-step LP denoising on the compiled fast path.
 
@@ -356,16 +425,23 @@ def lp_denoise(
     compiled region (fault injection, straggler accounting); setting it
     disables scan fusion so the hook really does run between steps.
 
-    ``codec`` compresses LP wire payloads (ignored when ``compiler`` is
-    given — the compiler owns the codec then).  Residual-codec state is
-    zeroed at every rotation-dim switch (and at every mid-request
-    re-plan, exactly once) and discarded at the end of the call:
-    temporal deltas only span consecutive same-dim steps — whether fused
-    into one scan or stepped through a hook — and state can never leak
-    across calls (or serving requests).  A ``step_hook`` may call
-    ``compiler.replan(...)`` (straggler / elastic re-planning): the next
-    step re-derives its rotation dims and compiles against the new
-    geometry; stale cache entries for the old plan are unreachable.
+    ``codec`` compresses LP wire payloads; ``schedule`` (a
+    ``policy.CodecSchedule`` or spec string, mutually exclusive with
+    ``codec``) varies the codec over sigma — both are ignored when
+    ``compiler`` is given (the compiler owns the policy then).  A
+    schedule is resolved against the sampler's sigma trajectory and
+    executed as **segmented scans**: every (rotation-dim run x codec
+    segment) is one compiled step / one ``lax.scan``, so a T-step
+    denoise compiles at most ``3 x num_segments`` times.  Residual-codec
+    state is zeroed at every rotation-dim switch, at every codec-segment
+    boundary (exactly once per boundary), and at every mid-request
+    re-plan (exactly once), and discarded at the end of the call:
+    temporal deltas only span consecutive same-dim, same-segment steps —
+    whether fused into one scan or stepped through a hook — and state
+    can never leak across calls (or serving requests).  A ``step_hook``
+    may call ``compiler.replan(...)`` (straggler / elastic re-planning):
+    the next step re-derives its rotation dims and compiles against the
+    new geometry; stale cache entries for the old plan are unreachable.
     """
     if step_hook is not None:
         fuse_scan = False
@@ -376,7 +452,29 @@ def lp_denoise(
         comp = LPStepCompiler(
             denoise_fn, sampler.update, num_partitions, overlap_ratio,
             patch_sizes, spatial_axes, uniform=uniform, codec=codec,
+            schedule=schedule,
         )
+
+    # Resolve the (possibly absent) codec schedule to one codec per
+    # forward pass.  ``None`` entries mean "the compiler's fixed codec"
+    # — the legacy path, bit-identical to pre-schedule behaviour.
+    active_schedule = comp.schedule
+    if active_schedule is not None:
+        from repro.comm.codecs import get_codec as _get_codec
+        from repro.policy.schedule import trajectory_sigmas
+
+        _sigmas = trajectory_sigmas(sampler, num_steps)
+        step_codecs = [
+            _get_codec(n) for n in active_schedule.step_codecs(_sigmas)
+        ]
+    else:
+        step_codecs = [None] * num_steps
+
+    def _codec_key(c):
+        return None if c is None else c.name
+
+    def _stateful(c):
+        return comp.stateful if c is None else c.stateful
 
     def _dims():
         # from the compiler's CURRENT geometry: a step_hook may replan K
@@ -398,23 +496,27 @@ def lp_denoise(
     z = jnp.array(z_T, copy=True) if comp.donate else jnp.asarray(z_T)
 
     if fuse_scan:
-        # group consecutive same-dim steps into scan-fused runs; codec
-        # state is zeroed per run (consecutive runs always switch dims,
-        # so there is never same-dim state to carry between them)
+        # group consecutive same-dim, same-codec-segment steps into
+        # scan-fused runs; codec state is zeroed per run (consecutive
+        # runs switch dims or cross a segment boundary, and neither
+        # dim-foreign nor protocol-foreign state may carry over)
         runs: list = []
         for i in range(1, num_steps + 1):
             dim = rotation_dim(i, dims)
-            if runs and runs[-1][0] == dim:
+            ck = _codec_key(step_codecs[i - 1])
+            if runs and runs[-1][0] == (dim, ck):
                 runs[-1][1].append(i)
             else:
-                runs.append((dim, [i]))
-        for dim, idxs in runs:
+                runs.append(((dim, ck), [i]))
+        for (dim, _), idxs in runs:
+            seg_codec = step_codecs[idxs[0] - 1]
+            stateful = _stateful(seg_codec)
             ts = [np.float32(sampler.timestep(i)) for i in idxs]
             scs = [sampler.step_scalars(i) for i in idxs]
-            st = comp.init_codec_state(dim, z) if comp.stateful else None
+            st = comp.init_codec_state(dim, z, seg_codec) if stateful else None
             if len(idxs) == 1:
-                fn = comp.step_fn(dim, z, 1, scs[0], extras)
-                if comp.stateful:
+                fn = comp.step_fn(dim, z, 1, scs[0], extras, codec=seg_codec)
+                if stateful:
                     z, _ = fn(z, st, ts[0], scs[0], extras)
                 else:
                     z = fn(z, ts[0], scs[0], extras)
@@ -423,21 +525,24 @@ def lp_denoise(
                 scs_arr = jax.tree.map(
                     lambda *xs: jnp.asarray(np.stack(xs)), *scs
                 )
-                fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras)
-                if comp.stateful:
+                fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras,
+                                  codec=seg_codec)
+                if stateful:
                     z, _ = fn(z, st, ts_arr, scs_arr, extras)
                 else:
                     z = fn(z, ts_arr, scs_arr, extras)
         return z
 
     # Unfused (step_hook) path: one compiled step per call, codec state
-    # carried across consecutive same-dim steps (temporal deltas stay
-    # meaningful between steps) and reset on a dim switch or a re-plan.
-    # The hook may call ``comp.replan(...)``: the epoch bump re-derives
-    # the rotation dims and resets residual state exactly once — old
-    # state shapes would be garbage on the new plan.
+    # carried across consecutive same-dim, same-segment steps (temporal
+    # deltas stay meaningful between steps) and reset on a dim switch, a
+    # codec-segment boundary, or a re-plan.  The hook may call
+    # ``comp.replan(...)``: the epoch bump re-derives the rotation dims
+    # and resets residual state exactly once — old state shapes would be
+    # garbage on the new plan.
     cur_state = None
     cur_dim = None
+    cur_codec_key = None
     cur_epoch = comp.plan_epoch
     for i in range(1, num_steps + 1):
         if step_hook is not None:
@@ -447,13 +552,17 @@ def lp_denoise(
             dims = _dims()
             cur_state, cur_dim = None, None
         dim = rotation_dim(i, dims)
+        seg_codec = step_codecs[i - 1]
+        ck = _codec_key(seg_codec)
+        stateful = _stateful(seg_codec)
         t = np.float32(sampler.timestep(i))
         sc = sampler.step_scalars(i)
-        if comp.stateful and (cur_state is None or dim != cur_dim):
-            cur_state = comp.init_codec_state(dim, z)
-        cur_dim = dim
-        fn = comp.step_fn(dim, z, 1, sc, extras)
-        if comp.stateful:
+        if stateful and (cur_state is None or dim != cur_dim
+                         or ck != cur_codec_key):
+            cur_state = comp.init_codec_state(dim, z, seg_codec)
+        cur_dim, cur_codec_key = dim, ck
+        fn = comp.step_fn(dim, z, 1, sc, extras, codec=seg_codec)
+        if stateful:
             z, cur_state = fn(z, cur_state, t, sc, extras)
         else:
             z = fn(z, t, sc, extras)

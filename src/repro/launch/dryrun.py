@@ -441,6 +441,26 @@ def lower_cell(
     return rec
 
 
+def _resolve_dryrun_schedule(shape_name: str, mesh,
+                             spec: str, psnr_floor: Optional[float]):
+    """Resolve ``--codec-schedule`` for one vdm cell against its real
+    geometry, sampler trajectory, and the mesh's lp-axis size."""
+    from repro.core.comm_model import wan21_comm_config
+    from repro.diffusion.sampler import FlowMatchEuler
+    from repro.policy import resolve_cli_schedule
+
+    shape = get_shape(shape_name)
+    K = mesh.shape["data"]
+    tp = dict(mesh.shape).get("model", 1)
+    ccfg = wan21_comm_config(shape.num_frames, shape.height, shape.width,
+                             num_steps=shape.num_steps)
+    return resolve_cli_schedule(
+        spec, ccfg, K, ParallelConfig().overlap_ratio,
+        FlowMatchEuler(shape.num_steps), shape.num_steps,
+        psnr_floor_db=psnr_floor, tp=tp,
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None)
@@ -456,11 +476,26 @@ def main(argv=None) -> int:
     ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
                     help="compress LP halo payloads (halo/auto impls; "
                          "gspmd takes stateless codecs value-faithfully)")
+    ap.add_argument("--codec-schedule", default=None,
+                    help="sigma-scheduled codecs for vdm cells: 'auto' "
+                         "(cost-model autotuner, docs/step_policy.md) or "
+                         "an explicit spec like 'int8-residual@0.45,"
+                         "bf16'.  The dry run lowers one cell per "
+                         "schedule segment (collective shapes are "
+                         "per-segment static) with the PLAN's engine "
+                         "(--lp-impl is ignored for those cells) and "
+                         "tags each record with its segment.  Excludes "
+                         "--wire-codec")
+    ap.add_argument("--psnr-floor", type=float, default=None,
+                    help="PSNR floor (dB) for --codec-schedule "
+                         "resolution (auto default: 40)")
     ap.add_argument("--mesh", default=None,
                     help="MxT hybrid mesh (LP groups x intra-group TP), "
                          "e.g. 4x2 — replaces the production mesh")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.codec_schedule and args.wire_codec:
+        ap.error("--codec-schedule and --wire-codec are exclusive")
 
     todo = []
     if args.all:
@@ -489,18 +524,47 @@ def main(argv=None) -> int:
         for arch, shape in todo:
             tag = f"{arch} x {shape} [{mesh_tag}]"
             try:
-                rec = lower_cell(arch, shape, multi_pod, args.lp_impl,
-                                 mesh=mesh, wire_codec=args.wire_codec)
-                if rec.get("skipped"):
-                    print(f"SKIP {tag}: {rec['skipped']}", flush=True)
-                else:
-                    print(
-                        f"OK   {tag}: {rec['lower_compile_s']}s "
-                        f"flops={rec['flops']:.3e} "
-                        f"coll={sum(rec['collectives'].values())/1e9:.2f}GB",
-                        flush=True,
-                    )
-                results.append(rec)
+                # --codec-schedule: one lowering per schedule segment (a
+                # segment's collective shapes are static; only the codec
+                # changes at segment boundaries), each record tagged.
+                # The PLAN's engine is what gets lowered — the argparse
+                # --lp-impl default (gspmd) has no stateful-codec layer
+                # and must not leak into schedule cells.
+                cells_to_lower = [(args.wire_codec, args.lp_impl, None)]
+                if args.codec_schedule and \
+                        get_shape(shape).kind == "vdm_generate":
+                    plan = _resolve_dryrun_schedule(
+                        shape, mesh, args.codec_schedule, args.psnr_floor)
+                    print(f"PLAN {tag}: {plan.describe()}", flush=True)
+                    cells_to_lower = [
+                        (seg.codec, plan.lp_impl, {
+                            "codec": seg.codec, "steps": [seg.start,
+                                                          seg.stop],
+                            "schedule": plan.schedule.spec,
+                            "lp_impl": plan.lp_impl,
+                        })
+                        for seg in plan.segments
+                    ]
+                for wire_codec, lp_impl, seg_info in cells_to_lower:
+                    rec = lower_cell(arch, shape, multi_pod, lp_impl,
+                                     mesh=mesh, wire_codec=wire_codec)
+                    if seg_info is not None:
+                        rec["schedule_segment"] = seg_info
+                    if rec.get("skipped"):
+                        print(f"SKIP {tag}: {rec['skipped']}", flush=True)
+                    else:
+                        seg_tag = ("" if seg_info is None else
+                                   f" seg={seg_info['codec']}"
+                                   f"[{seg_info['steps'][0]}.."
+                                   f"{seg_info['steps'][1]}]")
+                        print(
+                            f"OK   {tag}{seg_tag}: "
+                            f"{rec['lower_compile_s']}s "
+                            f"flops={rec['flops']:.3e} "
+                            f"coll={sum(rec['collectives'].values())/1e9:.2f}GB",
+                            flush=True,
+                        )
+                    results.append(rec)
             except Exception as e:
                 failures += 1
                 print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --requests 4 --steps 6 \
       --partitions 2 --overlap 0.5 [--lp-impl auto] [--wire-codec int8-residual]
+
+Step policy (docs/step_policy.md): ``--codec-schedule auto`` lets the
+cost-model autotuner pick (engine, sigma-scheduled codec) minimizing
+analytic wire bytes subject to ``--psnr-floor`` (default 40 dB);
+``--codec-schedule 'int8-residual@0.45,bf16'`` pins an explicit schedule.
 """
 from __future__ import annotations
 
@@ -29,12 +34,23 @@ def main(argv=None):
                     help="LP engine; auto = psum math at K=2, halo beyond "
                          "(hybrid halo when the mesh has a tp axis)")
     ap.add_argument("--wire-codec", default=None, choices=list(CODEC_NAMES),
-                    help="compress LP halo wire payloads")
+                    help="compress LP halo wire payloads (fixed codec)")
+    ap.add_argument("--codec-schedule", default=None,
+                    help="sigma-scheduled codecs: 'auto' (cost-model "
+                         "autotuner) or a spec like "
+                         "'int8-residual@0.45,bf16'; excludes "
+                         "--wire-codec")
+    ap.add_argument("--psnr-floor", type=float, default=None,
+                    help="PSNR floor (dB) the codec schedule must meet "
+                         "against the conformance envelope (auto "
+                         "default: 40)")
     ap.add_argument("--mesh", default=None,
                     help="MxT hybrid mesh (LP groups x intra-group TP), "
                          "e.g. 4x2; M must equal --partitions.  Needs "
                          "M*T local devices")
     args = ap.parse_args(argv)
+    if args.codec_schedule and args.wire_codec:
+        ap.error("--codec-schedule and --wire-codec are exclusive")
 
     cfg = get_config("wan21-dit-1.3b").reduced()
     model = models.build(cfg)
@@ -60,9 +76,13 @@ def main(argv=None):
                              num_steps=args.steps,
                              lp_impl=args.lp_impl,
                              wire_codec=args.wire_codec,
+                             codec_schedule=args.codec_schedule,
+                             psnr_floor=args.psnr_floor,
                              mesh=mesh)
     print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name} "
           f"tp={engine.tp}")
+    if engine.plan is not None:
+        print(f"step policy: {engine.plan.describe()}")
     for i in range(args.requests):
         engine.submit(VideoRequest(
             request_id=i,
@@ -73,7 +93,8 @@ def main(argv=None):
     results = engine.run()
     for r in sorted(results, key=lambda x: x.request_id):
         print(f"request {r.request_id}: latent {tuple(r.latent.shape)} "
-              f"steps={r.num_steps} wall={r.wall_s:.1f}s restarts={r.restarts}")
+              f"steps={r.num_steps} batch_wall={r.batch_wall_s:.1f}s "
+              f"batch={r.batch_size} restarts={r.restarts}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,247 @@
+"""Cost-model-driven plan autotuning: pick (engine, codec schedule) by
+minimizing analytic wire bytes subject to a PSNR floor.
+
+The search space is small and the cost model is exact, so this is a
+closed-form walk rather than a search:
+
+1. Rank candidate codecs by their fixed-codec per-denoise wire bytes
+   (``comm_model.comm_lp_halo_codec`` — bits dominate, residual variants
+   tie with their base and win the tie on measured quality).
+2. For each codec, the envelope gives the *lowest sigma it is admissible
+   at* for the requested floor: ``(floor - codec_floor) / credit``
+   (``policy/envelope``).  The byte-minimal schedule is then "cheapest
+   admissible codec at every sigma", which is exactly a stack of
+   sigma-threshold segments — cheaper codecs on top (high noise),
+   precision codecs at the tail.
+3. Resolve the schedule against the sampler's sigma trajectory and
+   charge it with ``comm_model.comm_lp_halo_scheduled``; if the psum
+   engine's fp32 bytes (``comm_lp_spmd``) undercut the scheduled halo
+   bytes (short schedules at K=2 with a strict floor), the plan keeps
+   the psum engine instead — the same break-even rule
+   ``core/spmd.select_lp_impl`` hardcodes, now derived per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+from repro.core import comm_model as cm
+from repro.core.schedule import usable_dims
+
+from .envelope import (
+    HIGH_NOISE_CREDIT_DB,
+    codec_floor_db,
+    schedule_envelope_db,
+)
+from .schedule import (
+    CodecSchedule,
+    ScheduleSegment,
+    StepRun,
+    parse_schedule,
+    segment_steps,
+    trajectory_sigmas,
+)
+
+#: Candidate codecs the planner may schedule, all conformance-gated.
+DEFAULT_CANDIDATES = (
+    "int4-residual", "int4", "int8-residual", "int8", "bf16", "fp32",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPolicyPlan:
+    """One denoise's resolved policy: engine + codec schedule + the
+    analytic bytes that justified it."""
+
+    lp_impl: str                        # halo | halo_hybrid | shard_map
+    schedule: CodecSchedule
+    step_codecs: Tuple[str, ...]        # resolved, one per forward pass
+    segments: Tuple[StepRun, ...]       # contiguous same-codec step runs
+    wire_bytes: int                     # analytic bytes of this plan
+    fp32_halo_bytes: int                # fp32 halo baseline, same steps
+    psum_bytes: int                     # fp32 psum engine, same steps
+    psnr_floor_db: Optional[float]      # the constraint (None = unchecked)
+    envelope_db: float                  # conservative schedule envelope
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def reduction_vs_fp32_halo(self) -> float:
+        return self.fp32_halo_bytes / max(self.wire_bytes, 1)
+
+    def describe(self) -> str:
+        segs = " ".join(
+            f"{s.codec}[{s.start}..{s.stop}]" for s in self.segments
+        )
+        return (
+            f"{self.lp_impl} schedule={self.schedule.spec} -> {segs} "
+            f"({self.reduction_vs_fp32_halo:.2f}x vs fp32 halo, "
+            f"envelope {self.envelope_db:.0f} dB)"
+        )
+
+
+def _rank_candidates(
+    cfg: cm.VDMCommConfig, K: int, r: float, names: Sequence[str]
+) -> Tuple[str, ...]:
+    """Cheapest-first by fixed-codec denoise bytes; residual variants
+    win byte ties (same wire layout, strictly better measured PSNR)."""
+    def key(name):
+        return (
+            cm.comm_lp_halo_codec(cfg, K, r, name),
+            0 if name.endswith("-residual") else 1,
+            -codec_floor_db(name),
+        )
+    return tuple(sorted(names, key=key))
+
+
+def schedule_for_floor(
+    cfg: cm.VDMCommConfig,
+    K: int,
+    r: float,
+    psnr_floor_db: float,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    credit_db: float = HIGH_NOISE_CREDIT_DB,
+) -> CodecSchedule:
+    """Byte-minimal sigma-threshold schedule meeting the floor.
+
+    Each candidate is admissible down to sigma = (floor - codec_floor)
+    / credit; stacking candidates cheapest-first yields the optimal
+    segments directly (per-step byte costs are additive and the
+    admissible set only shrinks as sigma falls).
+    """
+    segments = []
+    covered_down_to = float("inf")
+    for name in _rank_candidates(cfg, K, r, candidates):
+        floor = codec_floor_db(name)
+        if floor >= psnr_floor_db:
+            adm = 0.0
+        else:
+            adm = (psnr_floor_db - floor) / credit_db
+        if adm >= min(covered_down_to, 1.0):
+            continue  # a cheaper codec already covers every sigma <= 1
+        segments.append(ScheduleSegment(name, adm))
+        covered_down_to = adm
+        if adm == 0.0:
+            break
+    if not segments or segments[-1].sigma_lo != 0.0:
+        raise ValueError(
+            f"no candidate codec meets psnr_floor={psnr_floor_db} dB at "
+            f"the tail (envelope tops out below the floor): {candidates}"
+        )
+    return CodecSchedule(tuple(segments))
+
+
+def _plan_from_schedule(
+    cfg: cm.VDMCommConfig,
+    K: int,
+    r: float,
+    schedule: CodecSchedule,
+    sigmas: Sequence[float],
+    tp: int,
+    psnr_floor_db: Optional[float],
+    credit_db: float,
+    allow_engine_flip: bool = True,
+) -> StepPolicyPlan:
+    from repro.core.spmd import select_lp_impl
+
+    num_steps = len(sigmas)
+    step_codecs = schedule.step_codecs(sigmas)
+    segments = segment_steps(schedule, sigmas)
+    wire = cm.comm_lp_halo_scheduled(cfg, K, r, step_codecs)
+    fp32_halo = cm.comm_lp_halo_scheduled(cfg, K, r, ("fp32",) * num_steps)
+    cfg_t = dataclasses.replace(cfg, num_steps=num_steps)
+    psum = cm.comm_lp_spmd(cfg_t, K, r)
+    envelope = schedule_envelope_db(step_codecs, sigmas, credit_db)
+    if set(step_codecs) == {"fp32"}:
+        # nothing to compress: fall back to the static break-even rule
+        lp_impl = select_lp_impl(K, tp)
+        if lp_impl == "shard_map":
+            wire = psum
+    elif allow_engine_flip and psum < wire and tp == 1:
+        # a strict floor shrank the compressible range enough that the
+        # psum engine's fp32 ring beats the codec'd halo schedule.
+        # Auto plans only: an explicit operator schedule is a pin, not
+        # a suggestion — silently swapping it for fp32/psum would drop
+        # the codecs the operator asked for.
+        lp_impl = "shard_map"
+        schedule = CodecSchedule.fixed("fp32")
+        step_codecs = ("fp32",) * num_steps
+        segments = segment_steps(schedule, sigmas)
+        wire = psum
+        envelope = float("inf")
+    else:
+        lp_impl = "halo_hybrid" if tp > 1 else "halo"
+    return StepPolicyPlan(
+        lp_impl=lp_impl,
+        schedule=schedule,
+        step_codecs=tuple(step_codecs),
+        segments=segments,
+        wire_bytes=int(wire),
+        fp32_halo_bytes=int(fp32_halo),
+        psum_bytes=int(psum),
+        psnr_floor_db=psnr_floor_db,
+        envelope_db=envelope,
+    )
+
+
+def auto_plan(
+    cfg: cm.VDMCommConfig,
+    K: int,
+    r: float,
+    sampler,
+    num_steps: int,
+    psnr_floor_db: float = 40.0,
+    tp: int = 1,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    credit_db: float = HIGH_NOISE_CREDIT_DB,
+) -> StepPolicyPlan:
+    """The auto-plan: byte-minimal (engine, codec schedule) meeting the
+    PSNR floor on this workload geometry and sigma trajectory."""
+    if not usable_dims(cfg.latent_dims, cfg.patch_sizes, K):
+        raise ValueError(
+            f"no latent dim of {cfg.latent_dims} has >= {K} patches"
+        )
+    sigmas = trajectory_sigmas(sampler, num_steps)
+    schedule = schedule_for_floor(cfg, K, r, psnr_floor_db, candidates,
+                                  credit_db)
+    return _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
+                               psnr_floor_db, credit_db)
+
+
+def resolve_cli_schedule(
+    spec: Union[str, CodecSchedule, None],
+    cfg: cm.VDMCommConfig,
+    K: int,
+    r: float,
+    sampler,
+    num_steps: int,
+    psnr_floor_db: Optional[float] = None,
+    tp: int = 1,
+) -> StepPolicyPlan:
+    """Shared ``--codec-schedule`` resolution for serve/dryrun.
+
+    ``"auto"`` runs :func:`auto_plan` (floor defaults to 40 dB, the
+    serving-tolerance gate).  An explicit spec is parsed and charged;
+    it is validated against the envelope only when the caller also
+    passed a floor — an explicit spec is an operator override, but an
+    explicit spec AND an explicit floor that contradict each other is
+    a config error worth failing loudly on.
+    """
+    if isinstance(spec, str) and spec.strip().lower() == "auto":
+        return auto_plan(cfg, K, r, sampler, num_steps,
+                         psnr_floor_db=40.0 if psnr_floor_db is None
+                         else psnr_floor_db, tp=tp)
+    schedule = parse_schedule(spec)
+    sigmas = trajectory_sigmas(sampler, num_steps)
+    plan = _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
+                               psnr_floor_db, HIGH_NOISE_CREDIT_DB,
+                               allow_engine_flip=False)
+    if psnr_floor_db is not None and plan.envelope_db < psnr_floor_db:
+        raise ValueError(
+            f"schedule {schedule.spec!r} has envelope "
+            f"{plan.envelope_db:.0f} dB < requested floor "
+            f"{psnr_floor_db:.0f} dB (see docs/step_policy.md)"
+        )
+    return plan

@@ -30,7 +30,8 @@ def reshard_tree(tree: Any, mesh: Mesh, parallel: ParallelConfig) -> Any:
     )
 
 
-def replan_lp_compiler(compiler, new_mesh_shape, forward=None) -> bool:
+def replan_lp_compiler(compiler, new_mesh_shape, forward=None,
+                       forward_factory=None) -> bool:
     """Mid-request elastic re-plan of a live LP step compiler.
 
     Retargets ``compiler`` (a ``core/lp_step.LPStepCompiler``) at a new
@@ -45,27 +46,37 @@ def replan_lp_compiler(compiler, new_mesh_shape, forward=None) -> bool:
     * the compiler's ``plan_epoch`` bump makes an in-flight
       ``lp_denoise`` loop reset codec residual state exactly once at the
       next step boundary (old state shapes are garbage on the new plan);
-    * a compiler whose ``forward`` hook is mesh-bound (the SPMD engines
-      close over a jax ``Mesh`` whose lp axis must equal K) MUST be
-      given a re-bound ``forward`` built on the shrunken/grown mesh
-      whenever K changes — the old hook would reject the new plan at
-      trace time.  This function raises immediately instead of letting
-      that happen mid-denoise.  Simulate-path compilers (``forward is
-      None``) need nothing.
+    * a compiler whose ``forward`` hook or ``forward_factory`` (the
+      scheduled-codec variant) is mesh-bound (the SPMD engines close
+      over a jax ``Mesh`` whose lp axis must equal K) MUST be given a
+      re-bound hook/factory built on the shrunken/grown mesh whenever K
+      changes — the old one would reject the new plan at trace time.
+      This function raises immediately instead of letting that happen
+      mid-denoise.  Simulate-path compilers (no ``forward``, no
+      ``forward_factory``) need nothing.
     """
     new_mesh_shape = tuple(new_mesh_shape)
-    if (compiler.forward is not None and forward is None
-            and new_mesh_shape[0] != compiler.num_partitions):
-        raise ValueError(
-            "re-planning the lp-axis size of a mesh-bound compiler needs a "
-            "re-bound forward hook (the old hook closes over a mesh with "
-            f"lp={compiler.num_partitions}, new plan wants "
-            f"lp={new_mesh_shape[0]})"
-        )
+    if new_mesh_shape[0] != compiler.num_partitions:
+        if compiler.forward is not None and forward is None:
+            raise ValueError(
+                "re-planning the lp-axis size of a mesh-bound compiler "
+                "needs a re-bound forward hook (the old hook closes over "
+                f"a mesh with lp={compiler.num_partitions}, new plan "
+                f"wants lp={new_mesh_shape[0]})"
+            )
+        if compiler.forward_factory is not None and forward_factory is None:
+            raise ValueError(
+                "re-planning the lp-axis size of a schedule compiler "
+                "whose forward_factory is mesh-bound needs a re-bound "
+                "factory (the old one binds hooks to a mesh with "
+                f"lp={compiler.num_partitions}, new plan wants "
+                f"lp={new_mesh_shape[0]})"
+            )
     return compiler.replan(
         num_partitions=new_mesh_shape[0],
         mesh_shape=new_mesh_shape,
         forward=forward,
+        forward_factory=forward_factory,
     )
 
 

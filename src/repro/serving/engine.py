@@ -24,7 +24,26 @@ Production behaviours implemented (scaled to the container):
     the halo payloads through ``comm/`` codecs (bf16/int8/int4, or
     int8-residual temporal-delta with error feedback).  Residual codec
     state is zeroed at the start of every same-dim scan run inside
-    ``lp_denoise``, so state can never leak across batches/requests.
+    ``lp_denoise``, so state can never leak across batches/requests;
+  * step policy: ``codec_schedule`` replaces the frozen per-request
+    codec with a sigma-scheduled one (``policy/`` subsystem) — ``auto``
+    lets the cost-model autotuner pick (engine, schedule) minimizing
+    analytic wire bytes subject to ``psnr_floor`` against the
+    conformance PSNR envelope; an explicit spec (e.g.
+    ``int8-residual@0.45,bf16``) is taken as-is.  Scheduled segments
+    run as segmented scans through the shared ``LPStepCompiler``
+    (segment codec in the cache key, <= 3 x num_segments compiles);
+  * mid-request re-planning: with ``elastic=True`` the per-step hook
+    consults ``StragglerState.propose_group_eviction`` and applies a
+    proposed eviction through ``runtime.elastic.replan_lp_compiler``
+    WHILE a batch is denoising — the compiled-step cache can never
+    serve a stale-geometry entry and codec state resets exactly once.
+    The engine cannot time remote LP groups itself: an external
+    monitor must feed per-group step times through
+    :meth:`LPServingEngine.observe_group_times` (from another thread,
+    mid-batch, is fine — the hook reads the EMA at the next step
+    boundary).  Note ``elastic=True`` installs a per-step hook, which
+    disables scan fusion; leave it off when no monitor is attached.
 """
 from __future__ import annotations
 
@@ -60,7 +79,11 @@ class VideoResult:
     request_id: int
     latent: jnp.ndarray
     num_steps: int
-    wall_s: float
+    # the denoise is batched, so a request's wall time is the batch's:
+    # report it as such (with the batch size) instead of pretending the
+    # whole-batch wall belongs to each request individually
+    batch_wall_s: float
+    batch_size: int
     restarts: int = 0
 
 
@@ -78,6 +101,10 @@ class LPServingEngine:
         uniform: bool = True,
         lp_impl: str = "auto",
         wire_codec: Optional[str] = None,
+        codec_schedule: Optional[str] = None,
+        psnr_floor: Optional[float] = None,
+        plan_geometry: Tuple[int, int, int] = (13, 60, 104),
+        elastic: bool = False,
         mesh=None,
         lp_axis: str = "data",
         tp_axis: str = "model",
@@ -92,37 +119,77 @@ class LPServingEngine:
         self.max_wait = max_wait_requests
         self.uniform = uniform
         self.straggler = StragglerState(num_partitions)
+        self.elastic = elastic
+        self.evictions = 0
         self._queue: List[VideoRequest] = []
         self._polls = 0
         self._enqueued_at: Dict[int, int] = {}       # request_id -> poll no.
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
         self._sampler = FlowMatchEuler(num_steps)
-        # Engine selection: "auto" follows the comm model (psum at K=2,
-        # halo family beyond — select_lp_impl); a non-trivial wire codec
-        # implies the halo family, which is where the codec layer lives.
-        # On a 2D (lp, tp) mesh the halo family is the hybrid engine:
-        # the group-axis halo schedule with the TP DiT forward as the
-        # black-box intra-group Phi_m.
-        self.codec = get_codec(wire_codec)
-        codec_active = self.codec.name not in ("fp32", "identity")
-        explicit_halo = lp_impl in ("halo", "halo_hybrid")
         tp = 1
         if mesh is not None and tp_axis in mesh.axis_names:
             tp = mesh.shape[tp_axis]
+        # Step policy: a codec schedule (explicit spec or cost-model
+        # "auto") subsumes the fixed wire_codec — they are exclusive.
+        self.codec = get_codec(wire_codec)
+        codec_active = self.codec.name not in ("fp32", "identity")
+        self.plan = None
+        schedule = None
+        if codec_schedule is not None:
+            from repro.core.comm_model import VDMCommConfig
+            from repro.policy import resolve_cli_schedule
+
+            if codec_active:
+                raise ValueError(
+                    "pass wire_codec= (fixed) or codec_schedule= "
+                    "(sigma-scheduled), not both"
+                )
+            # the plan geometry only anchors the byte model; the chosen
+            # schedule depends on codec bit-widths and the sigma
+            # trajectory, both geometry-robust
+            ccfg = VDMCommConfig(
+                latent_dims=tuple(plan_geometry),
+                latent_channels=cfg.latent_channels,
+                patch_sizes=cfg.patch_sizes,
+                d_model=cfg.d_model,
+                num_blocks=cfg.num_layers,
+                num_steps=num_steps,
+            )
+            self.plan = resolve_cli_schedule(
+                codec_schedule, ccfg, self.K, self.r, self._sampler,
+                num_steps, psnr_floor_db=psnr_floor, tp=tp,
+            )
+            if lp_impl == "auto":
+                lp_impl = self.plan.lp_impl
+            if set(self.plan.step_codecs) != {"fp32"}:
+                schedule = self.plan.schedule
+        elif psnr_floor is not None:
+            raise ValueError("psnr_floor needs codec_schedule")
+        # Engine selection: "auto" follows the comm model (psum at K=2,
+        # halo family beyond — select_lp_impl); a non-trivial wire codec
+        # or schedule implies the halo family, which is where the codec
+        # layer lives.  On a 2D (lp, tp) mesh the halo family is the
+        # hybrid engine: the group-axis halo schedule with the TP DiT
+        # forward as the black-box intra-group Phi_m.
+        explicit_halo = lp_impl in ("halo", "halo_hybrid")
         if lp_impl == "auto":
             if codec_active:
                 lp_impl = "halo_hybrid" if tp > 1 else "halo"
             else:
                 lp_impl = select_lp_impl(self.K, tp)
-        if codec_active and lp_impl not in ("halo", "halo_hybrid"):
+        if (codec_active or schedule is not None) and \
+                lp_impl not in ("halo", "halo_hybrid"):
+            what = (f"wire_codec={self.codec.name!r}" if codec_active
+                    else f"codec_schedule={schedule.spec!r}")
             raise ValueError(
-                f"wire_codec={self.codec.name!r} needs the halo family "
-                f"(the codec layer lives there), got lp_impl={lp_impl!r}"
+                f"{what} needs the halo family (the codec layer lives "
+                f"there), got lp_impl={lp_impl!r}"
             )
         self.lp_impl = lp_impl
         self.mesh = mesh
         self.tp = tp
         forward = None
+        forward_factory = None
         compiler_codec = None
         if mesh is not None:
             from repro.core.hybrid import lp_forward_halo_hybrid
@@ -138,27 +205,43 @@ class LPServingEngine:
                     def halo_fwd(fn, z, plan, axis, **kw):
                         return lp_forward_halo(
                             fn, z, plan, axis, mesh, lp_axis, **kw)
-                if codec.stateful:
+                if schedule is not None:
+                    # scheduled: LPStepCompiler asks for a hook per
+                    # segment codec; each bound hook is the same halo
+                    # collective, just encoding with that segment's codec
+                    def forward_factory(seg_codec):
+                        if seg_codec.stateful:
+                            return (lambda fn, z, plan, axis, st:
+                                    halo_fwd(fn, z, plan, axis,
+                                             codec=seg_codec,
+                                             codec_state=st))
+                        return (lambda fn, z, plan, axis:
+                                halo_fwd(fn, z, plan, axis,
+                                         codec=seg_codec))
+                elif codec.stateful:
                     forward = (lambda fn, z, plan, axis, st:
                                halo_fwd(fn, z, plan, axis, codec=codec,
                                         codec_state=st))
                 else:
                     forward = (lambda fn, z, plan, axis:
                                halo_fwd(fn, z, plan, axis, codec=codec))
-                compiler_codec = codec
+                if schedule is None:
+                    compiler_codec = codec
             else:
                 forward = (lambda fn, z, plan, axis:
                            lp_forward_shard_map(fn, z, plan, axis, mesh,
                                                 lp_axis))
         elif self.lp_impl in ("halo", "halo_hybrid") and \
-                (codec_active or explicit_halo):
+                (codec_active or explicit_halo) and schedule is None:
             # off-mesh: the single-process mirror of the halo collective
             # (comm.wire.simulate_halo_forward — LPStepCompiler's codec
             # default), bit-faithful incl. the codec round-trips.  Only
             # taken when a codec is active or halo was asked for by name:
             # with fp32 wires an auto-selected halo has nothing to
             # simulate and the uniform vmapped engine is the same math
-            # for a fraction of the dispatch work.
+            # for a fraction of the dispatch work.  A schedule needs no
+            # compiler codec — the per-segment codecs route every step
+            # through the same simulate mirror.
             compiler_codec = self.codec
         # else: uniform vmapped engine (psum-equivalent math, no wire)
         # Hoisted out of the batch loop: conditioning is traced, so this
@@ -173,7 +256,9 @@ class LPServingEngine:
             spatial_axes=(1, 2, 3),
             uniform=uniform,
             forward=forward,
+            forward_factory=forward_factory,
             codec=compiler_codec,
+            schedule=schedule,
             mesh_shape=None if mesh is None else (self.K, tp),
         )
 
@@ -182,17 +267,25 @@ class LPServingEngine:
         self._queue.append(req)
         self._enqueued_at[req.request_id] = self._polls
 
+    @staticmethod
+    def _bucket_key(req: VideoRequest) -> Tuple:
+        """Batching key: geometry AND guidance.  A batch shares one
+        compiled denoise with ONE traced guidance scalar, so bucketing
+        by shape alone would silently apply the first request's
+        guidance to every rider."""
+        return (req.latent_shape, float(req.guidance))
+
     def _next_batch(self, force: bool = False) -> List[VideoRequest]:
-        """Admission: full geometry bucket, aged-out oldest bucket, or
+        """Admission: full bucket, aged-out oldest bucket, or
         (``force``, used when draining) the oldest bucket regardless."""
         if not self._queue:
             return []
         self._polls += 1
-        by_shape: Dict[Tuple, List[VideoRequest]] = defaultdict(list)
+        by_key: Dict[Tuple, List[VideoRequest]] = defaultdict(list)
         for r in self._queue:
-            by_shape[r.latent_shape].append(r)
+            by_key[self._bucket_key(r)].append(r)
         batch: List[VideoRequest] = []
-        for bucket in by_shape.values():
+        for bucket in by_key.values():
             if len(bucket) >= self.max_batch:
                 batch = bucket[: self.max_batch]
                 break
@@ -202,7 +295,7 @@ class LPServingEngine:
                 oldest.request_id, self._polls
             )
             if force or age >= self.max_wait:
-                batch = by_shape[oldest.latent_shape][: self.max_batch]
+                batch = by_key[self._bucket_key(oldest)][: self.max_batch]
             else:
                 return []
         chosen = {id(r) for r in batch}
@@ -212,6 +305,56 @@ class LPServingEngine:
         return batch
 
     # ------------------------------------------------------------ serving
+    def observe_group_times(self, step_times) -> None:
+        """Feed per-LP-group step times (seconds) into the straggler
+        EMA.  This is the ``elastic=True`` data source: the engine
+        runs single-process and cannot time remote groups, so an
+        external monitor (per-host heartbeats, profiler stream) calls
+        this — any thread, any time; the elastic step hook consumes
+        the EMA at the next step boundary."""
+        self.straggler.observe(step_times)
+
+    def _maybe_evict_straggler(self) -> None:
+        """Per-step elastic hook: apply a straggler-group eviction
+        proposal WHILE a batch is denoising.
+
+        ``StragglerState.propose_group_eviction`` fires when one LP
+        group's step-time EMA is far beyond the median (dying host,
+        broken link); ``replan_lp_compiler`` retargets the live compiler
+        — full geometry in the step-cache key, codec state reset exactly
+        once — and the in-flight ``lp_denoise`` loop picks up the new
+        plan at the next step boundary.  Mesh-bound compilers are
+        skipped: their forward hooks close over a Mesh whose lp axis
+        cannot shrink mid-request; those engines re-plan between
+        requests instead (``replan_lp_compiler`` would raise, and a
+        half-applied eviction is worse than a slow straggler).
+        """
+        proposal = self.straggler.propose_group_eviction((self.K, self.tp))
+        if proposal is None or self.mesh is not None:
+            return
+        from repro.runtime.elastic import replan_lp_compiler
+
+        evicted, new_shape = proposal
+        if replan_lp_compiler(self._compiler, new_shape):
+            self.straggler.evict(evicted)
+            self.K = new_shape[0]
+            self.evictions += 1
+
+    def _step_hook(self) -> Optional[Callable[[int], None]]:
+        """Compose the per-step hooks.  A hook disables scan fusion, so
+        return None (fused fast path) unless a fault injector is
+        registered or elastic mid-request re-planning is on."""
+        if self._step_fault is None and not self.elastic:
+            return None
+
+        def hook(i: int) -> None:
+            if self._step_fault is not None:
+                self._step_fault(i)
+            if self.elastic:
+                self._maybe_evict_straggler()
+
+        return hook
+
     def _denoise_batch(self, reqs: List[VideoRequest]) -> List[VideoResult]:
         t0 = time.time()
         shape = reqs[0].latent_shape
@@ -224,17 +367,16 @@ class LPServingEngine:
             for k in keys
         ], axis=0)
 
-        # a step hook disables scan fusion, so only install one when a
-        # fault injector is actually registered
         z0 = lp_denoise(
             None, z_T, self._sampler, self.num_steps, self.K, self.r,
             self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
             extras=(ctx, null_ctx, guidance), compiler=self._compiler,
-            step_hook=self._step_fault,
+            step_hook=self._step_hook(),
         )
         wall = time.time() - t0
         return [
-            VideoResult(r.request_id, z0[i : i + 1], self.num_steps, wall)
+            VideoResult(r.request_id, z0[i : i + 1], self.num_steps,
+                        batch_wall_s=wall, batch_size=len(reqs))
             for i, r in enumerate(reqs)
         ]
 

@@ -58,6 +58,36 @@ def test_dryrun_vdm_lp_step_multi_pod(tmp_path):
 
 
 @pytest.mark.slow
+def test_dryrun_codec_schedule_lowers_one_cell_per_segment(tmp_path):
+    """--codec-schedule auto: the step policy resolves on the cell's
+    real 60-step trajectory and the dry run lowers + measures each
+    schedule segment's engine separately (collective shapes are static
+    within a segment), tagging records with their step ranges."""
+    out = tmp_path / "rec.json"
+    # NOTE: no --lp-impl on purpose — schedule cells must lower the
+    # PLAN's engine, not the argparse default (gspmd has no stateful
+    # codec layer and used to crash here)
+    res = _run(["--arch", "wan21-dit-1.3b", "--shape", "vdm_3s",
+                "--mesh", "4x2",
+                "--codec-schedule", "auto", "--out", str(out)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PLAN wan21-dit-1.3b x vdm_3s [4x2]" in res.stdout
+    assert "halo_hybrid" in res.stdout  # the plan's engine on a 2D mesh
+    recs = json.load(open(out))
+    assert len(recs) >= 2  # a real schedule, not a degenerate fixed one
+    segs = [r["schedule_segment"] for r in recs]
+    # contiguous coverage of the full denoise, precision toward the tail
+    assert segs[0]["steps"][0] == 1 and segs[-1]["steps"][1] == 60
+    for a, b in zip(segs, segs[1:]):
+        assert b["steps"][0] == a["steps"][1] + 1
+    assert segs[0]["codec"].startswith("int4")
+    assert segs[-1]["codec"] == "int8-residual"
+    for r in recs:
+        assert r["collective_counts"].get("collective-permute", 0) >= 1
+        assert r["collective_counts"].get("all-gather", 0) >= 1
+
+
+@pytest.mark.slow
 def test_dryrun_skip_rule(tmp_path):
     res = _run(["--arch", "granite-3-2b", "--shape", "long_500k"])
     assert res.returncode == 0

@@ -23,12 +23,13 @@ def _engine(num_steps=3, max_batch=2):
                                 max_batch=max_batch)
 
 
-def _req(cfg, i, shape=(4, 8, 12)):
+def _req(cfg, i, shape=(4, 8, 12), guidance=5.0):
     return VideoRequest(
         request_id=i,
         context=frontends.text_context(jax.random.PRNGKey(100 + i), 1, cfg),
         latent_shape=shape,
         seed=i,
+        guidance=guidance,
     )
 
 
@@ -84,6 +85,106 @@ def test_engine_reuses_compiled_steps_across_batches():
     assert len(results) == 2
     assert eng._compiler.compiles == compiles_after_first
     assert eng._compiler.hits > 0
+
+
+def test_engine_buckets_by_guidance_not_just_shape():
+    """A batch shares ONE traced guidance scalar, so two requests with
+    different guidance must never ride the same batch (the old
+    shape-only bucketing silently applied reqs[0].guidance to all)."""
+    cfg, eng = _engine(num_steps=2, max_batch=4)
+    eng.submit(_req(cfg, 0, guidance=5.0))
+    eng.submit(_req(cfg, 1, guidance=1.5))
+    eng.submit(_req(cfg, 2, guidance=5.0))
+    results = {r.request_id: r for r in eng.run()}
+    assert sorted(results) == [0, 1, 2]
+    # guidance-5 pair batched together; the odd one ran alone
+    assert results[0].batch_size == 2 and results[2].batch_size == 2
+    assert results[1].batch_size == 1
+    # and the lone request really computed with ITS guidance: same
+    # request served solo at guidance 1.5 must match bit-for-bit
+    cfg2, eng2 = _engine(num_steps=2, max_batch=1)
+    eng2.submit(_req(cfg2, 1, guidance=1.5))
+    solo = eng2.run()[0].latent
+    np.testing.assert_allclose(np.asarray(results[1].latent),
+                               np.asarray(solo), atol=2e-4, rtol=2e-3)
+
+
+def test_engine_reports_batch_wall_and_size():
+    cfg, eng = _engine(num_steps=2, max_batch=2)
+    for i in range(3):
+        eng.submit(_req(cfg, i))
+    results = sorted(eng.run(), key=lambda r: r.request_id)
+    assert [r.batch_size for r in results] == [2, 2, 1]
+    assert all(r.batch_wall_s > 0 for r in results)
+    # riders of one batch share the batch wall; separate batches don't
+    assert results[0].batch_wall_s == results[1].batch_wall_s
+    assert results[1].batch_wall_s != results[2].batch_wall_s
+
+
+def test_engine_elastic_evicts_straggler_mid_request():
+    """Satellite (ROADMAP open item): StragglerState.propose_group_
+    eviction is wired into the serving step hook — a far-gone straggler
+    group is evicted WHILE the batch denoises, the compiled-step cache
+    re-plans (epoch bump, no stale entries), and the result is sane."""
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=4,
+                          overlap_ratio=0.5, num_steps=3, max_batch=1,
+                          elastic=True, wire_codec="int8-residual")
+    # group 3's EMA is 9x the median: eviction threshold well exceeded
+    for _ in range(5):
+        eng.straggler.observe([1.0, 1.0, 1.0, 9.0])
+    eng.submit(_req(cfg, 0, shape=(8, 8, 12)))
+    results = eng.run()
+    assert eng.evictions == 1
+    assert eng.K == 3 and eng._compiler.num_partitions == 3
+    assert eng._compiler.plan_epoch == 1
+    assert eng.straggler.num_partitions == 3
+    assert np.isfinite(np.asarray(results[0].latent, np.float32)).all()
+    # a healthy ring proposes nothing: second request, no further evicts
+    eng.submit(_req(cfg, 1, shape=(8, 8, 12)))
+    eng.run()
+    assert eng.evictions == 1 and eng.K == 3
+
+
+def test_engine_codec_schedule_auto_plans_and_serves():
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=3,
+                          max_batch=2, codec_schedule="auto")
+    assert eng.plan is not None
+    assert eng.plan.envelope_db >= 40.0
+    assert eng.lp_impl == "halo"  # codec'd halo beats psum even at K=2
+    assert eng._compiler.schedule is not None
+    eng.submit(_req(cfg, 0))
+    eng.submit(_req(cfg, 1))
+    results = eng.run()
+    assert len(results) == 2
+    for r in results:
+        assert np.isfinite(np.asarray(r.latent, np.float32)).all()
+    # compiled steps are shared across batches: serve again, no retrace
+    before = eng._compiler.compiles
+    eng.submit(_req(cfg, 2))
+    eng.submit(_req(cfg, 3))
+    eng.run()
+    assert eng._compiler.compiles == before
+    # exclusivity guards
+    with pytest.raises(ValueError, match="not both"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=2,
+                        wire_codec="int8", codec_schedule="auto")
+    with pytest.raises(ValueError, match="psnr_floor"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=2,
+                        psnr_floor=40.0)
 
 
 def test_engine_determinism_across_batching():

@@ -1,0 +1,345 @@
+"""Step-policy subsystem: schedule grammar, sigma resolution, the PSNR
+envelope, cost-model autotuning, scheduled byte totals, and the
+segmented-scan compile/state contracts."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LPStepCompiler, comm_model as cm, lp_denoise
+from repro.diffusion.sampler import DDIM, FlowMatchEuler
+from repro.policy import (
+    CodecSchedule,
+    PSNR_ENVELOPE_DB,
+    StepPolicyPlan,
+    auto_plan,
+    codec_floor_db,
+    effective_floor_db,
+    parse_schedule,
+    resolve_cli_schedule,
+    schedule_envelope_db,
+    segment_steps,
+)
+from repro.policy.schedule import ScheduleSegment, trajectory_sigmas
+
+
+# ------------------------------------------------------------- grammar
+def test_parse_roundtrip_and_fixed():
+    s = parse_schedule("int4-residual@0.85,int8-residual@0.45,bf16")
+    assert [seg.codec for seg in s.segments] == [
+        "int4-residual", "int8-residual", "bf16"]
+    assert [seg.sigma_lo for seg in s.segments] == [0.85, 0.45, 0.0]
+    assert parse_schedule(s.spec) == s
+    assert parse_schedule("int8").fixed_codec == "int8"
+    assert parse_schedule(None).fixed_codec == "fp32"
+    assert parse_schedule(s) is s
+    assert CodecSchedule.fixed("bf16").spec == "bf16"
+
+
+@pytest.mark.parametrize("bad", [
+    "",                              # empty
+    "int8@0.5",                      # tail carries a threshold
+    "int8@0.5,bf16@0.7,fp32",        # thresholds not decreasing
+    "int8@0.5,int4@0.5,fp32",        # not strictly decreasing
+    "int8@zz,fp32",                  # unparsable threshold
+    "int7",                          # unknown codec
+    "bf16,int8",                     # non-tail segment missing threshold
+    "int8-residual@4.5,bf16",        # threshold >= 1: sigma never gets
+                                     # there — a typo'd 0.45, not a spec
+])
+def test_parse_rejects_malformed_specs(bad):
+    with pytest.raises(ValueError):
+        parse_schedule(bad)
+
+
+# ----------------------------------------------------- sigma resolution
+def test_step_codecs_follow_the_shifted_trajectory():
+    """WAN's shift=3 schedule spends half its steps above sigma 0.75 —
+    the resolved step ranges must come from the real trajectory, not
+    from uniform step fractions."""
+    s = parse_schedule("int8@0.75,bf16")
+    sampler = FlowMatchEuler(6)
+    sigmas = trajectory_sigmas(sampler, 6)
+    assert sigmas[0] == pytest.approx(1.0)
+    codecs = s.step_codecs(sigmas)
+    # sigmas: 1.0 .937 .857 .75 .6 .429 -> threshold 0.75 is INCLUSIVE
+    assert codecs == ("int8", "int8", "int8", "int8", "bf16", "bf16")
+    runs = segment_steps(s, sigmas)
+    assert [(r.codec, r.start, r.stop) for r in runs] == [
+        ("int8", 1, 4), ("bf16", 5, 6)]
+    assert runs[0].num_steps == 4
+
+
+def test_adjacent_same_codec_segments_merge():
+    s = parse_schedule("int8@0.9,int8@0.5,bf16")
+    runs = segment_steps(s, trajectory_sigmas(FlowMatchEuler(6), 6))
+    assert len(runs) == 2  # one int8 run, one bf16 run
+
+
+def test_trajectory_sigmas_ddim_fallback_is_monotone():
+    sig = trajectory_sigmas(DDIM(8), 8)
+    assert len(sig) == 8 and sig[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(sig, sig[1:]))
+
+
+# ------------------------------------------------------------ envelope
+def test_envelope_mirrors_conformance_floors():
+    """The planner's floors and the conformance suite's gates must be
+    the same numbers — test_lp_conformance imports this dict."""
+    assert PSNR_ENVELOPE_DB["bf16"] == 50.0
+    assert PSNR_ENVELOPE_DB["int8"] == PSNR_ENVELOPE_DB["int8-residual"] == 40.0
+    assert PSNR_ENVELOPE_DB["int4"] == PSNR_ENVELOPE_DB["int4-residual"] == 24.0
+    assert math.isinf(codec_floor_db("fp32"))
+    with pytest.raises(ValueError):
+        codec_floor_db("int7")
+
+
+def test_effective_floor_credit_is_linear_and_vanishes_at_tail():
+    assert effective_floor_db("int4", 0.0) == 24.0
+    assert effective_floor_db("int4", 0.8, credit_db=20.0) == 40.0
+    # the envelope of a resolved schedule is its worst credited step
+    env = schedule_envelope_db(["int4", "bf16"], [0.8, 0.0],
+                               credit_db=20.0)
+    assert env == 40.0
+    with pytest.raises(ValueError):
+        schedule_envelope_db(["int8"], [0.5, 0.1])
+
+
+# ------------------------------------------------------------ autotune
+def _ccfg(num_steps=6):
+    return cm.wan21_comm_config(49, num_steps=num_steps)
+
+
+def test_auto_plan_meets_floor_and_minimizes_bytes():
+    sampler = FlowMatchEuler(6)
+    plan = auto_plan(_ccfg(), 4, 0.5, sampler, 6, psnr_floor_db=40.0)
+    assert isinstance(plan, StepPolicyPlan)
+    assert plan.lp_impl == "halo"
+    assert plan.envelope_db >= 40.0
+    # cheaper than the best fixed codec meeting the floor at every step
+    fixed = cm.comm_lp_halo_scheduled(_ccfg(), 4, 0.5,
+                                      ("int8-residual",) * 6)
+    assert plan.wire_bytes < fixed
+    assert plan.reduction_vs_fp32_halo >= 2.5
+    # high-noise head got a coarser codec than the tail
+    assert plan.step_codecs[0] == "int4-residual"
+    assert plan.step_codecs[-1] == "int8-residual"
+    assert plan.num_segments >= 2
+    assert "int4-residual" in plan.describe()
+
+
+def test_auto_plan_floor_monotonicity():
+    """Raising the floor can only cost bytes (less compression)."""
+    sampler = FlowMatchEuler(8)
+    prev = None
+    for floor in (24.0, 40.0, 50.0):
+        plan = auto_plan(_ccfg(8), 4, 0.5, sampler, 8,
+                         psnr_floor_db=floor)
+        assert plan.envelope_db >= floor
+        if prev is not None:
+            assert plan.wire_bytes >= prev
+        prev = plan.wire_bytes
+
+
+def test_auto_plan_strict_floor_degrades_to_precision_codecs():
+    sampler = FlowMatchEuler(6)
+    plan = auto_plan(_ccfg(), 4, 0.5, sampler, 6, psnr_floor_db=50.0)
+    # bf16's 50 dB floor makes it the tail; int8* only with sigma credit
+    assert plan.step_codecs[-1] == "bf16"
+    assert plan.envelope_db >= 50.0
+
+
+def test_auto_plan_unreachable_floor_raises_without_fp32():
+    with pytest.raises(ValueError, match="floor"):
+        auto_plan(_ccfg(), 4, 0.5, FlowMatchEuler(6), 6,
+                  psnr_floor_db=60.0,
+                  candidates=("int8", "bf16"))  # no exact codec offered
+
+
+def test_auto_plan_k2_keeps_halo_when_codecs_win():
+    """At K=2 the fp32 halo is break-even with psum, but a codec'd
+    schedule still beats the psum engine's fp32 ring — the planner
+    derives the engine from bytes, not from the static K rule."""
+    plan = auto_plan(_ccfg(), 2, 0.5, FlowMatchEuler(6), 6,
+                     psnr_floor_db=40.0)
+    assert plan.lp_impl == "halo"
+    assert plan.wire_bytes < plan.psum_bytes
+
+
+def test_resolve_cli_schedule_auto_and_explicit():
+    ccfg = _ccfg()
+    sampler = FlowMatchEuler(6)
+    plan = resolve_cli_schedule("auto", ccfg, 4, 0.5, sampler, 6)
+    assert plan.psnr_floor_db == 40.0 and plan.envelope_db >= 40.0
+    plan2 = resolve_cli_schedule("int8-residual@0.45,bf16", ccfg, 4, 0.5,
+                                 sampler, 6)
+    assert plan2.schedule.spec == "int8-residual@0.45,bf16"
+    assert plan2.lp_impl == "halo"
+    # explicit spec + explicit floor that contradict -> loud failure
+    with pytest.raises(ValueError, match="envelope"):
+        resolve_cli_schedule("int4", ccfg, 4, 0.5, sampler, 6,
+                             psnr_floor_db=40.0)
+
+
+def test_explicit_schedule_is_never_engine_flipped():
+    """An explicit spec is an operator pin: even when the byte model
+    says the psum engine would be cheaper (K=2, high overlap, a single
+    bf16 step in 60), the plan must keep the halo family and the
+    pinned codecs — only AUTO plans may flip engines on bytes."""
+    ccfg = _ccfg(60)
+    sampler = FlowMatchEuler(60)
+    plan = resolve_cli_schedule("bf16@0.999,fp32", ccfg, 2, 0.75,
+                                sampler, 60)
+    assert plan.psum_bytes < plan.wire_bytes  # the flip would trigger
+    assert plan.lp_impl == "halo"
+    assert plan.schedule.spec == "bf16@0.999,fp32"
+    assert "bf16" in plan.step_codecs
+
+
+# ----------------------------------------------------- scheduled bytes
+def test_comm_lp_halo_scheduled_composes_fixed_models():
+    """A scheduled denoise's bytes must equal the sum of fixed-codec
+    per-step bytes over the same step ranges (segments change WHO
+    encodes, not the message layout)."""
+    from repro.core.schedule import rotation_dim, usable_dims
+
+    ccfg = _ccfg(9)
+    step_codecs = ("int4",) * 3 + ("int8",) * 4 + ("bf16",) * 2
+    total = cm.comm_lp_halo_scheduled(ccfg, 4, 0.5, step_codecs)
+    # hand-summed fixed-codec accounting over the rotation schedule
+    dims = usable_dims(ccfg.latent_dims, ccfg.patch_sizes, 4)
+    want = 0
+    for i, name in enumerate(step_codecs, start=1):
+        seg = cm.lp_halo_scheduled_segments(ccfg, 4, 0.5, (name,))
+        want += seg[0]["per_dim"][rotation_dim(i, dims)]
+    assert total == want
+    # and the segment breakdown covers every step exactly once
+    segs = cm.lp_halo_scheduled_segments(ccfg, 4, 0.5, step_codecs)
+    assert [(s["start"], s["stop"]) for s in segs] == [
+        (1, 3), (4, 7), (8, 9)]
+    assert sum(s["wire_bytes"] for s in segs) == total
+
+
+def test_scheduled_fp32_matches_unscheduled_halo_model():
+    ccfg = _ccfg(6)
+    assert cm.comm_lp_halo_scheduled(ccfg, 4, 0.5, ("fp32",) * 6) == \
+        cm.comm_lp_halo(ccfg, 4, 0.5)
+
+
+# ------------------------------------- segmented-scan execution contract
+def _single_dim_z(seed=0):
+    # spatial (8, 2, 2) with patches (1, 2, 2): only dim 0 rotates, so
+    # every compile / state reset is attributable to a segment boundary
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(1, 8, 2, 2, 3)).astype(np.float32))
+
+
+def _den(w, t):
+    return jnp.tanh(w) * 0.1 + w * 1e-4 * t
+
+
+def test_scheduled_compiles_at_most_3x_segments():
+    """Compile-count contract on a 3-rotation-dim latent: a scheduled
+    T-step denoise compiles <= 3 x num_segments and re-runs are fully
+    cache-served."""
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(1, 8, 8, 12, 4)).astype(np.float32))
+    sampler = FlowMatchEuler(12)
+    spec = "int4-residual@0.8,int8-residual@0.45,bf16"
+    schedule = parse_schedule(spec)
+    n_seg = len(segment_steps(schedule, trajectory_sigmas(sampler, 12)))
+    assert n_seg == 3
+    comp = LPStepCompiler(_den, sampler.update, 2, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True, schedule=spec)
+    out = lp_denoise(None, z, sampler, 12, 2, 0.5, (1, 2, 2), (1, 2, 3),
+                     uniform=True, compiler=comp)
+    assert np.isfinite(np.asarray(out)).all()
+    assert comp.compiles <= 3 * n_seg, (comp.compiles, n_seg)
+    before = comp.compiles
+    lp_denoise(None, z, sampler, 12, 2, 0.5, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp)
+    assert comp.compiles == before
+
+
+def test_segment_codec_in_cache_key():
+    """Two segments of one schedule must never share a compiled step."""
+    z = _single_dim_z()
+    sampler = FlowMatchEuler(6)
+    comp = LPStepCompiler(_den, sampler.update, 2, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True,
+                          schedule="int8@0.7,bf16")
+    lp_denoise(None, z, sampler, 6, 2, 0.5, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp)
+    names = {k[6] for k in comp._cache}  # codec-name key slot
+    assert names == {"int8", "bf16"}
+
+
+def test_schedule_and_codec_are_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        LPStepCompiler(_den, FlowMatchEuler(2).update, 2, 0.5, (1, 2, 2),
+                       (1, 2, 3), uniform=True, codec="int8",
+                       schedule="int8@0.5,bf16")
+
+
+def test_schedule_rejects_fixed_forward_hook():
+    """A fixed forward= hook is bound to one codec — accepting it with
+    a schedule would silently ignore the segments."""
+    def fixed_hook(fn, z, plan, axis):
+        raise AssertionError("never traced")
+
+    with pytest.raises(ValueError, match="forward_factory"):
+        LPStepCompiler(_den, FlowMatchEuler(2).update, 2, 0.5, (1, 2, 2),
+                       (1, 2, 3), uniform=True, forward=fixed_hook,
+                       schedule="int8@0.5,bf16")
+
+
+def test_replan_guards_mesh_bound_forward_factory():
+    """replan_lp_compiler must refuse a K change on a schedule compiler
+    whose forward_factory closes over a mesh, unless a re-bound factory
+    comes with it — same contract as the fixed forward hook."""
+    from repro.runtime.elastic import replan_lp_compiler
+
+    def factory(codec):  # stands in for a mesh-bound halo binder
+        raise AssertionError("never called")
+
+    comp = LPStepCompiler(_den, FlowMatchEuler(2).update, 4, 0.5,
+                          (1, 2, 2), (1, 2, 3), uniform=True,
+                          schedule="int8@0.5,bf16",
+                          forward_factory=factory, mesh_shape=(4, 1))
+    with pytest.raises(ValueError, match="factory"):
+        replan_lp_compiler(comp, (3, 1))
+    # tp-only change keeps K: the old factory stays valid
+    assert replan_lp_compiler(comp, (4, 2))
+
+    def new_factory(codec):
+        raise AssertionError("never called")
+
+    assert replan_lp_compiler(comp, (3, 2), forward_factory=new_factory)
+    assert comp.num_partitions == 3
+    assert comp.forward_factory is new_factory
+
+
+def test_scheduled_replan_still_resets_state_once():
+    """A mid-request re-plan inside a scheduled denoise composes with
+    segment boundaries: state resets once per boundary AND once per
+    re-plan, never more."""
+    from repro.runtime.elastic import replan_lp_compiler
+
+    z = _single_dim_z(1)
+    sampler = FlowMatchEuler(8)
+    comp = LPStepCompiler(_den, sampler.update, 4, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True,
+                          schedule="int8-residual@0.7,int4-residual",
+                          mesh_shape=(4, 1))
+
+    def hook(i):
+        if i == 3:  # inside the first (int8-residual) segment
+            assert replan_lp_compiler(comp, (3, 1))
+
+    out = lp_denoise(None, z, sampler, 8, 4, 0.5, (1, 2, 2), (1, 2, 3),
+                     uniform=True, compiler=comp, step_hook=hook)
+    assert np.isfinite(np.asarray(out)).all()
+    # inits: segment 1 start, re-plan at step 3, segment 2 boundary
+    assert comp.state_inits == 3, comp.state_inits
+    assert comp.plan_epoch == 1

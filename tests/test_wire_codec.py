@@ -191,6 +191,44 @@ def test_residual_state_shape_dtype_stable_under_scan(geom):
     assert _state_sig(st3) == _state_sig(st_)
 
 
+@given(st.integers(min_value=2, max_value=7),
+       st.sampled_from(["int8-residual", "int4-residual"]),
+       st.sampled_from(["int4-residual", "bf16", "int8"]))
+@settings(max_examples=10, deadline=None)
+def test_residual_state_resets_exactly_once_per_segment_boundary(
+        boundary, head, tail):
+    """Property: over any segment boundary position and codec pairing,
+    a scheduled single-dim denoise re-inits residual state exactly once
+    per STATEFUL segment start — never per step, never for stateless
+    segments — and fused/unfused execution agree on the count."""
+    from repro.policy import parse_schedule
+    from repro.policy.schedule import segment_steps, trajectory_sigmas
+
+    steps = 8
+    sampler = FlowMatchEuler(steps)
+    sigmas = trajectory_sigmas(sampler, steps)
+    thr = (sigmas[boundary - 1] + sigmas[boundary]) / 2
+    if head == tail:
+        return  # same codec merges into one segment; nothing to reset
+    spec = f"{head}@{thr:.6f},{tail}"
+    runs = segment_steps(parse_schedule(spec), sigmas)
+    want_inits = sum(
+        1 for r in runs if r.codec.endswith("-residual"))
+    rng = np.random.default_rng(boundary)
+    z = jnp.asarray(rng.normal(size=(1, 8, 2, 2, 3)).astype(np.float32))
+    den = lambda w, t: jnp.tanh(w) * 0.1
+
+    for hook in (None, lambda i: None):  # fused and unfused paths
+        comp = LPStepCompiler(den, sampler.update, 2, 0.5, (1, 2, 2),
+                              (1, 2, 3), uniform=True, schedule=spec)
+        out = lp_denoise(None, z, sampler, steps, 2, 0.5, (1, 2, 2),
+                         (1, 2, 3), uniform=True, compiler=comp,
+                         step_hook=hook)
+        assert np.isfinite(np.asarray(out)).all()
+        assert comp.state_inits == want_inits, (
+            hook, spec, comp.state_inits, want_inits)
+
+
 def test_residual_state_zeroed_across_same_dim_runs():
     """Fresh state is all-zeros and two identical runs from fresh state
     are bit-identical — the 'state re-zeroed per same-dim run' hygiene
