@@ -22,6 +22,7 @@ from . import (
     table1_comm,
     table2_latency,
     wire_codec,
+    wire_shard,
 )
 
 ALL = {
@@ -36,6 +37,7 @@ ALL = {
     "wire_codec": wire_codec.run,
     "hybrid_lp_tp": hybrid_lp_tp.run,
     "codec_schedule": codec_schedule.run,
+    "wire_shard": wire_shard.run,
 }
 
 

@@ -22,6 +22,7 @@ def rows():
     out = []
     for frames in (49, 81):
         cfg = cm.wan21_comm_config(frames)
+        shard = cm.comm_lp_halo_sharded(cfg, 2, 2, 0.5, "int8")
         ours = {
             "NMP": cm.comm_nmp(cfg, 4),
             "PP": cm.comm_pp(cfg, 4),
@@ -46,6 +47,18 @@ def rows():
                 cfg, 2, 2, 0.5),
             "LP×TP 2x2 halo int8 (ours)": cm.comm_lp_halo_hybrid(
                 cfg, 2, 2, 0.5, "int8"),
+            # hierarchy-aware wire: sharding the slabs over the tp axis
+            # collapses the T-replicated inter-group transfers back to
+            # ~the 1D model; the honest price — the intra-group
+            # reassembly gather — is its own row, not hidden
+            "LP×TP 2x2 halo int8 shard inter (ours)": shard["inter"],
+            "LP×TP 2x2 halo int8 shard intra (ours)": shard["intra"],
+            # the paper's hub hybrid (Eq. 50) with the striped wire:
+            # total includes the intra reassembly gather alongside the
+            # NMP collectives (comm_hybrid wire_shard accounting)
+            "Hybrid M=2 NMP (Eq.50)": cm.comm_hybrid(cfg, 4, 2, 0.5),
+            "Hybrid M=2 NMP +shard (Eq.50)": cm.comm_hybrid(
+                cfg, 4, 2, 0.5, wire_shard=True),
         }
         for method, bytes_ in ours.items():
             paper = PAPER.get((frames, method))

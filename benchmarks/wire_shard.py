@@ -1,0 +1,196 @@
+"""Hierarchy-aware halo wire benchmark -> BENCH_wire_shard.json.
+
+The tp-sharded halo wire (``core/hybrid.lp_forward_halo_hybrid(...,
+wire_shard=True)``) on a 2D ``(lp=2, tp=4)`` mesh of 8 fake CPU devices,
+in a subprocess so the device-count XLA flag never leaks:
+
+1. **two-tier wire bytes** — per-device collective payloads of one
+   sharded hybrid step per codec, measured from the compiled 2D-mesh
+   HLO with the replica-group-size breakdown
+   (``analysis/hlo_analyzer`` ``collective_group_bytes``: lp-axis
+   collectives run in groups of M, tp-axis reassembly gathers in groups
+   of T) and cross-checked EXACTLY against
+   ``comm_model.lp_halo_sharded_step_collectives`` — the acceptance
+   contract of the sharded wire, inter and intra tiers separately.
+2. **T-fold inter-group reduction** — the same step unsharded
+   (``comm_lp_halo_hybrid``'s per-device wire is the full slab on every
+   tp rank); sharded inter-group bytes must be >= (T - eps) x smaller.
+3. **value fidelity** — sharded output vs the unsharded hybrid engine
+   (the split is transport-only, so 1e-5 is conservative: they are
+   bit-identical), including the int8-residual scan-carry state.
+4. **compile discipline** — a 6-step ``lp_denoise`` through
+   ``LPStepCompiler`` with the mesh-bound sharded forward stays at
+   <= 3 x num_segments compiles.
+
+Gates: exact analytic==measured per collective per tier for
+fp32/bf16/int8; inter reduction >= T - 0.25 at T=4; rel err <= 1e-5 vs
+unsharded; compile count.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+MESH_M, MESH_T = 2, 4
+R = 0.5
+OUT_JSON = "BENCH_wire_shard.json"
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import comm_model as cm
+    from repro.core import plan_uniform
+    from repro.core.hybrid import lp_forward_halo_hybrid
+    from repro.core.lp_step import LPStepCompiler, lp_denoise
+    from repro.distributed.collectives import halo_spec
+    from repro.diffusion.sampler import FlowMatchEuler
+    from repro.launch.mesh import make_hybrid_mesh
+
+    M, T, R = %(M)d, %(T)d, %(R)s
+    mesh = make_hybrid_mesh(M, T)
+    # wan21 smoke latent geometry (13, 60, 104, 16), partitioned on height
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(13, 60, 104, 16)).astype(np.float32))
+    plan = plan_uniform(60, 2, M, R, dim=1)
+
+    d = 16
+    w1 = jnp.asarray(rng.normal(size=(d, d)).astype(np.float32)) * 0.05
+    def tp_denoise(window):
+        # Megatron-pattern Phi_m: each tp rank contracts 1/T of the
+        # channels, the group psums the partials over the tp axis
+        tp = jax.lax.axis_index("model")
+        part = d // T
+        w_slice = jax.lax.dynamic_slice_in_dim(w1, tp * part, part, 0)
+        x_slice = jax.lax.dynamic_slice_in_dim(window, tp * part, part, 3)
+        partial = jnp.einsum("thwc,cd->thwd", x_slice, w_slice)
+        return jnp.tanh(window) * 0.5 + jax.lax.psum(partial, "model")
+
+    ccfg = cm.VDMCommConfig(
+        latent_dims=(13, 60, 104), latent_channels=16,
+        patch_sizes=(1, 2, 2), d_model=1, num_blocks=1, num_steps=1,
+    )
+
+    def lower(name, shard):
+        codec = get_codec(name)
+        if codec.stateful:
+            st = init_halo_wire_state(
+                codec, halo_spec(plan),
+                tuple(s for i, s in enumerate(z.shape) if i != 1))
+            fn = jax.jit(lambda zz, s: lp_forward_halo_hybrid(
+                tp_denoise, zz, plan, 1, mesh, codec=codec, codec_state=s,
+                wire_shard=shard)[0])
+            hlo = fn.lower(z, st).compile().as_text()
+            val = np.asarray(fn(z, st))
+        else:
+            c = None if name == "fp32" else codec
+            fn = jax.jit(lambda zz: lp_forward_halo_hybrid(
+                tp_denoise, zz, plan, 1, mesh, codec=c, wire_shard=shard))
+            hlo = fn.lower(z).compile().as_text()
+            val = np.asarray(fn(z))
+        a = analyze(hlo)
+        return {k: float(v) for k, v in a.collective_group_bytes.items()}, val
+
+    out = {"mesh": [M, T], "measured": {}, "modeled": {},
+           "measured_unsharded": {}, "inter_reduction": {}, "rel_err": {}}
+    lp_inter = ("collective-permute", "all-gather[%%d]" %% M)
+    for name in ("fp32", "bf16", "int8", "int8-residual"):
+        sh, v_sh = lower(name, True)
+        un, v_un = lower(name, False)
+        out["measured"][name] = sh
+        out["measured_unsharded"][name] = un
+        out["modeled"][name] = cm.lp_halo_sharded_step_collectives(
+            ccfg, M, T, R, dim=1, codec=name)
+        inter_sh = sum(sh.get(k, 0) for k in lp_inter)
+        inter_un = sum(un.get(k, 0) for k in lp_inter)
+        out["inter_reduction"][name] = inter_un / inter_sh
+        out["rel_err"][name] = float(
+            np.linalg.norm(v_sh - v_un) / np.linalg.norm(v_un))
+
+    # compile discipline: 6-step denoise, int8-residual scan-carry state
+    # through the mesh-bound sharded forward (one codec = one segment)
+    res_codec = get_codec("int8-residual")
+    z6 = jnp.asarray(rng.normal(size=(1, 8, 12, 10, 16)).astype(np.float32))
+    sampler = FlowMatchEuler(6)
+    def fwd(fn, zz, pl, ax, st):
+        return lp_forward_halo_hybrid(
+            fn, zz, pl, ax, mesh, codec=res_codec, codec_state=st,
+            wire_shard=True)
+    comp = LPStepCompiler(
+        lambda w, t: jnp.tanh(w) * 0.5 + w * (1 + 1e-4 * t),
+        sampler.update, M, R, (1, 2, 2), (1, 2, 3), uniform=True,
+        forward=fwd, codec=res_codec, mesh_shape=(M, T), wire_shard=True)
+    lp_denoise(None, z6, sampler, 6, M, R, (1, 2, 2), (1, 2, 3),
+               uniform=True, compiler=comp)
+    out["denoise"] = {"compiles": comp.compiles, "num_segments": 1,
+                      "state_inits": comp.state_inits}
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def run(print_csv=True):
+    res = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT % {"M": MESH_M, "T": MESH_T, "R": R}],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        timeout=560,
+    )
+    rec = None
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rec = json.loads(line[len("JSON:"):])
+    if rec is None:
+        raise RuntimeError(
+            f"wire_shard subprocess failed:\n{res.stdout}\n{res.stderr[-2000:]}")
+
+    M, T = rec["mesh"]
+    # ---- gate 1: analytic == measured, exactly, per collective per tier
+    for name in ("fp32", "bf16", "int8"):
+        want = rec["modeled"][name]
+        got = rec["measured"][name]
+        exact = {
+            "collective-permute": want["inter"]["collective-permute"],
+            f"all-gather[{M}]": want["inter"]["all-gather"],
+            f"all-gather[{T}]": want["intra"]["all-gather"],
+        }
+        for kind, v in exact.items():
+            assert got.get(kind, 0) == v, (name, kind, got, want)
+    # ---- gate 2: >= (T - eps)-fold inter-group reduction at T=4
+    for name, red in rec["inter_reduction"].items():
+        assert red >= T - 0.25, (name, red, T)
+    # ---- gate 3: sharded values == unsharded hybrid engine
+    for name, rel in rec["rel_err"].items():
+        assert rel <= 1e-5, (name, rel)
+    # ---- gate 4: compile discipline on the sharded denoise
+    dn = rec["denoise"]
+    assert dn["compiles"] <= 3 * dn["num_segments"], dn
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if print_csv:
+        for name, red in rec["inter_reduction"].items():
+            m = rec["modeled"][name]
+            print(f"wire_shard/inter/{name},0,"
+                  f"reduction={red:.2f}x pp={m['inter']['collective-permute']}"
+                  f" ag={m['inter']['all-gather']} (modeled==measured)")
+        for name in rec["modeled"]:
+            m = rec["modeled"][name]
+            print(f"wire_shard/intra/{name},0,"
+                  f"ag={m['intra']['all-gather']} (modeled==measured)")
+        print(f"wire_shard/denoise,0,compiles={dn['compiles']} "
+              f"(<= {3 * dn['num_segments']})")
+        print(f"wire_shard/json,0,wrote {OUT_JSON}")
+    return rec
+
+
+if __name__ == "__main__":
+    run()

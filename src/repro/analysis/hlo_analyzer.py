@@ -42,6 +42,29 @@ _TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+(\d+)')
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+# replica_groups={{0,2},{1,3}} (explicit) or =[2,4]<=[8]... (iota form:
+# shape is [num_groups, group_size])
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _replica_group_size(line: str) -> Optional[int]:
+    """Participant count of a collective's replica groups, if stated.
+
+    On a 2D ``(lp, tp)`` mesh this is what tells the two link tiers
+    apart: lp-axis collectives run in groups of size M, tp-axis ones in
+    groups of size T (``collective-permute`` carries pairs, not groups —
+    it returns None and every LP ppermute is inter-group by
+    construction).
+    """
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x])
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return None
+
 
 def _dims(s: str) -> List[int]:
     return [int(x) for x in s.split(",") if x] if s else []
@@ -174,6 +197,11 @@ class Analysis:
     hbm_bytes: float = 0.0
     collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
     collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # collective bytes keyed "kind[group_size]" (replica-group size, e.g.
+    # "all-gather[4]") or bare "kind" when the op states no groups
+    # (collective-permute) — the 2D-mesh inter/intra split
+    collective_group_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def total_collective_bytes(self) -> float:
@@ -186,6 +214,9 @@ class Analysis:
             self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v * mult
         for k, v in other.collective_counts.items():
             self.collective_counts[k] = self.collective_counts.get(k, 0) + v * mult
+        for k, v in other.collective_group_bytes.items():
+            self.collective_group_bytes[k] = \
+                self.collective_group_bytes.get(k, 0) + v * mult
 
 
 def breakdown(hlo: str, top: int = 15):
@@ -352,6 +383,10 @@ def analyze(hlo: str) -> Analysis:
             _, nbytes = _shape_elems_bytes(op.out_shape)
             a.collective_bytes[base] = a.collective_bytes.get(base, 0) + nbytes
             a.collective_counts[base] = a.collective_counts.get(base, 0) + 1
+            gs = _replica_group_size(op.line)
+            gkey = base if gs is None else f"{base}[{gs}]"
+            a.collective_group_bytes[gkey] = \
+                a.collective_group_bytes.get(gkey, 0) + nbytes
         if kind == "while":
             mb = re.search(r"body=%?([\w.\-]+)", op.line)
             trips = _trip_count(op, comps)

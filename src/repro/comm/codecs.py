@@ -53,6 +53,22 @@ class Codec:
         (cross-checked in comm_model/hlo_analyzer tests)."""
         return int(math.ceil(n_elems * self.bits / 8)) + self.meta_bytes
 
+    @property
+    def wire_dtype_bytes(self) -> int:
+        """Bytes per element of the wire payload's STORAGE dtype (f32 4,
+        bf16-as-u16 2, int8 and packed int4 1).  The tp-sharded wire
+        splits the payload at storage-element granularity, so its byte
+        model needs this alongside the logical ``bits``."""
+        return max(int(self.bits) // 8, 1)
+
+    def wire_elems(self, n_elems: int, last_dim: Union[int, None] = None
+                   ) -> int:
+        """Number of wire-dtype storage elements of one message of
+        ``n_elems`` logical elements — the flat length the tp-sharded
+        transport chunks.  ``last_dim`` is the logical last-axis extent,
+        needed by packing codecs (int4 packs pairs along that axis)."""
+        return int(math.ceil(n_elems * self.bits / 8 / self.wire_dtype_bytes))
+
 
 @dataclasses.dataclass(frozen=True)
 class IdentityCodec(Codec):
@@ -150,6 +166,13 @@ class IntCodec(Codec):
         # packing is along the channel axis; for even channel counts this
         # ceil is exact, and wan21 latents have C=16
         return int(math.ceil(n_elems * self.bits / 8)) + self.meta_bytes
+
+    def wire_elems(self, n_elems: int, last_dim: Union[int, None] = None
+                   ) -> int:
+        if self.bits == 4 and last_dim:
+            # packed along the last axis: exact even for odd extents
+            return n_elems // last_dim * ((last_dim + 1) // 2)
+        return super().wire_elems(n_elems, last_dim)
 
 
 def int4_wire_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:

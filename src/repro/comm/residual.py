@@ -63,6 +63,11 @@ class ResidualCodec(Codec):
     def decode(self, wire, meta, shape):  # pragma: no cover - guard
         raise TypeError("residual codecs are stateful: use residual_decode")
 
+    def wire_elems(self, n_elems, last_dim=None):
+        # delegate: the base may pack (int4), and the wire layout of a
+        # residual message is exactly its base codec's
+        return self.base.wire_elems(n_elems, last_dim)
+
 
 # ------------------------------------------------------------- primitives
 def residual_encode(

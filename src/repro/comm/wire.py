@@ -28,7 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.collectives import HaloSpec, halo_spec
+from repro.distributed.collectives import (
+    HaloSpec,
+    halo_spec,
+    sharded_all_gather,
+    sharded_ppermute,
+)
 
 from .codecs import Codec, get_codec
 from .residual import ResidualCodec, residual_decode, residual_encode
@@ -79,18 +84,45 @@ def _pin(x):
     return jax.lax.optimization_barrier(x)
 
 
-def _ppermute_msg(wire, meta, axis_name, perm):
-    """Ship (payload, scales) through one ppermute round."""
+def _ppermute_msg(wire, meta, axis_name, perm, shard_axis=None,
+                  shard_size=1):
+    """Ship (payload, scales) through one ppermute round.
+
+    With ``shard_axis`` (the hybrid mesh's tp axis, size ``shard_size``)
+    the payload crosses the group boundary **sharded**: each tp rank
+    ppermutes only its 1/T chunk of the coded wire, then the full wire
+    is reassembled with one intra-group all-gather.  The meta scales are
+    tiny and every tp rank of the source group encodes the identical
+    slab, so each rank ships the full meta and no tp gather of it is
+    needed.  Both collectives are dtype-pinned so the compact wire (and
+    the T-fold inter-group saving) survives XLA's simplifier.
+    """
     wire, meta = _pin((wire, meta))
-    got_wire = jax.lax.ppermute(wire, axis_name, perm)
+    if shard_axis is not None and shard_size > 1:
+        got_wire = sharded_ppermute(wire, axis_name, perm, shard_axis,
+                                    shard_size, pin=_pin)
+    else:
+        got_wire = jax.lax.ppermute(wire, axis_name, perm)
     got_meta = tuple(jax.lax.ppermute(m, axis_name, perm) for m in meta)
     return _pin((got_wire, got_meta))
 
 
-def _gather_msg(wire, meta, axis_name):
-    """All-gather (payload, scales) with the wire dtype pinned."""
+def _gather_msg(wire, meta, axis_name, shard_axis=None, shard_size=1):
+    """All-gather (payload, scales) with the wire dtype pinned.
+
+    Sharded (``shard_axis``): each tp rank contributes only its 1/T
+    chunk of the coded payload to the **inter-group** ring all-gather,
+    then one intra-group all-gather collects the T chunk columns and
+    each device reassembles the full (K, ...) wire table locally.  Meta
+    leaves stay on the inter-group gather (K tiny scales are needed in
+    full on every device either way).
+    """
     wire, meta = _pin((wire, meta))
-    wires = jax.lax.all_gather(wire, axis_name, axis=0, tiled=False)
+    if shard_axis is not None and shard_size > 1:
+        wires = sharded_all_gather(wire, axis_name, shard_axis, shard_size,
+                                   pin=_pin)
+    else:
+        wires = jax.lax.all_gather(wire, axis_name, axis=0, tiled=False)
     metas = tuple(
         jax.lax.all_gather(m, axis_name, axis=0, tiled=False) for m in meta
     )
@@ -106,6 +138,8 @@ def compressed_halo_exchange(
     codec: Codec,
     state: WireState,
     eager_sends: bool = False,
+    shard_axis: Optional[str] = None,
+    shard_size: int = 1,
 ) -> Tuple[jnp.ndarray, WireState]:
     """Codec twin of ``collectives.halo_exchange`` (same contract: padded
     window-first ``wpred`` in, ``(core_pad + max_transfer, ...)`` f32
@@ -122,6 +156,13 @@ def compressed_halo_exchange(
     mutually independent and can overlap the local work (and each other)
     under XLA's async collective scheduling.  Values are identical either
     way — only the op ordering changes.
+
+    ``shard_axis`` / ``shard_size`` shard every coded payload over the
+    hybrid mesh's tp axis (see ``_ppermute_msg``).  Encoding always
+    happens on the FULL slab — identical on every tp rank, so per-slab
+    scales, quantized values, and residual/EF state are bit-equal to the
+    unsharded engine and the state stays rank-local on the lp axis —
+    only the wire transport is split.
     """
     stateful = isinstance(codec, ResidualCodec)
     base = codec.base if stateful else codec
@@ -150,7 +191,10 @@ def compressed_halo_exchange(
             new_state["pp_err"][ti] = n_err
         else:
             wire, meta = codec.encode(slab)
-        got_wire, got_meta = _ppermute_msg(wire, meta, axis_name, t.perm)
+        got_wire, got_meta = _ppermute_msg(
+            wire, meta, axis_name, t.perm,
+            shard_axis=shard_axis, shard_size=shard_size,
+        )
         return got_wire, got_meta, slab.shape
 
     def deposit(acc, ti: int, t, msg) -> jnp.ndarray:
@@ -191,6 +235,8 @@ def compressed_core_gather(
     codec: Codec,
     state: WireState,
     num_partitions: int,
+    shard_axis: Optional[str] = None,
+    shard_size: int = 1,
 ) -> Tuple[jnp.ndarray, WireState]:
     """All-gather of the normalized core slices through the codec.
 
@@ -198,18 +244,25 @@ def compressed_core_gather(
     ...) stack plus updated state.  Residual codecs delta-code against
     ``ag_prev`` (the previous gathered table — identical on all ranks,
     so each rank's own row doubles as its sender reference) with an EF
-    carry on the rank's own core.
+    carry on the rank's own core.  ``shard_axis`` / ``shard_size``
+    shard the coded payload over the tp axis (see ``_gather_msg``);
+    encode/decode and all state arithmetic stay on full values, so the
+    result is bit-equal to the unsharded gather.
     """
     stateful = isinstance(codec, ResidualCodec)
     base = codec.base if stateful else codec
     K = num_partitions
     if not stateful:
         wire, meta = codec.encode(core)
-        wires, metas = _gather_msg(wire, meta, axis_name)
+        wires, metas = _gather_msg(wire, meta, axis_name,
+                                   shard_axis=shard_axis,
+                                   shard_size=shard_size)
         return codec.decode(wires, metas, (K,) + core.shape), {}
     corrected = core - state["ag_prev"][rank] + state["ag_err"]
     wire, meta = base.encode(corrected)
-    wires, metas = _gather_msg(wire, meta, axis_name)
+    wires, metas = _gather_msg(wire, meta, axis_name,
+                               shard_axis=shard_axis,
+                               shard_size=shard_size)
     d_all = base.decode(wires, metas, (K,) + core.shape)
     gathered = state["ag_prev"] + d_all
     new_err = corrected - d_all[rank]

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -359,6 +359,174 @@ def lp_halo_scheduled_segments(
     return tuple(segments)
 
 
+def lp_halo_sharded_step_collectives(
+    cfg: VDMCommConfig, M: int, T: int, r: float, dim: int, codec="fp32"
+) -> dict:
+    """Per-device collective payloads of ONE wire-sharded hybrid step.
+
+    The hierarchy-aware wire (``core/hybrid.lp_forward_halo_hybrid(...,
+    wire_shard=True)``): every coded payload is chunked T ways over the
+    tp axis, each tp rank ships only its chunk across the group
+    boundary, and one intra-group all-gather reassembles the message.
+    Same HLO output-shape accounting as
+    :func:`lp_halo_codec_step_collectives`, split into the two link
+    tiers:
+
+    * ``inter`` (lp-axis collectives, replica groups of size M): one
+      collective-permute of the (ceil-padded) 1/T chunk + the full meta
+      per transfer round, and the core all-gather of M chunks + M metas.
+    * ``intra`` (tp-axis all-gathers, replica groups of size T): the
+      (T, chunk) reassembly per transfer round and the (T, M, chunk)
+      core reassembly.  The Phi_m all-reduce (TP psums) is charged to
+      the intra-group model (``comm_tp``), never here.
+
+    Per device, ``inter`` is ~1/T of the unsharded hybrid step (exact up
+    to chunk ceil-padding and the T-replicated meta): the T-fold
+    inter-group saving ``BENCH_wire_shard.json`` gates.
+    """
+    from repro.comm.codecs import get_codec
+    from repro.distributed.collectives import halo_spec, wire_shard_len
+
+    if T < 2:
+        raise ValueError(f"wire sharding needs a tp axis of size >= 2, T={T}")
+    codec = get_codec(codec)
+    spec = halo_spec(_halo_plan(cfg, M, r, dim))
+    row_el = cfg.latent_elems // cfg.latent_dims[dim]
+    C = cfg.latent_channels
+    db = codec.wire_dtype_bytes
+    pp_inter = 0
+    tp_intra = 0
+    for t in spec.transfers:
+        s = wire_shard_len(codec.wire_elems(t.length * row_el, C), T)
+        pp_inter += s * db + codec.meta_bytes
+        tp_intra += T * s * db
+    s_core = wire_shard_len(codec.wire_elems(spec.core_pad * row_el, C), T)
+    ag_inter = M * s_core * db + M * codec.meta_bytes
+    tp_intra += T * M * s_core * db
+    return {
+        "inter": {"collective-permute": pp_inter, "all-gather": ag_inter},
+        "intra": {"all-gather": tp_intra},
+    }
+
+
+def _halo_sharded_group_bytes_per_dim(
+    cfg: VDMCommConfig, M: int, T: int, r: float, codec
+) -> dict:
+    """Group wire bytes of ONE wire-sharded hybrid step, per rotation
+    dim, split by link tier.
+
+    Ring accounting mirrors :func:`_halo_codec_group_bytes_per_dim`:
+    every scheduled ppermute pair moves one chunk (+ full meta) on each
+    of the T lp rings, each device's core chunk (+ meta) crosses M-1
+    links of its lp ring, and each intra-group reassembly moves every
+    contribution across T-1 links of its tp ring (M tp rings per mesh).
+    """
+    from repro.comm.codecs import get_codec
+    from repro.distributed.collectives import halo_spec, wire_shard_len
+
+    codec = get_codec(codec)
+    C = cfg.latent_channels
+    db = codec.wire_dtype_bytes
+    out = {}
+    for dim in usable_dims(cfg.latent_dims, cfg.patch_sizes, M):
+        spec = halo_spec(_halo_plan(cfg, M, r, dim))
+        row_el = cfg.latent_elems // cfg.latent_dims[dim]
+        inter = intra = 0
+        for t in spec.transfers:
+            s = wire_shard_len(codec.wire_elems(t.length * row_el, C), T)
+            inter += T * len(t.perm) * (s * db + codec.meta_bytes)
+            intra += M * T * (T - 1) * s * db
+        s_core = wire_shard_len(codec.wire_elems(spec.core_pad * row_el, C), T)
+        inter += T * M * (M - 1) * (s_core * db + codec.meta_bytes)
+        intra += M * T * (T - 1) * M * s_core * db
+        out[dim] = (inter, intra)
+    return out
+
+
+def comm_lp_halo_sharded(
+    cfg: VDMCommConfig,
+    M: int,
+    T: int,
+    r: float = 0.5,
+    codec="fp32",
+    step_codecs: Optional[Sequence[str]] = None,
+) -> dict:
+    """Wire-sharded hybrid LP×TP halo engine: group wire bytes over the
+    full denoise, split into ``{"inter", "intra", "total"}``.
+
+    The T-fold contrast with :func:`comm_lp_halo_hybrid` (whose group
+    bytes are ``T x`` the 1D model because every tp rank ships the full
+    slab on its own lp ring): here the T rings carry disjoint 1/T
+    chunks, so ``inter`` collapses back to ~the 1D model (+ T-replicated
+    meta + ceil padding) and the delta moves to ``intra`` — the
+    trade the two-tier autotuner prices with ``inter_gbps`` /
+    ``intra_gbps``.  ``step_codecs`` (one codec name per forward pass,
+    as in :func:`comm_lp_halo_scheduled`) overrides the fixed ``codec``
+    and ``cfg.num_steps``.
+    """
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, M)
+    if step_codecs is None:
+        step_codecs = [codec] * cfg.num_steps
+    per_dim_by_codec: dict = {}
+
+    def per_dim(name):
+        key = name if isinstance(name, str) else name.name
+        if key not in per_dim_by_codec:
+            per_dim_by_codec[key] = _halo_sharded_group_bytes_per_dim(
+                cfg, M, T, r, name)
+        return per_dim_by_codec[key]
+
+    inter = intra = 0
+    for i, name in enumerate(step_codecs, start=1):
+        a, b = per_dim(name)[rotation_dim(i, dims)]
+        inter += a
+        intra += b
+    return {"inter": inter, "intra": intra, "total": inter + intra}
+
+
+def lp_halo_wire_profile(
+    cfg: VDMCommConfig,
+    M: int,
+    T: int,
+    r: float,
+    step_codecs: Sequence[str],
+    wire_shard: bool = False,
+) -> dict:
+    """Per-device wire bytes of a whole denoise, split by link tier.
+
+    The quantity the two-tier autotuner turns into wire *time*: on a
+    torus the T lp rings (and the M tp rings) are disjoint physical
+    links, so per-device bytes — not group aggregates — are the
+    time-like measure.  Unsharded: the per-device step payloads are the
+    1D codec'd halo model on every tier-1 (inter-group) link and the
+    intra tier carries nothing of LP's.  Sharded: the per-device split
+    of :func:`lp_halo_sharded_step_collectives`.
+    """
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, M)
+    cache: dict = {}
+
+    def step(name, dim):
+        key = (name if isinstance(name, str) else name.name, dim)
+        if key not in cache:
+            if wire_shard:
+                d = lp_halo_sharded_step_collectives(cfg, M, T, r, dim,
+                                                     codec=name)
+                cache[key] = (sum(d["inter"].values()),
+                              sum(d["intra"].values()))
+            else:
+                d = lp_halo_codec_step_collectives(cfg, M, r, dim,
+                                                   codec=name)
+                cache[key] = (sum(d.values()), 0)
+        return cache[key]
+
+    inter = intra = 0
+    for i, name in enumerate(step_codecs, start=1):
+        a, b = step(name, rotation_dim(i, dims))
+        inter += a
+        intra += b
+    return {"inter": inter, "intra": intra}
+
+
 def lp_halo_hybrid_step_collectives(
     cfg: VDMCommConfig, M: int, T: int, r: float, dim: int, codec="fp32"
 ) -> dict:
@@ -441,11 +609,24 @@ def comm_hybrid(
     M: int,
     r: float,
     intra: str = "nmp",
+    wire_shard: bool = False,
 ) -> int:
     """§11: inter-group LP across M groups + intra-group NMP/TP (Eq. 50).
 
     ``S_H'`` is the activation of a 1/M sub-latent.  Exact inter-group term
     (rotating geometry with M partitions) + intra-group term per group.
+
+    ``wire_shard`` models the hierarchy-aware wire on the paper's hub
+    topology: every inter-group sub-latent transfer is striped over the
+    group's ``k_m`` members (each member's NIC carries 1/k_m, so the
+    per-link inter bytes drop k_m-fold even though the group total
+    crossing the boundary is unchanged — the hub ships each sub-latent
+    once either way), and the intra-group total honestly charges the
+    reassembly all-gather: each striped transfer's chunks cross k_m - 1
+    intra links per member, adding ``(k_m - 1)/k_m x`` the inter term
+    alongside the NMP/TP collectives.  This is the accounting
+    ``benchmarks/table1_comm.py`` reports so wire-shard rows include
+    the gather term instead of pretending the reassembly is free.
     """
     if K % M != 0:
         raise ValueError(f"K={K} must divide into M={M} groups")
@@ -479,6 +660,10 @@ def comm_hybrid(
         )
     else:
         raise ValueError(f"unknown intra-group strategy {intra!r}")
+    if wire_shard and k_m > 1:
+        # the reassembly gather: every striped inter transfer's chunks
+        # cross k_m - 1 intra links per member before Phi_m can run
+        intra_total += inter * (k_m - 1) // k_m
     return inter + intra_total
 
 

@@ -157,6 +157,7 @@ def lp_forward_halo_hybrid(
     codec=None,
     codec_state=None,
     eager_sends: bool = True,
+    wire_shard: bool = False,
 ):
     """Hybrid LP×TP halo forward on a 2D ``(lp, tp)`` mesh.
 
@@ -186,18 +187,30 @@ def lp_forward_halo_hybrid(
     consistent because the codec arithmetic is deterministic and its
     inputs are tp-replicated by the Phi_m contract.
 
+    ``wire_shard`` turns on the hierarchy-aware wire: every LP payload
+    (halo slabs and core-gather contributions, coded or not) is split
+    over the tp axis so each tp rank ships only its 1/T chunk across
+    the group boundary, followed by a cheap intra-group all-gather to
+    reassemble the message before it is consumed.  Inter-group bytes
+    drop T-fold (``comm_model.comm_lp_halo_sharded``); values — and
+    residual codec state, which is computed from full slabs identically
+    on every tp rank — are bit-equal to the unsharded engine.  A no-op
+    on meshes without a tp axis (T == 1).
+
     Implementation: ``spmd.lp_forward_halo`` already names only
     ``lp_axis`` in its collectives, so the hybrid engine IS that
     function behind the validated 2D-mesh contract
     (:func:`hybrid_halo_spec`) plus the eager-send default — one body to
     maintain, verified per-engine by the conformance matrix.
     """
-    hybrid_halo_spec(plan, mesh, lp_axis, tp_axis)  # validate the contract
+    mspec = hybrid_halo_spec(plan, mesh, lp_axis, tp_axis)  # validate
     from .spmd import lp_forward_halo
 
+    shard_axis = mspec.tp_axis if (wire_shard and mspec.tp_size > 1) else None
     return lp_forward_halo(
         denoise_fn, z, plan, axis, mesh, lp_axis,
         codec=codec, codec_state=codec_state, eager_sends=eager_sends,
+        shard_axis=shard_axis,
     )
 
 

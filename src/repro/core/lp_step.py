@@ -154,6 +154,7 @@ class LPStepCompiler:
         mesh_shape: Optional[Tuple[int, ...]] = None,
         schedule=None,
         forward_factory: Optional[Callable] = None,
+        wire_shard: bool = False,
     ):
         self.denoise_fn = denoise_fn
         self.update_fn = update_fn
@@ -168,6 +169,11 @@ class LPStepCompiler:
         self.maxsize = maxsize
         self.mesh_shape = None if mesh_shape is None else tuple(mesh_shape)
         self.forward_factory = forward_factory
+        # records whether the bound forward hooks run the tp-sharded
+        # wire (core/hybrid.lp_forward_halo_hybrid(wire_shard=True));
+        # part of the cache key so a replan that swaps the hook for a
+        # differently-wired one can never be served a stale entry
+        self.wire_shard = bool(wire_shard)
         if schedule is not None:
             from repro.policy.schedule import parse_schedule
 
@@ -218,6 +224,7 @@ class LPStepCompiler:
         mesh_shape: Optional[Tuple[int, ...]] = None,
         forward: Optional[Callable] = None,
         forward_factory: Optional[Callable] = None,
+        wire_shard: Optional[bool] = None,
     ) -> bool:
         """Mid-request re-plan: swap the partition geometry / mesh shape.
 
@@ -230,6 +237,20 @@ class LPStepCompiler:
         — old-geometry state shapes would be garbage on the new plan.
         Returns True when anything actually changed.
         """
+        if wire_shard is not None and bool(wire_shard) != self.wire_shard:
+            # a mesh-bound hook closes over its wire layout: flipping
+            # the flag without re-binding would key (and report) the new
+            # wire while executing the old one — same stale-hook hazard
+            # replan_lp_compiler raises for on a K change.  Checked
+            # before any mutation so a raise leaves the plan untouched.
+            if (self.forward is not None and forward is None) or \
+                    (self.forward_factory is not None and
+                     forward_factory is None):
+                raise ValueError(
+                    "changing wire_shard on a compiler with a bound "
+                    "forward hook needs a re-bound forward= / "
+                    "forward_factory= in the same replan call"
+                )
         changed = False
         if num_partitions is not None and num_partitions != self.num_partitions:
             self.num_partitions = num_partitions
@@ -247,6 +268,9 @@ class LPStepCompiler:
         if forward_factory is not None and \
                 forward_factory is not self.forward_factory:
             self.forward_factory = forward_factory
+            changed = True
+        if wire_shard is not None and bool(wire_shard) != self.wire_shard:
+            self.wire_shard = bool(wire_shard)
             changed = True
         if changed:
             self.plan_epoch += 1
@@ -338,7 +362,7 @@ class LPStepCompiler:
             # new mesh shape, re-bound forward hook) can never be served
             # an entry compiled for the old plan
             self.num_partitions, self.overlap_ratio, self.mesh_shape,
-            self.plan_epoch,
+            self.wire_shard, self.plan_epoch,
         )
         cached = self._cache.get(key)
         if cached is not None:

@@ -23,7 +23,7 @@ Two formulations compute identical math:
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -330,6 +330,7 @@ def lp_forward_halo(
     codec=None,
     codec_state=None,
     eager_sends: bool = False,
+    shard_axis: Optional[str] = None,
 ):
     """Halo-exchange LP forward: the fast-path collective schedule.
 
@@ -363,14 +364,46 @@ def lp_forward_halo(
     issues every ppermute round before any accumulation (see
     ``distributed.collectives.halo_exchange``) so async collective
     scheduling can overlap the rounds with the tail of the denoiser.
+
+    ``shard_axis`` (hybrid meshes: the tp axis) shards every wire
+    payload — halo slabs and core-gather contributions — over that
+    axis: each tp rank ships only its 1/T chunk across the (slow)
+    inter-group lp links and the full message is reassembled with a
+    cheap intra-group all-gather.  Requires the denoiser output (and
+    hence every slab) to be replicated along ``shard_axis``, which the
+    hybrid Phi_m contract guarantees; the result is bit-identical to
+    the unsharded engine (``comm_model.comm_lp_halo_sharded`` for the
+    two-tier byte model).
     """
-    from repro.distributed.collectives import halo_exchange, halo_spec
+    from repro.distributed.collectives import (
+        halo_exchange,
+        halo_spec,
+        sharded_all_gather,
+    )
 
     K = plan.num_partitions
     if mesh.shape[lp_axis] != K:
         raise ValueError(
             f"lp axis {lp_axis!r} has size {mesh.shape[lp_axis]}, plan has K={K}"
         )
+    shard_size = 1
+    if shard_axis is not None:
+        if shard_axis not in mesh.axis_names:
+            raise ValueError(
+                f"shard axis {shard_axis!r} not on mesh: {mesh.axis_names}"
+            )
+        if shard_axis == lp_axis:
+            # sharding over the transfer axis itself would reassemble
+            # chunks of DIFFERENT senders' slabs — shapes all line up,
+            # values silently wrong
+            raise ValueError(
+                f"shard axis must differ from the lp axis ({lp_axis!r}): "
+                "wire chunks are reassembled across the shard axis after "
+                "the lp transfer"
+            )
+        shard_size = mesh.shape[shard_axis]
+        if shard_size == 1:
+            shard_axis = None  # degenerate: nothing to shard over
     spec = halo_spec(plan)
     core_len = spec.core_len
     starts = jnp.asarray(plan.starts)
@@ -410,18 +443,27 @@ def lp_forward_halo(
             )
         return jnp.moveaxis(out, 0, axis).astype(dtype)
 
+    def _core_gather_raw(core: jnp.ndarray) -> jnp.ndarray:
+        """Uncoded core all-gather, wire-sharded when shard_axis is set:
+        each tp rank gathers only its 1/T chunk over the lp ring, then
+        one intra-group all-gather reassembles the (K, core_pad) table."""
+        if shard_axis is None:
+            return jax.lax.all_gather(core, lp_axis, axis=0, tiled=False)
+        return sharded_all_gather(core, lp_axis, shard_axis, shard_size)
+
     if codec is None:
         def per_device(z_rep: jnp.ndarray) -> jnp.ndarray:
             k = jax.lax.axis_index(lp_axis)
             wpred = _weighted_window(z_rep, k)
             acc = halo_exchange(wpred, spec, k, lp_axis,
-                                eager_sends=eager_sends)
+                                eager_sends=eager_sends,
+                                shard_axis=shard_axis,
+                                shard_size=shard_size)
             nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
             core = (acc[: spec.core_pad] / norm_core[k].reshape(nshape)).astype(
                 z_rep.dtype
             )
-            gathered = jax.lax.all_gather(core, lp_axis, axis=0, tiled=False)
-            return _reassemble(gathered, z_rep.dtype)
+            return _reassemble(_core_gather_raw(core), z_rep.dtype)
 
         fn = compat.shard_map(
             per_device,
@@ -443,10 +485,14 @@ def lp_forward_halo(
             wpred = _weighted_window(z_rep, k)
             acc, _ = compressed_halo_exchange(wpred, spec, k, lp_axis,
                                               codec, {},
-                                              eager_sends=eager_sends)
+                                              eager_sends=eager_sends,
+                                              shard_axis=shard_axis,
+                                              shard_size=shard_size)
             nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
             core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
-            gathered, _ = compressed_core_gather(core, k, lp_axis, codec, {}, K)
+            gathered, _ = compressed_core_gather(core, k, lp_axis, codec, {},
+                                                 K, shard_axis=shard_axis,
+                                                 shard_size=shard_size)
             return _reassemble(gathered, z_rep.dtype)
 
         fn = compat.shard_map(
@@ -463,10 +509,14 @@ def lp_forward_halo(
         st = jax.tree.map(lambda s: s[0], state)  # drop the lp-axis dim
         wpred = _weighted_window(z_rep, k)
         acc, st = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, st,
-                                           eager_sends=eager_sends)
+                                           eager_sends=eager_sends,
+                                           shard_axis=shard_axis,
+                                           shard_size=shard_size)
         nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
         core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
-        gathered, st = compressed_core_gather(core, k, lp_axis, codec, st, K)
+        gathered, st = compressed_core_gather(core, k, lp_axis, codec, st, K,
+                                              shard_axis=shard_axis,
+                                              shard_size=shard_size)
         out = _reassemble(gathered, z_rep.dtype)
         return out, jax.tree.map(lambda s: s[None], st)
 

@@ -20,6 +20,16 @@ All halo geometry is static Python derived from the uniform partition
 plan, including the edge-clamped windows that can reach cores at offset
 |d| >= 2 when the overlap ratio is large — the transfer schedule is exact,
 not a nearest-neighbor approximation.
+
+``wire_shard_slice`` / ``wire_unshard``: the hierarchy-aware wire split.
+On a 2D ``(lp, tp)`` mesh every tp rank holds a replica of each slab, so
+shipping the full slab on all T parallel lp rings moves T identical
+copies across the (slow) inter-group links.  Sharding the wire over the
+tp axis — each tp rank ppermutes only its 1/T chunk, receivers reassemble
+with one intra-group all-gather — cuts inter-group bytes T-fold at the
+price of a cheap intra-group collective.  The split is a pure transport
+rearrangement (flatten, zero-pad to T equal chunks, concatenate back),
+so sharded and unsharded engines are bit-identical.
 """
 from __future__ import annotations
 
@@ -76,6 +86,100 @@ def seq_parallel_decode_attention(
     acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
     out = acc_glob / jnp.maximum(l_glob, 1e-37)[..., None]
     return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ------------------------------------------------------- wire sharding
+def wire_shard_len(n_elems: int, shard_size: int) -> int:
+    """Per-rank chunk length of an ``n_elems`` flat wire split
+    ``shard_size`` ways (last chunk zero-padded)."""
+    return -(-n_elems // shard_size)
+
+
+def wire_shard_slice(x: jnp.ndarray, shard_rank: jnp.ndarray,
+                     shard_size: int) -> jnp.ndarray:
+    """This rank's 1/T chunk of a flat view of ``x``.
+
+    ``shard_rank`` is the traced tp-axis index; the chunk length is the
+    static ``wire_shard_len`` so every rank ships a uniform shape (the
+    tail chunk carries zero padding).  Flattening keeps the split exact
+    for any slab shape and any wire dtype, including int4's packed last
+    axis.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    s = wire_shard_len(n, shard_size)
+    if s * shard_size != n:
+        flat = jnp.pad(flat, (0, s * shard_size - n))
+    return jax.lax.dynamic_slice_in_dim(flat, shard_rank * s, s, 0)
+
+
+def wire_unshard(chunks: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Reassemble a ``(T, s)`` stack of gathered chunks into the logical
+    wire of ``shape`` (drops the tail padding).  Exact inverse of T
+    ``wire_shard_slice`` calls."""
+    n = 1
+    for d in shape:
+        n *= d
+    return chunks.reshape(-1)[:n].reshape(shape)
+
+
+def wire_unshard_rows(chunks: jnp.ndarray,
+                      shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Reassemble a ``(T, K, s)`` stack of gathered chunk *columns* (one
+    tp gather of a K-row lp gather) into the ``(K,) + shape`` wire
+    table, dropping each row's tail padding — the batched
+    :func:`wire_unshard`."""
+    K = chunks.shape[1]
+    n = 1
+    for d in shape:
+        n *= d
+    return jnp.swapaxes(chunks, 0, 1).reshape(K, -1)[:, :n].reshape(
+        (K,) + tuple(shape)
+    )
+
+
+def _id(x):
+    return x
+
+
+def sharded_ppermute(
+    x: jnp.ndarray,
+    axis_name: str,
+    perm,
+    shard_axis: str,
+    shard_size: int,
+    pin=_id,
+) -> jnp.ndarray:
+    """One ppermute with the payload sharded over ``shard_axis``: each
+    shard rank ships its 1/T chunk across ``axis_name``, then an
+    intra-group all-gather reassembles the full message at the
+    receiver.  ``pin`` (the codec layer's optimization barrier) wraps
+    every tensor entering/leaving a collective so compact wire dtypes
+    survive XLA's simplifier.  This is THE sharded point-to-point
+    transport — every engine routes through here so the byte model and
+    the compiled HLO can never diverge per call site."""
+    chunk = wire_shard_slice(x, jax.lax.axis_index(shard_axis), shard_size)
+    got = jax.lax.ppermute(pin(chunk), axis_name, perm)
+    chunks = jax.lax.all_gather(pin(got), shard_axis, axis=0, tiled=False)
+    return wire_unshard(pin(chunks), x.shape)
+
+
+def sharded_all_gather(
+    x: jnp.ndarray,
+    axis_name: str,
+    shard_axis: str,
+    shard_size: int,
+    pin=_id,
+) -> jnp.ndarray:
+    """Ring all-gather over ``axis_name`` with each contribution sharded
+    over ``shard_axis``: the slow-tier gather moves ``(K, 1/T chunk)``,
+    one intra-group all-gather collects the chunk columns, and every
+    device reassembles the full ``(K,) + x.shape`` table locally.  The
+    sharded twin of ``jax.lax.all_gather(x, axis_name)``."""
+    chunk = wire_shard_slice(x, jax.lax.axis_index(shard_axis), shard_size)
+    lp = jax.lax.all_gather(pin(chunk), axis_name, axis=0, tiled=False)
+    tp = jax.lax.all_gather(pin(lp), shard_axis, axis=0, tiled=False)
+    return wire_unshard_rows(pin(tp), x.shape)
 
 
 # ------------------------------------------------------------ halo exchange
@@ -184,6 +288,8 @@ def halo_exchange(
     rank: jnp.ndarray,
     axis_name: str,
     eager_sends: bool = False,
+    shard_axis: Optional[str] = None,
+    shard_size: int = 1,
 ) -> jnp.ndarray:
     """Cross-rank reduction of overlapping window predictions, halo-only.
 
@@ -204,11 +310,20 @@ def halo_exchange(
     Phi_m forward that produces late rows of ``wpred``) is still in
     flight.  The default ordering interleaves send/accumulate per round,
     which serializes the rounds through the accumulator chain.
+
+    ``shard_axis`` / ``shard_size`` (the hybrid mesh's tp axis and size)
+    shard every slab over the tp axis: each tp rank ppermutes only its
+    1/T chunk across the group boundary and the receiver reassembles
+    the slab with one intra-group all-gather before depositing.  Slab
+    values are tp-replicated on the hybrid mesh, so the result is
+    bit-identical to the unsharded exchange — only the wire layout
+    changes (inter-group bytes drop T-fold).
     """
     K = spec.num_partitions
     acc_len = spec.core_pad + spec.max_transfer
     trail = (1,) * (wpred.ndim - 1)
     acc = jnp.zeros((acc_len,) + wpred.shape[1:], wpred.dtype)
+    sharded = shard_axis is not None and shard_size > 1
 
     def send(t: HaloTransfer) -> jnp.ndarray:
         slab = jax.lax.dynamic_slice_in_dim(
@@ -216,6 +331,9 @@ def halo_exchange(
         )
         valid = jnp.arange(t.length) < jnp.asarray(t.src_len)[rank]
         slab = slab * valid.reshape((t.length,) + trail).astype(slab.dtype)
+        if sharded:
+            return sharded_ppermute(slab, axis_name, t.perm, shard_axis,
+                                    shard_size)
         return jax.lax.ppermute(slab, axis_name, t.perm)
 
     def deposit(acc, t: HaloTransfer, got: jnp.ndarray) -> jnp.ndarray:

@@ -125,7 +125,9 @@ def _mem_summary(compiled) -> Dict[str, float]:
 
 
 def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
-                 lp_impl: str = "gspmd", wire_codec: Optional[str] = None):
+                 lp_impl: str = "gspmd", wire_codec: Optional[str] = None,
+                 wire_shard: Optional[bool] = None,
+                 eager_sends: Optional[bool] = None):
     """Build the jitted LP denoising step (one forward pass, dim=height)."""
     from repro.core import plan_uniform
     from repro.core.hybrid import lp_forward_halo_hybrid
@@ -154,6 +156,22 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
             f"--wire-codec {wire_codec} needs the halo family (or gspmd's "
             f"value-faithful blend); got --lp-impl {lp_impl} (the measured "
             "HLO would be uncoded)"
+        )
+    # hierarchy-aware wire defaults: eager sends + tp-sharded wire on
+    # for hybrid meshes (the tp axis is what gets sharded over)
+    if eager_sends is None:
+        eager_sends = tp > 1
+    if wire_shard is None:
+        wire_shard = tp > 1 and lp_impl in ("halo", "halo_hybrid")
+    if wire_shard and tp <= 1:
+        raise ValueError(
+            "--wire-shard shards the halo wire over the tp axis; this "
+            "mesh has no tp ('model') axis of size >= 2"
+        )
+    if wire_shard and lp_impl not in ("halo", "halo_hybrid"):
+        raise ValueError(
+            f"--wire-shard needs the halo family (the sharded wire lives "
+            f"there), got --lp-impl {lp_impl}"
         )
     h_lat = shape.height // 8
     plan = plan_uniform(h_lat, cfg.patch_sizes[1], K, parallel.overlap_ratio, dim=1)
@@ -211,12 +229,15 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                 def fwd(fn, zz, pl, ax, st=None, **kw):
                     return lp_forward_halo_hybrid(
                         fn, zz, pl, ax, mesh, "data", "model",
-                        codec_state=st, **kw)
+                        codec_state=st, eager_sends=eager_sends,
+                        wire_shard=wire_shard, **kw)
             else:
                 def fwd(fn, zz, pl, ax, st=None, **kw):
                     return lp_forward_halo(
                         fn, zz, pl, ax, mesh, "data",
-                        codec_state=st, **kw)
+                        codec_state=st, eager_sends=eager_sends,
+                        shard_axis="model" if (wire_shard and tp > 1)
+                        else None, **kw)
             if wire_codec in (None, "fp32"):
                 pred = fwd(den, z, plan, 2)
             else:
@@ -250,6 +271,8 @@ def lower_cell(
     lp_impl: str = "gspmd",
     mesh=None,
     wire_codec: Optional[str] = None,
+    wire_shard: Optional[bool] = None,
+    eager_sends: Optional[bool] = None,
 ) -> Dict[str, Any]:
     """Lower + compile one cell; return the §Dry-run record."""
     cfg = get_config(arch)
@@ -405,7 +428,9 @@ def lower_cell(
             lowered = fn.lower(params_sds, batch_sds, cache_sds)
         elif shape.kind == "vdm_generate":
             step = _vdm_lp_step(cfg, shape, mesh, parallel, lp_impl,
-                                wire_codec=wire_codec)
+                                wire_codec=wire_codec,
+                                wire_shard=wire_shard,
+                                eager_sends=eager_sends)
             batch_sds = jax.tree.map(
                 lambda l: jax.ShapeDtypeStruct(
                     l.shape, l.dtype, sharding=NamedSharding(mesh, P())
@@ -438,11 +463,17 @@ def lower_cell(
     rec["collective_counts"] = {
         k: float(v) for k, v in anal.collective_counts.items()
     }
+    # replica-group-size breakdown ("all-gather[4]" vs "all-gather[2]"):
+    # the inter- vs intra-group split on hybrid meshes
+    rec["collectives_by_group"] = {
+        k: float(v) for k, v in anal.collective_group_bytes.items()
+    }
     return rec
 
 
 def _resolve_dryrun_schedule(shape_name: str, mesh,
-                             spec: str, psnr_floor: Optional[float]):
+                             spec: str, psnr_floor: Optional[float],
+                             wire_shard: Optional[bool] = None):
     """Resolve ``--codec-schedule`` for one vdm cell against its real
     geometry, sampler trajectory, and the mesh's lp-axis size."""
     from repro.core.comm_model import wan21_comm_config
@@ -457,7 +488,7 @@ def _resolve_dryrun_schedule(shape_name: str, mesh,
     return resolve_cli_schedule(
         spec, ccfg, K, ParallelConfig().overlap_ratio,
         FlowMatchEuler(shape.num_steps), shape.num_steps,
-        psnr_floor_db=psnr_floor, tp=tp,
+        psnr_floor_db=psnr_floor, tp=tp, wire_shard=wire_shard,
     )
 
 
@@ -492,6 +523,18 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default=None,
                     help="MxT hybrid mesh (LP groups x intra-group TP), "
                          "e.g. 4x2 — replaces the production mesh")
+    ap.add_argument("--wire-shard", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="shard halo wire payloads over the tp axis "
+                         "(hybrid meshes; default on there — the "
+                         "two-tier autotuner decides for "
+                         "--codec-schedule cells).  The record's "
+                         "collectives_by_group shows the inter/intra "
+                         "split")
+    ap.add_argument("--eager-sends", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="issue halo ppermutes before any accumulation "
+                         "(default: on for hybrid meshes)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
@@ -530,24 +573,31 @@ def main(argv=None) -> int:
                 # The PLAN's engine is what gets lowered — the argparse
                 # --lp-impl default (gspmd) has no stateful-codec layer
                 # and must not leak into schedule cells.
-                cells_to_lower = [(args.wire_codec, args.lp_impl, None)]
+                cells_to_lower = [
+                    (args.wire_codec, args.lp_impl, args.wire_shard, None)
+                ]
                 if args.codec_schedule and \
                         get_shape(shape).kind == "vdm_generate":
                     plan = _resolve_dryrun_schedule(
-                        shape, mesh, args.codec_schedule, args.psnr_floor)
+                        shape, mesh, args.codec_schedule, args.psnr_floor,
+                        wire_shard=args.wire_shard)
                     print(f"PLAN {tag}: {plan.describe()}", flush=True)
                     cells_to_lower = [
-                        (seg.codec, plan.lp_impl, {
+                        (seg.codec, plan.lp_impl, plan.wire_shard, {
                             "codec": seg.codec, "steps": [seg.start,
                                                           seg.stop],
                             "schedule": plan.schedule.spec,
                             "lp_impl": plan.lp_impl,
+                            "wire_shard": plan.wire_shard,
                         })
                         for seg in plan.segments
                     ]
-                for wire_codec, lp_impl, seg_info in cells_to_lower:
+                for wire_codec, lp_impl, wire_shard, seg_info in \
+                        cells_to_lower:
                     rec = lower_cell(arch, shape, multi_pod, lp_impl,
-                                     mesh=mesh, wire_codec=wire_codec)
+                                     mesh=mesh, wire_codec=wire_codec,
+                                     wire_shard=wire_shard,
+                                     eager_sends=args.eager_sends)
                     if seg_info is not None:
                         rec["schedule_segment"] = seg_info
                     if rec.get("skipped"):

@@ -7,6 +7,12 @@ Step policy (docs/step_policy.md): ``--codec-schedule auto`` lets the
 cost-model autotuner pick (engine, sigma-scheduled codec) minimizing
 analytic wire bytes subject to ``--psnr-floor`` (default 40 dB);
 ``--codec-schedule 'int8-residual@0.45,bf16'`` pins an explicit schedule.
+
+Hierarchy-aware wire (docs/wire_sharding.md): on a ``--mesh MxT`` hybrid
+mesh, ``--wire-shard`` / ``--no-wire-shard`` pins the tp-sharded halo
+wire (default: on; the autotuner's two-tier link model decides when
+``--codec-schedule`` is set) and ``--eager-sends`` / ``--no-eager-sends``
+controls ppermute/compute overlap (default: on for hybrid meshes).
 """
 from __future__ import annotations
 
@@ -48,6 +54,19 @@ def main(argv=None):
                     help="MxT hybrid mesh (LP groups x intra-group TP), "
                          "e.g. 4x2; M must equal --partitions.  Needs "
                          "M*T local devices")
+    ap.add_argument("--wire-shard", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="shard every halo payload over the tp axis "
+                         "(1/T chunks across the inter-group links + an "
+                         "intra-group reassembly gather; bit-identical "
+                         "values).  Default: on for hybrid meshes — the "
+                         "autotuner's two-tier link cost model decides "
+                         "when --codec-schedule is set")
+    ap.add_argument("--eager-sends", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="issue all halo ppermute rounds before any "
+                         "accumulation so they can overlap the DiT "
+                         "tail.  Default: on for hybrid meshes")
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
         ap.error("--codec-schedule and --wire-codec are exclusive")
@@ -78,9 +97,12 @@ def main(argv=None):
                              wire_codec=args.wire_codec,
                              codec_schedule=args.codec_schedule,
                              psnr_floor=args.psnr_floor,
-                             mesh=mesh)
+                             mesh=mesh,
+                             wire_shard=args.wire_shard,
+                             eager_sends=args.eager_sends)
     print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name} "
-          f"tp={engine.tp}")
+          f"tp={engine.tp} wire_shard={engine.wire_shard} "
+          f"eager_sends={engine.eager_sends}")
     if engine.plan is not None:
         print(f"step policy: {engine.plan.describe()}")
     for i in range(args.requests):

@@ -38,6 +38,8 @@ from .schedule import (  # noqa: F401
     segment_steps,
 )
 from .autotune import (  # noqa: F401
+    DEFAULT_LINKS,
+    LinkModel,
     StepPolicyPlan,
     auto_plan,
     resolve_cli_schedule,

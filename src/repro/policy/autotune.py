@@ -19,6 +19,17 @@ closed-form walk rather than a search:
    bytes (short schedules at K=2 with a strict floor), the plan keeps
    the psum engine instead — the same break-even rule
    ``core/spmd.select_lp_impl`` hardcodes, now derived per request.
+4. On hybrid ``(M, T)`` meshes, price the two link tiers separately
+   (:class:`LinkModel`: ``inter_gbps`` for the slow inter-group links,
+   ``intra_gbps`` for the fast intra-group fabric) and rank the
+   wire-shard choice by **weighted wire time**, not raw bytes: sharding
+   the halo wire over the tp axis cuts inter-group bytes T-fold but
+   adds an intra-group reassembly gather
+   (``comm_model.lp_halo_wire_profile``), so it wins exactly when the
+   inter links are the binding constraint — at T=4 with the default
+   10:1 ratio the sharded wire dominates every unsharded plan, while
+   equal-bandwidth links flip the decision back (the reassembly gather
+   then costs more than the inter saving).
 """
 from __future__ import annotations
 
@@ -49,6 +60,31 @@ DEFAULT_CANDIDATES = (
 
 
 @dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Two-tier link bandwidths (GB/s per device) for the weighted
+    wire-time ranking.
+
+    ``inter_gbps`` prices the inter-group links the lp-axis collectives
+    cross (DCN / inter-host ICI — the binding constraint the paper and
+    DualParal identify); ``intra_gbps`` the intra-group fabric the tp
+    reassembly gathers ride (NVLink / same-host ICI).  The default 10:1
+    ratio is the conventional fast-fabric : network gap; operators
+    should calibrate both to their topology.
+    """
+
+    inter_gbps: float = 25.0
+    intra_gbps: float = 250.0
+
+    def wire_time_ms(self, inter_bytes: float, intra_bytes: float) -> float:
+        """Per-device wire time of (inter, intra) bytes, milliseconds."""
+        return (inter_bytes / (self.inter_gbps * 1e9)
+                + intra_bytes / (self.intra_gbps * 1e9)) * 1e3
+
+
+DEFAULT_LINKS = LinkModel()
+
+
+@dataclasses.dataclass(frozen=True)
 class StepPolicyPlan:
     """One denoise's resolved policy: engine + codec schedule + the
     analytic bytes that justified it."""
@@ -62,6 +98,11 @@ class StepPolicyPlan:
     psum_bytes: int                     # fp32 psum engine, same steps
     psnr_floor_db: Optional[float]      # the constraint (None = unchecked)
     envelope_db: float                  # conservative schedule envelope
+    # two-tier wire profile (hybrid meshes; zeros when tp == 1):
+    wire_shard: bool = False            # shard the halo wire over tp
+    inter_bytes: int = 0                # per-device inter-group bytes
+    intra_bytes: int = 0                # per-device intra-group LP bytes
+    wire_time_ms: float = 0.0           # weighted two-tier wire time
 
     @property
     def num_segments(self) -> int:
@@ -75,8 +116,9 @@ class StepPolicyPlan:
         segs = " ".join(
             f"{s.codec}[{s.start}..{s.stop}]" for s in self.segments
         )
+        shard = " wire_shard" if self.wire_shard else ""
         return (
-            f"{self.lp_impl} schedule={self.schedule.spec} -> {segs} "
+            f"{self.lp_impl}{shard} schedule={self.schedule.spec} -> {segs} "
             f"({self.reduction_vs_fp32_halo:.2f}x vs fp32 halo, "
             f"envelope {self.envelope_db:.0f} dB)"
         )
@@ -143,6 +185,8 @@ def _plan_from_schedule(
     psnr_floor_db: Optional[float],
     credit_db: float,
     allow_engine_flip: bool = True,
+    links: LinkModel = DEFAULT_LINKS,
+    wire_shard: Optional[bool] = None,
 ) -> StepPolicyPlan:
     from repro.core.spmd import select_lp_impl
 
@@ -173,6 +217,27 @@ def _plan_from_schedule(
         envelope = float("inf")
     else:
         lp_impl = "halo_hybrid" if tp > 1 else "halo"
+    # two-tier wire profile + the wire-shard decision (weighted TIME,
+    # not bytes: sharding trades inter-group bytes for an intra-group
+    # reassembly gather, and only the link ratio says which wins)
+    ws = False
+    inter = intra = 0
+    if lp_impl == "halo_hybrid" and tp > 1:
+        prof_off = cm.lp_halo_wire_profile(cfg, K, tp, r, step_codecs,
+                                           wire_shard=False)
+        prof_on = cm.lp_halo_wire_profile(cfg, K, tp, r, step_codecs,
+                                          wire_shard=True)
+        t_off = links.wire_time_ms(prof_off["inter"], prof_off["intra"])
+        t_on = links.wire_time_ms(prof_on["inter"], prof_on["intra"])
+        ws = (t_on < t_off) if wire_shard is None else bool(wire_shard)
+        prof = prof_on if ws else prof_off
+        inter, intra = prof["inter"], prof["intra"]
+    elif lp_impl == "halo":
+        prof = cm.lp_halo_wire_profile(cfg, K, 1, r, step_codecs,
+                                       wire_shard=False)
+        inter = prof["inter"]
+    else:  # shard_map: the psum ring, per device
+        inter = psum // K
     return StepPolicyPlan(
         lp_impl=lp_impl,
         schedule=schedule,
@@ -183,6 +248,10 @@ def _plan_from_schedule(
         psum_bytes=int(psum),
         psnr_floor_db=psnr_floor_db,
         envelope_db=envelope,
+        wire_shard=ws,
+        inter_bytes=int(inter),
+        intra_bytes=int(intra),
+        wire_time_ms=links.wire_time_ms(inter, intra),
     )
 
 
@@ -196,9 +265,14 @@ def auto_plan(
     tp: int = 1,
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
     credit_db: float = HIGH_NOISE_CREDIT_DB,
+    links: LinkModel = DEFAULT_LINKS,
+    wire_shard: Optional[bool] = None,
 ) -> StepPolicyPlan:
     """The auto-plan: byte-minimal (engine, codec schedule) meeting the
-    PSNR floor on this workload geometry and sigma trajectory."""
+    PSNR floor on this workload geometry and sigma trajectory.  On
+    hybrid meshes (``tp > 1``) the wire-shard decision is made by
+    weighted wire time under ``links`` (``wire_shard=None``); pass a
+    bool to pin it."""
     if not usable_dims(cfg.latent_dims, cfg.patch_sizes, K):
         raise ValueError(
             f"no latent dim of {cfg.latent_dims} has >= {K} patches"
@@ -207,7 +281,8 @@ def auto_plan(
     schedule = schedule_for_floor(cfg, K, r, psnr_floor_db, candidates,
                                   credit_db)
     return _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
-                               psnr_floor_db, credit_db)
+                               psnr_floor_db, credit_db, links=links,
+                               wire_shard=wire_shard)
 
 
 def resolve_cli_schedule(
@@ -219,6 +294,8 @@ def resolve_cli_schedule(
     num_steps: int,
     psnr_floor_db: Optional[float] = None,
     tp: int = 1,
+    links: LinkModel = DEFAULT_LINKS,
+    wire_shard: Optional[bool] = None,
 ) -> StepPolicyPlan:
     """Shared ``--codec-schedule`` resolution for serve/dryrun.
 
@@ -227,17 +304,21 @@ def resolve_cli_schedule(
     it is validated against the envelope only when the caller also
     passed a floor — an explicit spec is an operator override, but an
     explicit spec AND an explicit floor that contradict each other is
-    a config error worth failing loudly on.
+    a config error worth failing loudly on.  ``wire_shard`` follows the
+    same convention: ``None`` lets the two-tier cost model decide on
+    hybrid meshes, a bool pins the operator's choice.
     """
     if isinstance(spec, str) and spec.strip().lower() == "auto":
         return auto_plan(cfg, K, r, sampler, num_steps,
                          psnr_floor_db=40.0 if psnr_floor_db is None
-                         else psnr_floor_db, tp=tp)
+                         else psnr_floor_db, tp=tp, links=links,
+                         wire_shard=wire_shard)
     schedule = parse_schedule(spec)
     sigmas = trajectory_sigmas(sampler, num_steps)
     plan = _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
                                psnr_floor_db, HIGH_NOISE_CREDIT_DB,
-                               allow_engine_flip=False)
+                               allow_engine_flip=False, links=links,
+                               wire_shard=wire_shard)
     if psnr_floor_db is not None and plan.envelope_db < psnr_floor_db:
         raise ValueError(
             f"schedule {schedule.spec!r} has envelope "

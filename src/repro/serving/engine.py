@@ -33,6 +33,14 @@ Production behaviours implemented (scaled to the container):
     ``int8-residual@0.45,bf16``) is taken as-is.  Scheduled segments
     run as segmented scans through the shared ``LPStepCompiler``
     (segment codec in the cache key, <= 3 x num_segments compiles);
+  * hierarchy-aware wire on hybrid meshes: ``wire_shard`` (default on
+    when the mesh has a tp axis; the autotuner's two-tier link model
+    decides when a schedule is planned) ships each halo payload as 1/T
+    chunks across the inter-group links + an intra-group reassembly
+    gather — T-fold fewer inter-group bytes, bit-identical values
+    (docs/wire_sharding.md); ``eager_sends`` (default on for hybrid
+    meshes) issues the ppermute rounds before any accumulation so they
+    overlap the Phi_m tail;
   * mid-request re-planning: with ``elastic=True`` the per-step hook
     consults ``StragglerState.propose_group_eviction`` and applies a
     proposed eviction through ``runtime.elastic.replan_lp_compiler``
@@ -108,6 +116,8 @@ class LPServingEngine:
         mesh=None,
         lp_axis: str = "data",
         tp_axis: str = "model",
+        wire_shard: Optional[bool] = None,
+        eager_sends: Optional[bool] = None,
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -129,6 +139,20 @@ class LPServingEngine:
         tp = 1
         if mesh is not None and tp_axis in mesh.axis_names:
             tp = mesh.shape[tp_axis]
+        # Hierarchy-aware wire knobs.  ``eager_sends=None`` resolves to
+        # on for hybrid meshes (the ppermute rounds can overlap the
+        # Phi_m tail there) and off otherwise; ``wire_shard=None`` lets
+        # the autotuner's two-tier link model decide when a schedule is
+        # being planned, and otherwise defaults to on for hybrid meshes
+        # (T-fold fewer inter-group bytes; bit-identical values).
+        self.eager_sends = (tp > 1) if eager_sends is None else \
+            bool(eager_sends)
+        if wire_shard and tp <= 1:
+            raise ValueError(
+                "wire_shard shards the halo wire over the tp axis; the "
+                "mesh has no tp axis (need --mesh MxT with T >= 2)"
+            )
+        wire_shard_pinned = wire_shard is True  # explicit operator pin
         # Step policy: a codec schedule (explicit spec or cost-model
         # "auto") subsumes the fixed wire_codec — they are exclusive.
         self.codec = get_codec(wire_codec)
@@ -158,13 +182,17 @@ class LPServingEngine:
             self.plan = resolve_cli_schedule(
                 codec_schedule, ccfg, self.K, self.r, self._sampler,
                 num_steps, psnr_floor_db=psnr_floor, tp=tp,
+                wire_shard=wire_shard,
             )
             if lp_impl == "auto":
                 lp_impl = self.plan.lp_impl
             if set(self.plan.step_codecs) != {"fp32"}:
                 schedule = self.plan.schedule
+            wire_shard = self.plan.wire_shard
         elif psnr_floor is not None:
             raise ValueError("psnr_floor needs codec_schedule")
+        self.wire_shard = (tp > 1) if wire_shard is None else \
+            bool(wire_shard)
         # Engine selection: "auto" follows the comm model (psum at K=2,
         # halo family beyond — select_lp_impl); a non-trivial wire codec
         # or schedule implies the halo family, which is where the codec
@@ -188,6 +216,21 @@ class LPServingEngine:
         self.lp_impl = lp_impl
         self.mesh = mesh
         self.tp = tp
+        if self.lp_impl not in ("halo", "halo_hybrid") or tp <= 1 or \
+                mesh is None:
+            # sharding is a property of the mesh-bound halo wire; the
+            # psum engine and the off-mesh simulate mirror have no tp
+            # wire to split (simulate is bit-identical either way).  An
+            # EXPLICIT pin that cannot be honored is a config error
+            # (dryrun raises for the same combination), not a silent
+            # downgrade.
+            if wire_shard_pinned:
+                raise ValueError(
+                    f"wire_shard=True needs the mesh-bound halo family, "
+                    f"got lp_impl={self.lp_impl!r} "
+                    f"(mesh={'yes' if mesh is not None else 'no'}, tp={tp})"
+                )
+            self.wire_shard = False
         forward = None
         forward_factory = None
         compiler_codec = None
@@ -200,11 +243,21 @@ class LPServingEngine:
                 if self.lp_impl == "halo_hybrid":
                     def halo_fwd(fn, z, plan, axis, **kw):
                         return lp_forward_halo_hybrid(
-                            fn, z, plan, axis, mesh, lp_axis, tp_axis, **kw)
+                            fn, z, plan, axis, mesh, lp_axis, tp_axis,
+                            eager_sends=self.eager_sends,
+                            wire_shard=self.wire_shard, **kw)
                 else:
+                    # the plain halo engine composes with extra mesh
+                    # axes; slabs are replicated over tp there too, so
+                    # the wire can still be sharded over it
+                    halo_shard = tp_axis if (self.wire_shard and tp > 1) \
+                        else None
+
                     def halo_fwd(fn, z, plan, axis, **kw):
                         return lp_forward_halo(
-                            fn, z, plan, axis, mesh, lp_axis, **kw)
+                            fn, z, plan, axis, mesh, lp_axis,
+                            eager_sends=self.eager_sends,
+                            shard_axis=halo_shard, **kw)
                 if schedule is not None:
                     # scheduled: LPStepCompiler asks for a hook per
                     # segment codec; each bound hook is the same halo
@@ -260,6 +313,7 @@ class LPServingEngine:
             codec=compiler_codec,
             schedule=schedule,
             mesh_shape=None if mesh is None else (self.K, tp),
+            wire_shard=self.wire_shard,
         )
 
     # ------------------------------------------------------------- queue

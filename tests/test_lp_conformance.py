@@ -18,6 +18,14 @@ the suite by adding a row here and a branch in the subprocess runner):
   * ``halo_hybrid`` — ``core/hybrid.lp_forward_halo_hybrid`` on a
                       ``(K, 2)`` mesh with a Megatron-style TP Phi_m
                       (all codecs)
+  * ``halo_hybrid_ws`` — the hybrid engine with ``wire_shard=True``
+                      (tp-sharded wire, same ``(K, 2)`` mesh, all
+                      codecs incl. the residual scan-carry state).
+                      These cells additionally assert BIT-equality
+                      with the unsharded hybrid engine — sharding is
+                      transport-only
+  * ``halo_hybrid_ws4`` — wire-shard at T=4 (``(2, 4)`` mesh; K=2
+                      only — 8 fake devices), int8 + int8-residual
   * ``simulate``    — ``comm.wire.simulate_halo_forward``, the
                       single-process mirror (all codecs; runs in-process
                       in the fast tier too)
@@ -25,9 +33,12 @@ the suite by adding a row here and a branch in the subprocess runner):
 The SPMD cells run on 8 fake CPU devices in one subprocess per K (the
 device-count XLA flag must not leak into this process).
 """
+import os
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +64,14 @@ ENGINE_CODECS = {
     "gspmd": STATELESS,           # residual state needs the halo schedule
     "halo": ALL_CODECS,
     "halo_hybrid": ALL_CODECS,
+    # tp-sharded wire: every codec incl. BOTH residual scan-carry
+    # variants — the cells assert bit-equality with the unsharded
+    # hybrid engine (output AND codec state)
+    "halo_hybrid_ws": ALL_CODECS + ("int4-residual",),
     "simulate": ALL_CODECS,
 }
+# wire-shard at T=4: K=2 fits the (2, 4) mesh on 8 fake devices
+WS4_CODECS = ("int8", "int8-residual")
 # documented PSNR floors (dB) for lossy wires vs the fp32 psum reference,
 # single forward pass on N(0,1) latents; exact cells use allclose 1e-5.
 # The floors live in policy/envelope.py — they double as the quality
@@ -135,6 +152,7 @@ SPMD_SCRIPT = textwrap.dedent(
     Z_SHAPE, PATCHES, R = %(Z_SHAPE)r, %(PATCHES)r, %(R)r
     mesh1 = Mesh(np.asarray(jax.devices()[:K]), ("data",))
     mesh2 = make_hybrid_mesh(K, 2)
+    mesh4 = make_hybrid_mesh(K, 4) if K * 4 <= len(jax.devices()) else None
 
     rng = np.random.default_rng(7)
     z = jnp.asarray(rng.normal(size=Z_SHAPE).astype(np.float32))
@@ -144,13 +162,29 @@ SPMD_SCRIPT = textwrap.dedent(
     def den(x):  # same math every engine computes
         return jnp.tanh(x) * 0.5 + jnp.einsum("...c,cd->...d", x, w1)
 
-    def tp_den(x):  # Megatron Phi_m: half the contraction per tp rank
-        tp = jax.lax.axis_index("model")
-        half = C // 2
-        ws = jax.lax.dynamic_slice_in_dim(w1, tp * half, half, 0)
-        xs = jax.lax.dynamic_slice_in_dim(x, tp * half, half, x.ndim - 1)
-        part = jnp.einsum("...c,cd->...d", xs, ws)
-        return jnp.tanh(x) * 0.5 + jax.lax.psum(part, "model")
+    def make_tp_den(T):  # Megatron Phi_m: 1/T of the contraction per rank
+        def tp_den(x):
+            tp = jax.lax.axis_index("model")
+            part = C // T
+            ws = jax.lax.dynamic_slice_in_dim(w1, tp * part, part, 0)
+            xs = jax.lax.dynamic_slice_in_dim(x, tp * part, part, x.ndim - 1)
+            p = jnp.einsum("...c,cd->...d", xs, ws)
+            return jnp.tanh(x) * 0.5 + jax.lax.psum(p, "model")
+        return tp_den
+
+    tp_den = make_tp_den(2)
+
+    def run_hybrid(dim, name, plan, rest, mesh, tden, wire_shard):
+        codec = get_codec(name)
+        if codec.stateful:
+            st = init_halo_wire_state(codec, halo_spec(plan), rest)
+            return jax.jit(lambda zz, s: lp_forward_halo_hybrid(
+                tden, zz, plan, dim, mesh, codec=codec, codec_state=s,
+                wire_shard=wire_shard))(z, st)
+        c = None if name == "fp32" else codec
+        return jax.jit(lambda zz: lp_forward_halo_hybrid(
+            tden, zz, plan, dim, mesh, codec=c,
+            wire_shard=wire_shard))(z), None
 
     def run_cell(engine, dim, name, plan, rest):
         codec = get_codec(name)
@@ -171,12 +205,8 @@ SPMD_SCRIPT = textwrap.dedent(
             return jax.jit(lambda zz: lp_forward_halo(
                 den, zz, plan, dim, mesh1, "data", codec=c))(z)
         if engine == "halo_hybrid":
-            if st is not None:
-                return jax.jit(lambda zz, s: lp_forward_halo_hybrid(
-                    tp_den, zz, plan, dim, mesh2, codec=codec,
-                    codec_state=s))(z, st)[0]
-            return jax.jit(lambda zz: lp_forward_halo_hybrid(
-                tp_den, zz, plan, dim, mesh2, codec=c))(z)
+            return run_hybrid(dim, name, plan, rest, mesh2, tp_den,
+                              False)[0]
         raise ValueError(engine)
 
     cells = %(CELLS)r
@@ -184,7 +214,25 @@ SPMD_SCRIPT = textwrap.dedent(
         plan = plan_uniform(Z_SHAPE[dim], PATCHES[dim], K, R, dim)
         rest = tuple(s for i, s in enumerate(Z_SHAPE) if i != dim)
         ref = lp_forward_uniform(den, z, plan, axis=dim)
-        out = run_cell(engine, dim, name, plan, rest)
+        extra = ""
+        if engine in ("halo_hybrid_ws", "halo_hybrid_ws4"):
+            # the wire-sharded engine must be BIT-identical to the
+            # unsharded one (output and residual scan-carry state):
+            # sharding only rearranges the transport
+            T = 4 if engine == "halo_hybrid_ws4" else 2
+            mesh = mesh4 if T == 4 else mesh2
+            tden = make_tp_den(T)
+            out, st_ws = run_hybrid(dim, name, plan, rest, mesh, tden, True)
+            ref_out, st_un = run_hybrid(dim, name, plan, rest, mesh, tden,
+                                        False)
+            bit = bool(jnp.all(out == ref_out))
+            if st_ws is not None:
+                bit = bit and all(
+                    bool(jnp.all(x == y)) for x, y in
+                    zip(jax.tree.leaves(st_ws), jax.tree.leaves(st_un)))
+            extra = f" bit={int(bit)}"
+        else:
+            out = run_cell(engine, dim, name, plan, rest)
         a = np.asarray(out, np.float64)
         b = np.asarray(ref, np.float64)
         mse = float(np.mean((a - b) ** 2))
@@ -192,7 +240,7 @@ SPMD_SCRIPT = textwrap.dedent(
                                  / max(mse, 1e-30)))
         rel = float(np.linalg.norm(a - b) / np.linalg.norm(b))
         print(f"CELL {engine} dim={dim} codec={name} "
-              f"psnr={db:.1f} rel={rel:.2e}")
+              f"psnr={db:.1f} rel={rel:.2e}{extra}")
     print(f"DONE {len(cells)}")
     """
 )
@@ -201,18 +249,25 @@ SPMD_SCRIPT = textwrap.dedent(
 def _run_matrix(K: int):
     cells = [
         (engine, dim, codec)
-        for engine in ("psum", "gspmd", "halo", "halo_hybrid")
+        for engine in ("psum", "gspmd", "halo", "halo_hybrid",
+                       "halo_hybrid_ws")
         for dim, codec in _cells_for(engine, K)
     ]
+    if K * 4 <= 8:  # the (K, 4) wire-shard mesh fits the fake devices
+        cells += [
+            ("halo_hybrid_ws4", dim, codec)
+            for dim in range(3) for codec in WS4_CODECS
+        ]
     res = subprocess.run(
         [sys.executable, "-c", SPMD_SCRIPT % {
             "K": K, "Z_SHAPE": Z_SHAPE, "PATCHES": PATCHES, "R": R,
             "CELLS": cells,
         }],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+             "PATH": "/usr/bin:/bin",
              "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
-        cwd="/root/repo",
+        cwd=REPO_ROOT,
         timeout=580,
     )
     assert res.returncode == 0, f"stdout={res.stdout}\nstderr={res.stderr}"
@@ -345,6 +400,10 @@ def test_spmd_engine_conformance_matrix(K):
         db = float(line.split("psnr=")[1].split()[0])
         rel = float(line.split("rel=")[1].split()[0])
         tag = f"{engine}/K{K}/dim{dim}/{codec}: {line}"
+        if engine in ("halo_hybrid_ws", "halo_hybrid_ws4"):
+            # transport-only rearrangement: sharded == unsharded, bitwise
+            # (output AND residual scan-carry state)
+            assert "bit=1" in line, f"{tag} not bit-equal to unsharded"
         if codec == "fp32":
             assert rel < 1e-5, tag
         else:

@@ -79,7 +79,7 @@ def test_replan_resets_codec_state_exactly_once_and_never_reuses_stale():
     assert comp.hits == 8, comp.hits
     # both geometries present in the key space, old one merely dormant
     keys = list(comp._cache.keys())
-    assert {k[-4] for k in keys} == {3, 4}  # num_partitions key slot
+    assert {k[-5] for k in keys} == {3, 4}  # num_partitions key slot
 
 
 def test_replan_mesh_bound_compiler_requires_rebound_forward():

@@ -1,0 +1,372 @@
+"""Hierarchy-aware halo wire: byte model, shard helpers, and the
+two-tier autotuner.
+
+Tier-1 cells validate the analytic machinery in-process (no fake
+devices); the slow cell cross-checks the sharded byte model against the
+compiled 2D-mesh HLO exactly, per collective per link tier, in a
+subprocess (the conformance matrix owns the value/bit-equality cells,
+``benchmarks/wire_shard.py`` the T=4 gate).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.comm.codecs import get_codec
+from repro.core import comm_model as cm
+from repro.distributed.collectives import (
+    wire_shard_len,
+    wire_shard_slice,
+    wire_unshard,
+)
+
+CFG = cm.VDMCommConfig(
+    latent_dims=(13, 60, 104), latent_channels=16,
+    patch_sizes=(1, 2, 2), d_model=1536, num_blocks=30, num_steps=12,
+)
+
+
+# ------------------------------------------------------- shard helpers
+@pytest.mark.parametrize("shape,T", [
+    ((7, 3, 5), 4), ((8, 2), 2), ((13,), 3), ((6, 4), 8),
+])
+def test_wire_shard_roundtrip_is_identity(shape, T):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    chunks = jnp.stack([
+        wire_shard_slice(x, jnp.int32(t), T) for t in range(T)
+    ])
+    assert chunks.shape == (T, wire_shard_len(int(np.prod(shape)), T))
+    back = wire_unshard(chunks, shape)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_wire_unshard_rows_batched_identity():
+    from repro.distributed.collectives import wire_unshard_rows
+
+    rng = np.random.default_rng(1)
+    K, T, shape = 3, 4, (5, 2)
+    wires = jnp.asarray(rng.normal(size=(K,) + shape).astype(np.float32))
+    cols = jnp.stack([  # (T, K, s): one tp gather of a K-row lp gather
+        jnp.stack([wire_shard_slice(wires[k], jnp.int32(t), T)
+                   for k in range(K)])
+        for t in range(T)
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(wire_unshard_rows(cols, shape)), np.asarray(wires))
+
+
+def test_halo_forward_rejects_shard_axis_eq_lp_axis():
+    """Sharding over the transfer axis itself would reassemble chunks of
+    different senders' slabs — must fail loudly, not corrupt."""
+    from repro.core import plan_uniform
+    from repro.core.spmd import lp_forward_halo
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    plan = plan_uniform(8, 1, 1, 0.0, 0)
+    with pytest.raises(ValueError, match="differ from the lp axis"):
+        lp_forward_halo(lambda x: x, jnp.zeros((8, 2)), plan, 0, mesh,
+                        lp_axis="data", shard_axis="data")
+
+
+def test_replan_wire_shard_needs_rebound_hook():
+    """Flipping the wire layout on a compiler with a bound forward hook
+    must demand a re-bound hook (the old one closes over the old
+    layout) — and must leave the plan untouched on the raise."""
+    from repro.core import LPStepCompiler
+
+    def hook(fn, z, plan, axis):  # stands in for a mesh-bound engine
+        raise AssertionError("never traced")
+
+    comp = LPStepCompiler(lambda w, t: w, lambda z, p, s: z, 2, 0.5,
+                          (1, 2, 2), (1, 2, 3), uniform=True,
+                          forward=hook, wire_shard=False)
+    with pytest.raises(ValueError, match="re-bound forward"):
+        comp.replan(wire_shard=True, num_partitions=3)
+    assert comp.num_partitions == 2 and comp.plan_epoch == 0
+    # re-binding in the same call is the sanctioned path
+    def hook2(fn, z, plan, axis):
+        raise AssertionError("never traced")
+    assert comp.replan(wire_shard=True, forward=hook2)
+    assert comp.wire_shard and comp.plan_epoch == 1
+
+
+def test_serving_engine_rejects_unhonorable_wire_shard_pin():
+    """An explicit wire_shard=True the engine cannot honor is a config
+    error (mirroring dryrun), never a silent downgrade."""
+    from repro.configs import get_config
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    with pytest.raises(ValueError, match="tp axis"):
+        LPServingEngine(lambda *a, **k: None, {}, cfg, num_partitions=2,
+                        wire_shard=True)  # no mesh -> no tp axis
+
+
+def test_wire_shard_helpers_int_dtypes():
+    x = jnp.arange(11, dtype=jnp.int8).reshape(11)
+    chunks = jnp.stack([wire_shard_slice(x, jnp.int32(t), 4)
+                        for t in range(4)])
+    assert chunks.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(wire_unshard(chunks, (11,))), np.asarray(x))
+
+
+# ------------------------------------------------- codec wire accounting
+def test_wire_dtype_bytes():
+    assert get_codec("fp32").wire_dtype_bytes == 4
+    assert get_codec("bf16").wire_dtype_bytes == 2
+    assert get_codec("int8").wire_dtype_bytes == 1
+    assert get_codec("int4").wire_dtype_bytes == 1
+    assert get_codec("int8-residual").wire_dtype_bytes == 1
+    assert get_codec("int4-residual").wire_dtype_bytes == 1
+
+
+def test_wire_elems_matches_wire_shapes():
+    # int4 packs pairs along the last axis — exact even for odd extents
+    int4 = get_codec("int4")
+    assert int4.wire_elems(6 * 16, last_dim=16) == 6 * 8
+    assert int4.wire_elems(6 * 5, last_dim=5) == 6 * 3
+    assert get_codec("int4-residual").wire_elems(6 * 5, 5) == 6 * 3
+    # storage elems x storage bytes == payload bytes (even extents)
+    for name in ("fp32", "bf16", "int8", "int8-residual"):
+        c = get_codec(name)
+        n = 60 * 104 * 16
+        assert c.wire_elems(n, 16) * c.wire_dtype_bytes == \
+            c.wire_bytes(n) - c.meta_bytes
+
+
+# ------------------------------------------------------ two-tier model
+@pytest.mark.parametrize("codec", ["fp32", "bf16", "int8", "int8-residual"])
+@pytest.mark.parametrize("T", [2, 4])
+def test_sharded_step_inter_is_t_fold_smaller(codec, T):
+    """Per-device inter-group bytes of the sharded step ~ 1/T of the
+    unsharded hybrid step (exactly, up to chunk ceil-padding and the
+    T-replicated meta)."""
+    M = 4
+    un = cm.lp_halo_hybrid_step_collectives(CFG, M, T, 0.5, dim=1,
+                                            codec=codec)
+    sh = cm.lp_halo_sharded_step_collectives(CFG, M, T, 0.5, dim=1,
+                                             codec=codec)
+    inter = sum(sh["inter"].values())
+    ratio = sum(un.values()) / inter
+    assert T - 0.2 <= ratio <= T + 0.01, (codec, T, ratio)
+    # the reassembly gathers move ~the full payload on the intra tier
+    assert sh["intra"]["all-gather"] > 0
+
+
+def test_sharded_group_totals_split():
+    """Group totals: inter collapses ~T-fold vs the T-replicated hybrid
+    wire; inter+intra stays within ~2x of the 1D model (nothing is
+    free, it just moves to the cheap tier)."""
+    M, T = 2, 4
+    hyb = cm.comm_lp_halo_hybrid(CFG, M, T, 0.5, codec="int8")
+    sh = cm.comm_lp_halo_sharded(CFG, M, T, 0.5, codec="int8")
+    assert sh["total"] == sh["inter"] + sh["intra"]
+    assert hyb / sh["inter"] >= T - 0.2
+    # scheduled variant == sum of fixed-codec steps
+    sched = cm.comm_lp_halo_sharded(
+        CFG, M, T, 0.5, step_codecs=["int8"] * CFG.num_steps)
+    assert sched == sh
+
+
+def test_sharded_rejects_degenerate_tp():
+    with pytest.raises(ValueError):
+        cm.lp_halo_sharded_step_collectives(CFG, 4, 1, 0.5, dim=1)
+
+
+def test_wire_profile_tiers():
+    codecs = ["int8"] * CFG.num_steps
+    off = cm.lp_halo_wire_profile(CFG, 4, 2, 0.5, codecs, wire_shard=False)
+    on = cm.lp_halo_wire_profile(CFG, 4, 2, 0.5, codecs, wire_shard=True)
+    assert off["intra"] == 0
+    assert on["inter"] < off["inter"]
+    assert on["intra"] > 0
+
+
+def test_comm_hybrid_wire_shard_charges_reassembly():
+    """The hub-model fix: with the striped wire the intra-group total
+    must include the reassembly gather, not pretend it is free."""
+    base = cm.comm_hybrid(CFG, 8, 2, 0.5, intra="nmp")
+    shard = cm.comm_hybrid(CFG, 8, 2, 0.5, intra="nmp", wire_shard=True)
+    assert shard > base
+    # k_m == 1: no striping possible, accounting unchanged
+    assert cm.comm_hybrid(CFG, 2, 2, 0.5, wire_shard=True) == \
+        cm.comm_hybrid(CFG, 2, 2, 0.5)
+
+
+# -------------------------------------------------- two-tier autotuner
+def _sampler(n):
+    from repro.diffusion.sampler import FlowMatchEuler
+
+    return FlowMatchEuler(n)
+
+
+def test_auto_plan_shards_on_slow_inter_links():
+    """T=4 with the default 10:1 link ratio: the sharded wire dominates
+    every unsharded plan (the ISSUE's headline decision)."""
+    from repro.policy import auto_plan
+
+    plan = auto_plan(CFG, 2, 0.5, _sampler(12), 12, psnr_floor_db=40.0,
+                     tp=4)
+    assert plan.lp_impl == "halo_hybrid"
+    assert plan.wire_shard
+    assert plan.intra_bytes > 0
+    assert "wire_shard" in plan.describe()
+
+
+def test_auto_plan_keeps_unsharded_on_equal_links():
+    """Equal-bandwidth tiers: the reassembly gather costs more than the
+    inter saving — weighted TIME flips the decision, raw bytes never
+    would."""
+    from repro.policy import LinkModel, auto_plan
+
+    plan = auto_plan(CFG, 2, 0.5, _sampler(12), 12, psnr_floor_db=40.0,
+                     tp=4, links=LinkModel(inter_gbps=50, intra_gbps=50))
+    assert not plan.wire_shard
+    assert plan.intra_bytes == 0
+
+
+def test_auto_plan_wire_shard_pin_and_tp1():
+    from repro.policy import auto_plan
+
+    pinned = auto_plan(CFG, 2, 0.5, _sampler(12), 12, psnr_floor_db=40.0,
+                       tp=4, wire_shard=False)
+    assert not pinned.wire_shard
+    flat = auto_plan(CFG, 4, 0.5, _sampler(12), 12, psnr_floor_db=40.0)
+    assert not flat.wire_shard and flat.intra_bytes == 0
+    assert flat.inter_bytes > 0  # single-tier profile still reported
+
+
+def test_link_model_weighted_time():
+    from repro.policy import LinkModel
+
+    links = LinkModel(inter_gbps=10, intra_gbps=100)
+    assert links.wire_time_ms(10e9, 0) == pytest.approx(1000.0)
+    assert links.wire_time_ms(0, 100e9) == pytest.approx(1000.0)
+    # 10:1 ratio: a byte on the inter tier costs 10x an intra byte
+    assert links.wire_time_ms(1e9, 0) == \
+        pytest.approx(10 * links.wire_time_ms(0, 1e9))
+
+
+def test_step_compiler_wire_shard_in_cache_key():
+    from repro.core import LPStepCompiler
+
+    def den(w, t):
+        return w * (1 + 1e-4 * t)
+
+    def upd(z, pred, sc):
+        return z - pred
+
+    comp = LPStepCompiler(den, upd, 2, 0.5, (1, 2, 2), (1, 2, 3),
+                          uniform=True, wire_shard=False)
+    z = jnp.zeros((1, 8, 4, 4, 2), jnp.float32)
+    comp.step_fn(0, z, 1, np.float32(0.1), ())
+    assert comp.compiles == 1
+    # flipping the wire layout must never hit the old entry
+    assert comp.replan(wire_shard=True)
+    comp.step_fn(0, z, 1, np.float32(0.1), ())
+    assert comp.compiles == 2
+    assert not comp.replan(wire_shard=True)  # no-op: already set
+
+
+# ------------------------------------------ hlo_analyzer group detail
+def test_analyzer_replica_group_detail():
+    from repro.analysis.hlo_analyzer import analyze
+
+    hlo = textwrap.dedent("""
+    ENTRY %main (p0: f32[8]) -> f32[16] {
+      %p0 = f32[8]{0} parameter(0)
+      %ag = f32[16]{0} all-gather(%p0), replica_groups={{0,2},{1,3}}, dimensions={0}
+      %ar = f32[16]{0} all-reduce(%ag), replica_groups=[2,4]<=[8], to_apply=%add
+      ROOT %cp = f32[16]{0} collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+    }
+    """)
+    a = analyze(hlo)
+    assert a.collective_group_bytes["all-gather[2]"] == 64
+    assert a.collective_group_bytes["all-reduce[4]"] == 64
+    assert a.collective_group_bytes["collective-permute"] == 64
+    # the kind-level totals are unchanged by the detail
+    assert a.collective_bytes["all-gather"] == 64
+
+
+# ------------------------------------------------- slow: HLO cross-check
+SLOW_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.analysis.hlo_analyzer import analyze
+    from repro.comm import get_codec, init_halo_wire_state
+    from repro.core import comm_model as cm
+    from repro.core import plan_uniform
+    from repro.core.hybrid import lp_forward_halo_hybrid
+    from repro.distributed.collectives import halo_spec
+    from repro.launch.mesh import make_hybrid_mesh
+
+    M, T = 2, 4
+    mesh = make_hybrid_mesh(M, T)
+    rng = np.random.default_rng(3)
+    Z = (8, 12, 10, 4)
+    z = jnp.asarray(rng.normal(size=Z).astype(np.float32))
+    ccfg = cm.VDMCommConfig(latent_dims=Z[:3], latent_channels=Z[3],
+                            patch_sizes=(1, 2, 2), d_model=1, num_blocks=1,
+                            num_steps=1)
+    def den(x):
+        return jnp.tanh(x) * 0.5 + x
+
+    for dim in (0, 1, 2):
+        plan = plan_uniform(Z[dim], (1, 2, 2)[dim], M, 0.5, dim)
+        for name in ("fp32", "int8", "int4", "int8-residual"):
+            codec = get_codec(name)
+            if codec.stateful:
+                st = init_halo_wire_state(
+                    codec, halo_spec(plan),
+                    tuple(s for i, s in enumerate(Z) if i != dim))
+                fn = jax.jit(lambda zz, s: lp_forward_halo_hybrid(
+                    den, zz, plan, dim, mesh, codec=codec, codec_state=s,
+                    wire_shard=True)[0])
+                hlo = fn.lower(z, st).compile().as_text()
+            else:
+                c = None if name == "fp32" else codec
+                fn = jax.jit(lambda zz: lp_forward_halo_hybrid(
+                    den, zz, plan, dim, mesh, codec=c, wire_shard=True))
+                hlo = fn.lower(z).compile().as_text()
+            got = {k: float(v) for k, v in
+                   analyze(hlo).collective_group_bytes.items()}
+            want = cm.lp_halo_sharded_step_collectives(
+                ccfg, M, T, 0.5, dim=dim, codec=name)
+            exp = {
+                "collective-permute": want["inter"]["collective-permute"],
+                "all-gather[%d]" % M: want["inter"]["all-gather"],
+                "all-gather[%d]" % T: want["intra"]["all-gather"],
+            }
+            for kind, v in exp.items():
+                assert got.get(kind, 0) == v, (dim, name, kind, got, exp)
+            print(f"MATCH dim={dim} {name}")
+    print("DONE")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_byte_model_matches_hlo_exactly():
+    """Analytic inter- and intra-group bytes == measured 2D-mesh HLO,
+    per collective, every codec, every rotation dim (8 fake devices)."""
+    res = subprocess.run(
+        [sys.executable, "-c", SLOW_SCRIPT],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+             "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+        cwd=REPO_ROOT,
+        timeout=580,
+    )
+    assert res.returncode == 0, f"{res.stdout}\n{res.stderr[-2000:]}"
+    assert "DONE" in res.stdout, res.stdout
