@@ -1,0 +1,174 @@
+"""Elastic fault-recovery benchmark -> BENCH_fault_recovery.json.
+
+A scripted LP-group death mid-denoise on a 2D ``(lp=3, tp=2)`` mesh of
+fake CPU devices (subprocess, so the device-count XLA flag never
+leaks), exercising the whole recovery path end to end:
+
+1. **mesh-shrink recovery** — ``--inject-fault dead:1@3`` kills group 1
+   at denoise step 3; the health monitor burns its miss budget, the
+   engine evicts the group, rebuilds a ``(2, 2)`` mesh with re-bound
+   halo hooks (``launch/mesh.shrink_hybrid_mesh`` +
+   ``LPServingEngine._build_forward``), and finishes the batch.
+2. **boundary-snapshot resume** — the retry resumes from the last
+   dim-rotation boundary snapshot, not from z_T: steps lost to the
+   fault must be <= one dim-run of the rotation schedule.
+3. **compile discipline** — recompiles across the whole drill stay
+   <= 3 x num_segments per plan epoch (the pre- and post-eviction
+   geometries are separate epochs; retries must hit the step cache).
+4. **output quality** — PSNR of the recovered output vs the same
+   request served fault-free on the intact (3, 2) mesh must meet the
+   wire codec's conformance-envelope floor
+   (``policy/envelope.PSNR_ENVELOPE_DB``): losing a group mid-flight
+   may not cost more quality than the codec itself is allowed to.
+
+Gates: evictions == 1 landing on a (2, 2) compiler/mesh; restarts
+within the default budget; steps_lost <= one dim-run; compiles <=
+3 x segments x epochs; PSNR >= envelope floor; finite output.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+MESH_M, MESH_T = 3, 2
+NUM_STEPS = 4
+FAULT = "dead:1@3"
+WIRE_CODEC = "int8-residual"
+OUT_JSON = "BENCH_fault_recovery.json"
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import models
+    from repro.configs import get_config
+    from repro.core.schedule import rotation_schedule, usable_dims
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.models import dit, frontends
+    from repro.serving.engine import LPServingEngine, VideoRequest
+
+    M, T, STEPS = %(M)d, %(T)d, %(STEPS)d
+    FAULT, CODEC = %(FAULT)r, %(CODEC)r
+    SHAPE = (8, 8, 12)
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+    def req():
+        return VideoRequest(
+            request_id=0,
+            context=frontends.text_context(jax.random.PRNGKey(1), 1, cfg),
+            latent_shape=SHAPE, seed=0,
+        )
+    def engine(mesh, **kw):
+        return LPServingEngine(
+            fwd, params, cfg, num_partitions=M, overlap_ratio=0.5,
+            num_steps=STEPS, max_batch=1, wire_codec=CODEC,
+            lp_impl="halo_hybrid", mesh=mesh, **kw)
+
+    # ---- reference: the same request served fault-free on (M, T)
+    ref = engine(make_hybrid_mesh(M, T))
+    ref.submit(req())
+    z_ref = np.asarray(ref.run()[0].latent, np.float64)
+
+    # ---- drill: group death mid-denoise, elastic recovery
+    eng = engine(make_hybrid_mesh(M, T), elastic=True, inject_fault=FAULT)
+    eng.submit(req())
+    res = eng.run()[0]
+    z = np.asarray(res.latent, np.float64)
+
+    mse = float(np.mean((z - z_ref) ** 2))
+    psnr = float(10 * np.log10(
+        float(np.abs(z_ref).max()) ** 2 / max(mse, 1e-30)))
+
+    # one dim-run = longest stretch of consecutive steps partitioning the
+    # same dim (the snapshot cadence lp_denoise guarantees)
+    dims = usable_dims(SHAPE, cfg.patch_sizes, M)
+    sched = rotation_schedule(STEPS, dims)
+    dim_run = run = 1
+    for a, b in zip(sched, sched[1:]):
+        run = run + 1 if a == b else 1
+        dim_run = max(dim_run, run)
+
+    out = {
+        "mesh": [M, T], "num_steps": STEPS, "fault": FAULT,
+        "wire_codec": CODEC,
+        "evictions": eng.evictions, "K": eng.K,
+        "compiler_mesh_shape": list(eng._compiler.mesh_shape),
+        "mesh_devices": list(np.asarray(eng.mesh.devices).shape),
+        "restarts": res.restarts,
+        "resumed_from_step": res.resumed_from_step,
+        "steps_lost": eng.last_steps_lost,
+        "dim_run": dim_run,
+        "compiles": eng._compiler.compiles,
+        "num_segments": len(eng.plan.segments) if eng.plan else 1,
+        "psnr_vs_fault_free_db": psnr,
+        "finite": bool(np.isfinite(z).all()),
+    }
+    print("JSON:" + json.dumps(out))
+    """
+)
+
+
+def run(print_csv=True):
+    res = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT % {"M": MESH_M, "T": MESH_T, "STEPS": NUM_STEPS,
+                    "FAULT": FAULT, "CODEC": WIRE_CODEC}],
+        capture_output=True, text=True, cwd=".",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # skip the TPU-runtime probe
+        timeout=560,
+    )
+    rec = None
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rec = json.loads(line[len("JSON:"):])
+    if rec is None:
+        raise RuntimeError(
+            f"fault_recovery subprocess failed:\n"
+            f"{res.stdout}\n{res.stderr[-2000:]}")
+
+    from repro.policy.envelope import codec_floor_db
+
+    # ---- gate 1: exactly one eviction, landing on a (M-1, T) geometry
+    assert rec["evictions"] == 1, rec
+    assert rec["K"] == MESH_M - 1, rec
+    assert rec["compiler_mesh_shape"] == [MESH_M - 1, MESH_T], rec
+    assert rec["mesh_devices"] == [MESH_M - 1, MESH_T], rec
+    # ---- gate 2: snapshot resume — bounded restarts, <= one dim-run lost
+    assert 1 <= rec["restarts"] <= 2, rec
+    assert rec["resumed_from_step"] >= 1, rec
+    assert rec["steps_lost"] <= rec["dim_run"], rec
+    # ---- gate 3: compile discipline across both plan epochs
+    budget = 3 * rec["num_segments"] * (rec["evictions"] + 1)
+    assert rec["compiles"] <= budget, (rec["compiles"], budget)
+    # ---- gate 4: recovered output meets the codec's envelope floor
+    floor = codec_floor_db(WIRE_CODEC)
+    assert rec["finite"], rec
+    assert rec["psnr_vs_fault_free_db"] >= floor, (
+        rec["psnr_vs_fault_free_db"], floor)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if print_csv:
+        print(f"fault_recovery/evict,0,K={MESH_M}->{rec['K']} "
+              f"mesh={rec['compiler_mesh_shape']} fault={rec['fault']}")
+        print(f"fault_recovery/resume,0,restarts={rec['restarts']} "
+              f"resumed_from={rec['resumed_from_step']} "
+              f"steps_lost={rec['steps_lost']} (<= {rec['dim_run']})")
+        print(f"fault_recovery/compiles,0,{rec['compiles']} (<= {budget})")
+        print(f"fault_recovery/psnr,0,"
+              f"{rec['psnr_vs_fault_free_db']:.1f}dB (>= {floor})")
+        print(f"fault_recovery/json,0,wrote {OUT_JSON}")
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ import traceback
 
 from . import (
     codec_schedule,
+    fault_recovery,
     fig6_fig7_overlap,
     fig8_gpu_scaling,
     fig9_duration,
@@ -38,6 +39,7 @@ ALL = {
     "hybrid_lp_tp": hybrid_lp_tp.run,
     "codec_schedule": codec_schedule.run,
     "wire_shard": wire_shard.run,
+    "fault_recovery": fault_recovery.run,
 }
 
 

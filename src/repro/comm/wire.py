@@ -84,6 +84,39 @@ def _pin(x):
     return jax.lax.optimization_barrier(x)
 
 
+def _finite_or(decoded: jnp.ndarray, fallback) -> jnp.ndarray:
+    """NaN/Inf decode guard: the whole message or its fallback.
+
+    A corrupted wire payload (flipped bits, truncated DMA, a garbage
+    scale) decodes to NaN/Inf; letting even one such element into the
+    accumulator poisons the entire latent within a step.  The guard is
+    all-or-nothing per message — one non-finite element means the
+    payload can't be trusted at all — and falls back to the *stale*
+    reference where one exists (residual codecs carry the previous
+    decoded slab: DistriFusion's one-step-stale boundary activations,
+    absorbed by the same error-feedback machinery) or to zeros for
+    stateless codecs (the contribution is skipped; every rank computes
+    the same zero, so replication invariants hold).
+
+    Elementwise select only — no new collectives, so the analytic wire
+    byte model still matches the compiled HLO exactly; when the wire is
+    healthy the select is the identity and values are bit-equal to the
+    unguarded path.
+    """
+    ok = jnp.isfinite(decoded).all()
+    fb = jnp.zeros_like(decoded) if fallback is None else fallback
+    return jnp.where(ok, decoded, fb)
+
+
+def _finite_rows_or(decoded: jnp.ndarray, fallback) -> jnp.ndarray:
+    """Per-row (leading-axis) variant of :func:`_finite_or` for gathered
+    (K, ...) tables: each sender's message is guarded independently."""
+    axes = tuple(range(1, decoded.ndim))
+    ok = jnp.isfinite(decoded).all(axis=axes, keepdims=True)
+    fb = jnp.zeros_like(decoded) if fallback is None else fallback
+    return jnp.where(ok, decoded, fb)
+
+
 def _ppermute_msg(wire, meta, axis_name, perm, shard_axis=None,
                   shard_size=1):
     """Ship (payload, scales) through one ppermute round.
@@ -140,6 +173,7 @@ def compressed_halo_exchange(
     eager_sends: bool = False,
     shard_axis: Optional[str] = None,
     shard_size: int = 1,
+    nan_guard: bool = False,
 ) -> Tuple[jnp.ndarray, WireState]:
     """Codec twin of ``collectives.halo_exchange`` (same contract: padded
     window-first ``wpred`` in, ``(core_pad + max_transfer, ...)`` f32
@@ -163,6 +197,11 @@ def compressed_halo_exchange(
     scales, quantized values, and residual/EF state are bit-equal to the
     unsharded engine and the state stays rank-local on the lp axis —
     only the wire transport is split.
+
+    ``nan_guard`` wraps every decode in :func:`_finite_or`: a corrupted
+    payload is replaced by the rank-local stale slab (residual codecs'
+    ``pp_recv`` reference — which is then also NOT advanced, so the
+    reference stays the last healthy decode) or by zeros (stateless).
     """
     stateful = isinstance(codec, ResidualCodec)
     base = codec.base if stateful else codec
@@ -203,9 +242,15 @@ def compressed_halo_exchange(
             got, n_recv = residual_decode(
                 base, got_wire, got_meta, state["pp_recv"][ti], slab_shape
             )
+            if nan_guard:
+                stale = state["pp_recv"][ti]
+                got = _finite_or(got, stale)
+                n_recv = _finite_or(n_recv, stale)
             new_state["pp_recv"][ti] = n_recv
         else:
             got = codec.decode(got_wire, got_meta, slab_shape)
+            if nan_guard:
+                got = _finite_or(got, None)
         dst = jnp.asarray(t.dst_start)[rank]
         cur = jax.lax.dynamic_slice_in_dim(acc, dst, t.length, 0)
         return jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
@@ -237,6 +282,7 @@ def compressed_core_gather(
     num_partitions: int,
     shard_axis: Optional[str] = None,
     shard_size: int = 1,
+    nan_guard: bool = False,
 ) -> Tuple[jnp.ndarray, WireState]:
     """All-gather of the normalized core slices through the codec.
 
@@ -257,13 +303,22 @@ def compressed_core_gather(
         wires, metas = _gather_msg(wire, meta, axis_name,
                                    shard_axis=shard_axis,
                                    shard_size=shard_size)
-        return codec.decode(wires, metas, (K,) + core.shape), {}
+        out = codec.decode(wires, metas, (K,) + core.shape)
+        if nan_guard:
+            out = _finite_rows_or(out, None)
+        return out, {}
     corrected = core - state["ag_prev"][rank] + state["ag_err"]
     wire, meta = base.encode(corrected)
     wires, metas = _gather_msg(wire, meta, axis_name,
                                shard_axis=shard_axis,
                                shard_size=shard_size)
     d_all = base.decode(wires, metas, (K,) + core.shape)
+    if nan_guard:
+        # a corrupted sender's delta is dropped (row -> 0): its gathered
+        # core stays the stale ``ag_prev`` slab, identical on every rank
+        # (replication-safe), and the sender's own EF carry keeps the
+        # full corrected value for the next healthy step
+        d_all = _finite_rows_or(d_all, None)
     gathered = state["ag_prev"] + d_all
     new_err = corrected - d_all[rank]
     out_state = dict(state)
@@ -280,6 +335,7 @@ def simulate_halo_forward(
     axis: int,
     codec=None,
     state: Optional[WireState] = None,
+    nan_guard: bool = False,
 ):
     """Single-device replay of the codec'd halo-LP forward pass.
 
@@ -289,7 +345,9 @@ def simulate_halo_forward(
     normalized then round-tripped through the gather codec.  Stateless
     codecs return just the latent; stateful ones return
     ``(latent, new_state)`` (global-layout state, see
-    :func:`init_halo_wire_state`).
+    :func:`init_halo_wire_state`).  ``nan_guard`` mirrors the SPMD
+    decode guard (:func:`_finite_or`) per rank, so guarded-path quality
+    tests can run single-process.
     """
     from repro.core.spmd import stack_windows, window_weights
 
@@ -353,9 +411,15 @@ def simulate_halo_forward(
                 got, n_recv = residual_decode(
                     base, wire, meta, state["pp_recv"][ti][k], shape
                 )
+                if nan_guard:
+                    stale = state["pp_recv"][ti][k]
+                    got = _finite_or(got, stale)
+                    n_recv = _finite_or(n_recv, stale)
                 new_state["pp_recv"][ti][k] = n_recv[None]
             else:
                 got = codec.decode(wire, meta, shape)
+                if nan_guard:
+                    got = _finite_or(got, None)
             dst = t.dst_start[k]
             accs[k] = accs[k].at[dst : dst + t.length].add(got)
 
@@ -384,6 +448,8 @@ def simulate_halo_forward(
             jnp.stack([m[i] for m in metas]) for i in range(len(metas[0]))
         )
         d_all = base.decode(wires_st, metas_st, (K,) + core_shape)
+        if nan_guard:
+            d_all = _finite_rows_or(d_all, None)
         gathered = state["ag_prev"][0] + d_all  # replicas are identical
         new_state["ag_prev"] = jnp.broadcast_to(
             gathered[None], (K,) + gathered.shape
@@ -401,6 +467,8 @@ def simulate_halo_forward(
             jnp.stack([m[i] for m in metas]) for i in range(len(metas[0]))
         )
         gathered = codec.decode(jnp.stack(wires), metas_st, (K,) + core_shape)
+        if nan_guard:
+            gathered = _finite_rows_or(gathered, None)
 
     out = jnp.zeros((plan.extent,) + rest, jnp.float32)
     for j in range(K):

@@ -30,6 +30,7 @@ from .weights import blend_weight_1d, global_normalizer, partition_weights  # no
 from .reconstruct import reconstruct  # noqa: F401
 from .uniform import UniformPlan, expansion_factor, plan_uniform  # noqa: F401
 from .lp_step import (  # noqa: F401
+    DenoiseSnapshot,
     LPStepCompiler,
     lp_denoise,
     lp_denoise_reference,

@@ -158,6 +158,7 @@ def lp_forward_halo_hybrid(
     codec_state=None,
     eager_sends: bool = True,
     wire_shard: bool = False,
+    nan_guard: bool = False,
 ):
     """Hybrid LP×TP halo forward on a 2D ``(lp, tp)`` mesh.
 
@@ -197,6 +198,11 @@ def lp_forward_halo_hybrid(
     on every tp rank — are bit-equal to the unsharded engine.  A no-op
     on meshes without a tp axis (T == 1).
 
+    ``nan_guard`` arms the wire-decode NaN/Inf guard (see
+    ``core/spmd.lp_forward_halo``): corrupted messages fall back to the
+    stale slab / zeros instead of propagating into the latent — the
+    serving engine's default (docs/fault_tolerance.md).
+
     Implementation: ``spmd.lp_forward_halo`` already names only
     ``lp_axis`` in its collectives, so the hybrid engine IS that
     function behind the validated 2D-mesh contract
@@ -210,7 +216,7 @@ def lp_forward_halo_hybrid(
     return lp_forward_halo(
         denoise_fn, z, plan, axis, mesh, lp_axis,
         codec=codec, codec_state=codec_state, eager_sends=eager_sends,
-        shard_axis=shard_axis,
+        shard_axis=shard_axis, nan_guard=nan_guard,
     )
 
 

@@ -22,6 +22,7 @@ The production SPMD engines (``core/spmd.py``) plug in via the
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Any, Callable, Optional, Sequence, Tuple
 
@@ -42,6 +43,44 @@ DenoiseFn = Callable[[jnp.ndarray], jnp.ndarray]
 # f32 scalar and ``extras`` carry traced conditioning (text context, CFG
 # scale, ...).  CFG lives *inside* the fn (paper Eq. 4).
 DenoiseStepFn = Callable[..., jnp.ndarray]
+
+
+@dataclasses.dataclass
+class DenoiseSnapshot:
+    """Mid-denoise recovery point, recorded at dim-rotation / codec-
+    segment boundaries.
+
+    Pass one to :func:`lp_denoise` (the serving engine keeps one per
+    batch attempt): after every completed scan run — a maximal stretch
+    of same-dim, same-codec-segment steps — the latent and the step
+    index are recorded here, and a later :func:`lp_denoise` call with
+    the same snapshot resumes from that boundary instead of ``z_T``,
+    bounding lost work to at most one dim-run.
+
+    Why ``(z, step)`` is the WHOLE state: residual-codec wire state is
+    re-zeroed at exactly these boundaries (dim switch, segment switch,
+    re-plan — see ``LPStepCompiler.init_codec_state``), so the codec
+    state to resume with is definitionally the fresh init the resumed
+    run performs anyway — a boundary resume replays the fault-free
+    arithmetic bit-for-bit.  ``z`` is kept as a HOST copy: it must
+    survive both buffer donation by the next compiled step and the loss
+    of the device that failed.
+    """
+
+    step: int = 0                       # last completed denoise step
+    z: Optional[np.ndarray] = None      # host-resident latent at ``step``
+    plan_epoch: int = 0                 # compiler epoch when recorded
+    boundaries: int = 0                 # records taken (monitoring)
+    resumes: int = 0                    # times a denoise resumed from here
+
+    def record(self, step: int, z, plan_epoch: int = 0) -> None:
+        self.step = int(step)
+        self.z = np.asarray(z)
+        self.plan_epoch = int(plan_epoch)
+        self.boundaries += 1
+
+    def clear(self) -> None:
+        self.step, self.z, self.plan_epoch = 0, None, 0
 
 
 def lp_forward(
@@ -155,6 +194,7 @@ class LPStepCompiler:
         schedule=None,
         forward_factory: Optional[Callable] = None,
         wire_shard: bool = False,
+        nan_guard: bool = False,
     ):
         self.denoise_fn = denoise_fn
         self.update_fn = update_fn
@@ -174,6 +214,11 @@ class LPStepCompiler:
         # part of the cache key so a replan that swaps the hook for a
         # differently-wired one can never be served a stale entry
         self.wire_shard = bool(wire_shard)
+        # arm the wire decode NaN/Inf guard on the simulate mirror
+        # (mesh-bound hooks carry their own flag).  Fixed for the
+        # compiler's lifetime — identity on finite wires, so it is NOT
+        # part of the cache key
+        self.nan_guard = bool(nan_guard)
         if schedule is not None:
             from repro.policy.schedule import parse_schedule
 
@@ -311,7 +356,8 @@ class LPStepCompiler:
         if codec is not None:
             from repro.comm.wire import simulate_halo_forward
 
-            return simulate_halo_forward(fn, z, plan, axis, codec)
+            return simulate_halo_forward(fn, z, plan, axis, codec,
+                                         nan_guard=self.nan_guard)
         if self.uniform:
             return lp_forward_uniform(fn, z, plan, axis, use_kernel=self.use_kernel)
         return lp_forward(fn, z, plan, axis)
@@ -326,7 +372,8 @@ class LPStepCompiler:
             return self.forward(fn, z, plan, axis, state)
         from repro.comm.wire import simulate_halo_forward
 
-        return simulate_halo_forward(fn, z, plan, axis, codec, state)
+        return simulate_halo_forward(fn, z, plan, axis, codec, state,
+                                     nan_guard=self.nan_guard)
 
     def init_codec_state(self, dim: int, z: jnp.ndarray, codec=None):
         """Zeroed residual-codec state for (rotation dim, latent geometry).
@@ -436,6 +483,7 @@ def lp_denoise(
     step_hook: Optional[Callable[[int], None]] = None,
     codec=None,
     schedule=None,
+    snapshot: Optional[DenoiseSnapshot] = None,
 ) -> jnp.ndarray:
     """Full T-step LP denoising on the compiled fast path.
 
@@ -466,6 +514,19 @@ def lp_denoise(
     may call ``compiler.replan(...)`` (straggler / elastic re-planning):
     the next step re-derives its rotation dims and compiles against the
     new geometry; stale cache entries for the old plan are unreachable.
+
+    ``snapshot`` (a :class:`DenoiseSnapshot`) arms boundary
+    checkpointing: the latent is recorded (host copy) after every
+    completed run — dim switch, codec-segment switch, or re-plan — and
+    a call whose snapshot already holds a recorded step resumes from it
+    (skipping steps ``<= snapshot.step``) instead of starting at
+    ``z_T``.  The serving engine's failed-batch retry rides this: lost
+    work is bounded by one dim-run, and because boundaries are exactly
+    where residual codec state is re-zeroed, a boundary resume replays
+    the fault-free arithmetic bit-for-bit.  A resume after a re-plan is
+    fine too — the snapshot holds the full (geometry-independent)
+    latent, and the resumed steps re-derive dims from the compiler's
+    current K.
     """
     if step_hook is not None:
         fuse_scan = False
@@ -515,9 +576,18 @@ def lp_denoise(
         return dims
 
     dims = _dims()
-    # private copy: the first step donates its input buffer, and the
-    # caller's z_T must survive the call
-    z = jnp.array(z_T, copy=True) if comp.donate else jnp.asarray(z_T)
+    start = 0
+    if snapshot is not None and snapshot.z is not None and snapshot.step > 0:
+        # resume from the last boundary: fresh device buffer from the
+        # host copy (donation-safe; the snapshot itself is untouched, so
+        # a second resume from the same boundary also works)
+        start = min(int(snapshot.step), num_steps)
+        snapshot.resumes += 1
+        z = jnp.asarray(snapshot.z).astype(z_T.dtype)
+    else:
+        # private copy: the first step donates its input buffer, and the
+        # caller's z_T must survive the call
+        z = jnp.array(z_T, copy=True) if comp.donate else jnp.asarray(z_T)
 
     if fuse_scan:
         # group consecutive same-dim, same-codec-segment steps into
@@ -533,6 +603,15 @@ def lp_denoise(
             else:
                 runs.append(((dim, ck), [i]))
         for (dim, _), idxs in runs:
+            # resume support: runs at or before the snapshot boundary are
+            # already done.  (A run can straddle ``start`` only when the
+            # snapshot was taken under a different geometry — e.g. an
+            # eviction changed the usable dims — the leftover steps run
+            # as a sub-run with fresh state, which error feedback
+            # absorbs.)
+            idxs = [i for i in idxs if i > start]
+            if not idxs:
+                continue
             seg_codec = step_codecs[idxs[0] - 1]
             stateful = _stateful(seg_codec)
             ts = [np.float32(sampler.timestep(i)) for i in idxs]
@@ -555,6 +634,8 @@ def lp_denoise(
                     z, _ = fn(z, st, ts_arr, scs_arr, extras)
                 else:
                     z = fn(z, ts_arr, scs_arr, extras)
+            if snapshot is not None and idxs[-1] < num_steps:
+                snapshot.record(idxs[-1], z, comp.plan_epoch)
         return z
 
     # Unfused (step_hook) path: one compiled step per call, codec state
@@ -568,13 +649,18 @@ def lp_denoise(
     cur_dim = None
     cur_codec_key = None
     cur_epoch = comp.plan_epoch
-    for i in range(1, num_steps + 1):
+    for i in range(start + 1, num_steps + 1):
         if step_hook is not None:
             step_hook(i)
         if comp.plan_epoch != cur_epoch:      # mid-request re-plan
             cur_epoch = comp.plan_epoch
             dims = _dims()
             cur_state, cur_dim = None, None
+            if snapshot is not None and i > start + 1:
+                # a re-plan is a boundary too (state re-zeroes here):
+                # record the pre-replan latent so a failure during the
+                # first post-replan step resumes right before it
+                snapshot.record(i - 1, z, cur_epoch)
         dim = rotation_dim(i, dims)
         seg_codec = step_codecs[i - 1]
         ck = _codec_key(seg_codec)
@@ -590,6 +676,11 @@ def lp_denoise(
             z, cur_state = fn(z, cur_state, t, sc, extras)
         else:
             z = fn(z, t, sc, extras)
+        if snapshot is not None and i < num_steps:
+            nxt = rotation_dim(i + 1, dims)
+            nxt_ck = _codec_key(step_codecs[i])
+            if nxt != dim or nxt_ck != ck:    # step i ends a run
+                snapshot.record(i, z, comp.plan_epoch)
     return z
 
 

@@ -331,6 +331,7 @@ def lp_forward_halo(
     codec_state=None,
     eager_sends: bool = False,
     shard_axis: Optional[str] = None,
+    nan_guard: bool = False,
 ):
     """Halo-exchange LP forward: the fast-path collective schedule.
 
@@ -374,6 +375,13 @@ def lp_forward_halo(
     hybrid Phi_m contract guarantees; the result is bit-identical to
     the unsharded engine (``comm_model.comm_lp_halo_sharded`` for the
     two-tier byte model).
+
+    ``nan_guard`` arms the codec decode guard (``comm.wire._finite_or``):
+    a corrupted wire message (NaN/Inf after decode) is replaced by the
+    rank-local stale slab (residual codecs) or dropped to zeros
+    (stateless) instead of poisoning the latent — elementwise selects
+    only, so wire bytes and healthy-path values are unchanged.  A no-op
+    without a codec (there is no decode to guard).
     """
     from repro.distributed.collectives import (
         halo_exchange,
@@ -487,12 +495,14 @@ def lp_forward_halo(
                                               codec, {},
                                               eager_sends=eager_sends,
                                               shard_axis=shard_axis,
-                                              shard_size=shard_size)
+                                              shard_size=shard_size,
+                                              nan_guard=nan_guard)
             nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
             core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
             gathered, _ = compressed_core_gather(core, k, lp_axis, codec, {},
                                                  K, shard_axis=shard_axis,
-                                                 shard_size=shard_size)
+                                                 shard_size=shard_size,
+                                                 nan_guard=nan_guard)
             return _reassemble(gathered, z_rep.dtype)
 
         fn = compat.shard_map(
@@ -511,12 +521,14 @@ def lp_forward_halo(
         acc, st = compressed_halo_exchange(wpred, spec, k, lp_axis, codec, st,
                                            eager_sends=eager_sends,
                                            shard_axis=shard_axis,
-                                           shard_size=shard_size)
+                                           shard_size=shard_size,
+                                           nan_guard=nan_guard)
         nshape = (spec.core_pad,) + (1,) * (acc.ndim - 1)
         core = acc[: spec.core_pad] / norm_core[k].reshape(nshape)
         gathered, st = compressed_core_gather(core, k, lp_axis, codec, st, K,
                                               shard_axis=shard_axis,
-                                              shard_size=shard_size)
+                                              shard_size=shard_size,
+                                              nan_guard=nan_guard)
         out = _reassemble(gathered, z_rep.dtype)
         return out, jax.tree.map(lambda s: s[None], st)
 

@@ -127,7 +127,9 @@ def _mem_summary(compiled) -> Dict[str, float]:
 def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                  lp_impl: str = "gspmd", wire_codec: Optional[str] = None,
                  wire_shard: Optional[bool] = None,
-                 eager_sends: Optional[bool] = None):
+                 eager_sends: Optional[bool] = None,
+                 inject_fault: Optional[str] = None,
+                 nan_guard: bool = False):
     """Build the jitted LP denoising step (one forward pass, dim=height)."""
     from repro.core import plan_uniform
     from repro.core.hybrid import lp_forward_halo_hybrid
@@ -173,6 +175,25 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
             f"--wire-shard needs the halo family (the sharded wire lives "
             f"there), got --lp-impl {lp_impl}"
         )
+    # --inject-fault: dead/slow are runtime drills (no effect on a
+    # single-step lowering); corrupt@S swaps the wire codec for its
+    # NaN-poisoning wrapper so the guarded decode HLO can be inspected.
+    corrupt_wire = False
+    if inject_fault:
+        from repro.runtime.faults import parse_fault_plan
+
+        fplan = parse_fault_plan(inject_fault)
+        if fplan.corrupt:
+            if lp_impl not in ("halo", "halo_hybrid") or \
+                    wire_codec in (None, "fp32"):
+                raise ValueError(
+                    "--inject-fault corrupt@S poisons the compressed halo "
+                    "wire; it needs a halo-family --lp-impl with a "
+                    "--wire-codec"
+                )
+            corrupt_wire = True
+            # a poisoned wire is only survivable with the decode guard
+            nan_guard = True
     h_lat = shape.height // 8
     plan = plan_uniform(h_lat, cfg.patch_sizes[1], K, parallel.overlap_ratio, dim=1)
     sampler = FlowMatchEuler(shape.num_steps)
@@ -230,14 +251,14 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                     return lp_forward_halo_hybrid(
                         fn, zz, pl, ax, mesh, "data", "model",
                         codec_state=st, eager_sends=eager_sends,
-                        wire_shard=wire_shard, **kw)
+                        wire_shard=wire_shard, nan_guard=nan_guard, **kw)
             else:
                 def fwd(fn, zz, pl, ax, st=None, **kw):
                     return lp_forward_halo(
                         fn, zz, pl, ax, mesh, "data",
                         codec_state=st, eager_sends=eager_sends,
                         shard_axis="model" if (wire_shard and tp > 1)
-                        else None, **kw)
+                        else None, nan_guard=nan_guard, **kw)
             if wire_codec in (None, "fp32"):
                 pred = fwd(den, z, plan, 2)
             else:
@@ -245,6 +266,10 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
                 from repro.distributed.collectives import halo_spec
 
                 codec = get_codec(wire_codec)
+                if corrupt_wire:
+                    from repro.runtime.faults import CorruptingCodec
+
+                    codec = CorruptingCodec.wrap(codec)
                 if codec.stateful:
                     # single-step lowering: a zero carry inside the step
                     # (collective shapes are state-independent, which is
@@ -273,6 +298,8 @@ def lower_cell(
     wire_codec: Optional[str] = None,
     wire_shard: Optional[bool] = None,
     eager_sends: Optional[bool] = None,
+    inject_fault: Optional[str] = None,
+    wire_nan_guard: bool = False,
 ) -> Dict[str, Any]:
     """Lower + compile one cell; return the §Dry-run record."""
     cfg = get_config(arch)
@@ -427,10 +454,20 @@ def lower_cell(
             fn = jax.jit(decode, donate_argnums=(2,))
             lowered = fn.lower(params_sds, batch_sds, cache_sds)
         elif shape.kind == "vdm_generate":
+            if inject_fault:
+                from repro.runtime.faults import parse_fault_plan
+
+                fplan = parse_fault_plan(inject_fault)
+                if fplan is not None:
+                    rec["fault_drill"] = fplan.describe()
+                    rec["wire_nan_guard"] = bool(
+                        wire_nan_guard or fplan.corrupt)
             step = _vdm_lp_step(cfg, shape, mesh, parallel, lp_impl,
                                 wire_codec=wire_codec,
                                 wire_shard=wire_shard,
-                                eager_sends=eager_sends)
+                                eager_sends=eager_sends,
+                                inject_fault=inject_fault,
+                                nan_guard=wire_nan_guard)
             batch_sds = jax.tree.map(
                 lambda l: jax.ShapeDtypeStruct(
                     l.shape, l.dtype, sharding=NamedSharding(mesh, P())
@@ -535,6 +572,19 @@ def main(argv=None) -> int:
                     action=argparse.BooleanOptionalAction,
                     help="issue halo ppermutes before any accumulation "
                          "(default: on for hybrid meshes)")
+    ap.add_argument("--inject-fault", default=None,
+                    help="serving-fault drill spec "
+                         "(docs/fault_tolerance.md).  dead:G@S / "
+                         "slow:GxF are runtime-only (recorded, no "
+                         "lowering effect); corrupt@S lowers the vdm "
+                         "cell with the NaN-poisoning wire wrapper and "
+                         "the decode guard armed so the guarded HLO can "
+                         "be inspected")
+    ap.add_argument("--wire-nan-guard", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="lower the halo wire decode with the NaN/Inf "
+                         "guard (stale-slab fallback); auto-armed by "
+                         "--inject-fault corrupt@S")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
@@ -597,7 +647,9 @@ def main(argv=None) -> int:
                     rec = lower_cell(arch, shape, multi_pod, lp_impl,
                                      mesh=mesh, wire_codec=wire_codec,
                                      wire_shard=wire_shard,
-                                     eager_sends=args.eager_sends)
+                                     eager_sends=args.eager_sends,
+                                     inject_fault=args.inject_fault,
+                                     wire_nan_guard=args.wire_nan_guard)
                     if seg_info is not None:
                         rec["schedule_segment"] = seg_info
                     if rec.get("skipped"):

@@ -54,6 +54,45 @@ def parse_mesh(spec: str) -> Tuple[int, int]:
     return m, t
 
 
+def shrink_hybrid_mesh(mesh, evicted_group: int, tp: Optional[int] = None):
+    """Rebuild an ``(M-1, T)`` hybrid mesh from the survivors of ``mesh``
+    after LP group ``evicted_group`` died (its row of devices leaves the
+    ring; every other group keeps its devices and tp layout, re-indexed).
+
+    This is the mesh half of mid-request eviction on mesh-bound engines:
+    the serving engine pairs it with a re-bound forward hook
+    (``LPServingEngine._build_forward``) handed to
+    ``runtime.elastic.replan_lp_compiler`` — see docs/fault_tolerance.md.
+    ``tp``, when given, asserts the mesh's tp-axis size (a mismatch means
+    the caller's bookkeeping has diverged from the mesh it is shrinking).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.asarray(mesh.devices)
+    if devs.ndim == 1:                      # 1D lp-only mesh -> (M, 1)
+        devs = devs.reshape(-1, 1)
+    if devs.ndim != 2:
+        raise ValueError(
+            f"shrink_hybrid_mesh wants an (M, T) hybrid mesh, got device "
+            f"array of shape {devs.shape}"
+        )
+    m, t = devs.shape
+    if tp is not None and t != tp:
+        raise ValueError(f"mesh tp axis has size {t}, caller expected {tp}")
+    if not 0 <= evicted_group < m:
+        raise ValueError(f"evicted group {evicted_group} not in [0, {m})")
+    if m <= 2:
+        raise ValueError(
+            f"cannot shrink a {m}-group LP ring below 2 groups "
+            "(LP needs >= 2 partitions)"
+        )
+    survivors = np.delete(devs, evicted_group, axis=0)
+    if len(mesh.axis_names) == 1:
+        return Mesh(survivors.reshape(-1), mesh.axis_names)
+    return Mesh(survivors, mesh.axis_names)
+
+
 def make_hybrid_mesh(lp: int, tp: int = 1):
     """``(lp, tp)`` mesh named ("data", "model") over the first lp*tp
     devices — the hybrid LP x TP engine's layout.  Built directly from a

@@ -67,6 +67,20 @@ def main(argv=None):
                     help="issue all halo ppermute rounds before any "
                          "accumulation so they can overlap the DiT "
                          "tail.  Default: on for hybrid meshes")
+    ap.add_argument("--elastic", action="store_true",
+                    help="mid-request re-planning: the per-step hook "
+                         "evicts dead/straggler LP groups through the "
+                         "health monitor (disables scan fusion)")
+    ap.add_argument("--inject-fault", default=None,
+                    help="scripted serving-fault drill, e.g. "
+                         "'dead:1@4,slow:0x2,corrupt@2' "
+                         "(docs/fault_tolerance.md); dead/slow need "
+                         "--elastic to recover")
+    ap.add_argument("--wire-nan-guard", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="absorb NaN/Inf wire payloads by falling back "
+                         "to the rank-local stale slab (bit-identical "
+                         "when every message is finite)")
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
         ap.error("--codec-schedule and --wire-codec are exclusive")
@@ -99,12 +113,19 @@ def main(argv=None):
                              psnr_floor=args.psnr_floor,
                              mesh=mesh,
                              wire_shard=args.wire_shard,
-                             eager_sends=args.eager_sends)
+                             eager_sends=args.eager_sends,
+                             elastic=args.elastic,
+                             inject_fault=args.inject_fault,
+                             wire_nan_guard=args.wire_nan_guard)
     print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name} "
           f"tp={engine.tp} wire_shard={engine.wire_shard} "
           f"eager_sends={engine.eager_sends}")
     if engine.plan is not None:
         print(f"step policy: {engine.plan.describe()}")
+    if engine._fault_plan is not None:
+        print(f"fault drill: {engine._fault_plan.describe()} "
+              f"(elastic={engine.elastic}, "
+              f"nan_guard={engine.wire_nan_guard})")
     for i in range(args.requests):
         engine.submit(VideoRequest(
             request_id=i,
@@ -114,9 +135,13 @@ def main(argv=None):
         ))
     results = engine.run()
     for r in sorted(results, key=lambda x: x.request_id):
+        resumed = f" resumed_from={r.resumed_from_step}" if r.restarts else ""
         print(f"request {r.request_id}: latent {tuple(r.latent.shape)} "
               f"steps={r.num_steps} batch_wall={r.batch_wall_s:.1f}s "
-              f"batch={r.batch_size} restarts={r.restarts}")
+              f"batch={r.batch_size} restarts={r.restarts}{resumed}")
+    if engine.evictions:
+        print(f"elastic: evictions={engine.evictions} K={engine.K} "
+              f"steps_lost={engine.last_steps_lost}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,204 @@
+"""Deterministic serving-fault injection: the public successor of the
+engine's private ``_step_fault`` test hook.
+
+A :class:`ServingFaultPlan` scripts failures against the serving engine's
+per-step hook (``LPServingEngine`` installs it when ``inject_fault=`` is
+set, the CLIs via ``--inject-fault``), reusing the fire-once bookkeeping
+of ``runtime/ft.FailureInjector``:
+
+  * ``dead:G@S``     — LP group G stops heartbeating at step S.  Every
+    step from S on raises :class:`ServingFault` (the collective "times
+    out") AND feeds a missed heartbeat into the engine's
+    ``runtime/health.GroupHealthMonitor``; after the monitor's bounded
+    retries the group is declared dead and evicted, at which point the
+    fault stops firing (the dead hardware left the ring).
+  * ``slow:GxF``     — group G's synthetic heartbeats run F× the
+    baseline from step 1: exercises the EMA slow path (core re-sizing /
+    eventual eviction), never raises.
+  * ``corrupt@S``    — the wire payload of step S decodes to NaN
+    (:class:`CorruptingCodec` swapped in for exactly that step); the
+    decode-path NaN/Inf guard (``comm/wire.py`` ``nan_guard``) must
+    absorb it by falling back to the rank-local stale slab.
+
+Specs compose comma-separated: ``dead:1@4,corrupt@2``.  All injection is
+host-side and deterministic — faults fire between compiled steps, so the
+same spec replays bit-identically on fake CPU meshes (the
+``benchmarks/fault_recovery.py`` gate relies on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.comm.codecs import Codec, get_codec
+
+
+class ServingFault(RuntimeError):
+    """A denoise step failed for a *recoverable* serving reason (group
+    death, injected wire fault).  ``LPServingEngine.run()`` retries only
+    this and ``runtime/ft.DeviceFailure`` — anything else (a real jax /
+    XLA / programming error) surfaces immediately instead of burning the
+    restart budget on a deterministic failure.
+
+    ``step`` records the 1-indexed denoise step that was about to run
+    when the fault fired, so recovery can account lost work against the
+    last boundary snapshot.
+    """
+
+    def __init__(self, msg: str, step: Optional[int] = None):
+        super().__init__(msg)
+        self.step = step
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptingCodec(Codec):
+    """Wraps a stateless codec; its decode poisons every element to NaN.
+
+    Models a corrupted wire payload (bit-flips on the link, a truncated
+    DMA): the encode side is untouched — bytes on the wire, HLO
+    collectives, and cache keys stay honest — but everything decoded
+    from the wire is garbage.  Stateless only: ``comm/wire.py`` routes
+    stateful codecs through ``isinstance(codec, ResidualCodec)``, so a
+    corrupting wrapper there would silently demote them.  The name is
+    distinct (``<base>-corrupt``) on purpose: it keys separate
+    compiled-step cache entries, so swapping the codec for one step can
+    never poison a healthy step's cached executable.
+    """
+
+    base: Codec = None  # type: ignore[assignment]
+
+    @staticmethod
+    def wrap(base) -> "CorruptingCodec":
+        base = get_codec(base)
+        if base.stateful:
+            raise ValueError(
+                f"CorruptingCodec wraps stateless codecs only, got "
+                f"{base.name!r} (wrap its base instead)"
+            )
+        return CorruptingCodec(
+            name=f"{base.name}-corrupt", bits=base.bits,
+            meta_bytes=base.meta_bytes, stateful=False, base=base,
+        )
+
+    def encode(self, x):
+        return self.base.encode(x)
+
+    def decode(self, wire, meta, shape):
+        return jnp.full(shape, jnp.nan, jnp.float32) + \
+            0.0 * self.base.decode(wire, meta, shape)
+
+
+_DEAD_RE = re.compile(r"^dead:(\d+)@(\d+)$")
+_SLOW_RE = re.compile(r"^slow:(\d+)x([\d.]+)$")
+_CORRUPT_RE = re.compile(r"^corrupt@(\d+)$")
+
+
+@dataclasses.dataclass
+class ServingFaultPlan:
+    """Scripted faults against the serving step hook (fire-once where it
+    matters, like ``runtime/ft.FailureInjector``)."""
+
+    dead: Tuple[Tuple[int, int], ...] = ()      # (group, from_step)
+    slow: Tuple[Tuple[int, float], ...] = ()    # (group, factor)
+    corrupt: Tuple[int, ...] = ()               # steps with a NaN wire
+    baseline_s: float = 1.0                     # synthetic healthy heartbeat
+    _recovered: set = dataclasses.field(default_factory=set)
+    _corrupt_fired: set = dataclasses.field(default_factory=set)
+    # dead faults are STICKY once triggered: a batch retry resumes from
+    # an earlier snapshot step, but the host that died at step S does
+    # not resurrect because the step counter rewound — without this the
+    # replayed healthy heartbeats would reset the monitor's miss budget
+    # and recovery could never converge
+    _dead_active: set = dataclasses.field(default_factory=set)
+
+    # ------------------------------------------------------------ parsing
+    @staticmethod
+    def parse(spec: str) -> "ServingFaultPlan":
+        dead: List[Tuple[int, int]] = []
+        slow: List[Tuple[int, float]] = []
+        corrupt: List[int] = []
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            if m := _DEAD_RE.match(part):
+                dead.append((int(m.group(1)), int(m.group(2))))
+            elif m := _SLOW_RE.match(part):
+                slow.append((int(m.group(1)), float(m.group(2))))
+            elif m := _CORRUPT_RE.match(part):
+                corrupt.append(int(m.group(1)))
+            else:
+                raise ValueError(
+                    f"bad fault spec {part!r}: want dead:G@S, slow:GxF "
+                    f"or corrupt@S (comma-separated)"
+                )
+        return ServingFaultPlan(dead=tuple(dead), slow=tuple(slow),
+                                corrupt=tuple(sorted(set(corrupt))))
+
+    def describe(self) -> str:
+        parts = [f"dead:{g}@{s}" for g, s in self.dead]
+        parts += [f"slow:{g}x{f:g}" for g, f in self.slow]
+        parts += [f"corrupt@{s}" for s in self.corrupt]
+        return ",".join(parts) or "none"
+
+    # ----------------------------------------------------------- behaviour
+    @property
+    def touches_health(self) -> bool:
+        """True when the plan needs heartbeats fed to a health monitor."""
+        return bool(self.dead or self.slow)
+
+    def heartbeats(self, step: int, num_groups: int) -> List[float]:
+        """Synthetic per-group step times for ``step`` (what an external
+        monitor would report): ``inf`` for a dead group past its fault
+        step, ``factor * baseline`` for slow groups, baseline otherwise.
+        Evicted dead groups (``mark_recovered``) drop out of the layout,
+        so the list always matches the CURRENT group count."""
+        t = [self.baseline_s] * num_groups
+        for g, f in self.slow:
+            if g < num_groups and g not in self._recovered:
+                t[g] = f * self.baseline_s
+        for g, s in self.dead:
+            if g in self._recovered or g >= num_groups:
+                continue
+            if step >= s:
+                self._dead_active.add(g)
+            if g in self._dead_active:
+                t[g] = float("inf")
+        return t
+
+    def active_dead(self, step: int) -> Optional[int]:
+        """The (first) dead group whose fault is live at ``step`` —
+        sticky: once triggered it fires at every step (including steps
+        before S replayed by a snapshot-resumed retry) until the engine
+        evicts the group (``mark_recovered``)."""
+        for g, s in self.dead:
+            if g in self._recovered:
+                continue
+            if step >= s or g in self._dead_active:
+                self._dead_active.add(g)
+                return g
+        return None
+
+    def mark_recovered(self, group: int) -> None:
+        """The engine evicted ``group``: its dead/slow faults stop firing
+        (the hardware left the ring; surviving groups re-index)."""
+        self._recovered.add(group)
+
+    def corrupt_fires(self, step: int) -> bool:
+        """Fire-once check: True exactly the first time ``step`` is hit
+        (a retried batch replays the step with a clean wire — the
+        corruption was transient, as on real links)."""
+        if step in self.corrupt and step not in self._corrupt_fired:
+            self._corrupt_fired.add(step)
+            return True
+        return False
+
+
+def parse_fault_plan(spec) -> Optional[ServingFaultPlan]:
+    """CLI/engine entry: None passes through, strings parse, plans are
+    taken as-is."""
+    if spec is None:
+        return None
+    if isinstance(spec, ServingFaultPlan):
+        return spec
+    return ServingFaultPlan.parse(spec)

@@ -13,11 +13,29 @@ Production behaviours implemented (scaled to the container):
   * bounded-latency admission: a batch launches when a geometry bucket is
     full OR when the oldest request has waited ``max_wait_requests``
     queue polls (before this, ``max_wait`` was stored but never read);
-  * straggler adaptation: per-partition step-time EMAs re-plan core sizes
-    (runtime/straggler.py) when imbalance exceeds the threshold;
-  * failure handling: a denoise step that raises re-queues the whole
-    batch (LP state is just (z_t, i) — restartable at step granularity,
-    checkpointed every ``ckpt_every_steps``);
+  * group health: per-LP-group step times feed a
+    ``runtime/health.GroupHealthMonitor`` (heartbeat deadlines with
+    bounded retry-backoff on top of the straggler EMA) — a group that is
+    merely *slow* gets EMA-driven rebalancing / eventual eviction, a
+    group that stops reporting is declared *dead* after its retry budget
+    and proposed for immediate eviction;
+  * failure handling: a denoise step that raises a *recoverable* fault
+    (``runtime/ft.DeviceFailure``, ``runtime/faults.ServingFault``)
+    retries the batch from its last **boundary snapshot** — there is no
+    ``ckpt_every_steps`` wall-clock checkpoint; instead ``lp_denoise``
+    records ``(z, step)`` into a per-batch ``core.DenoiseSnapshot`` at
+    every dim-rotation / codec-segment boundary (exactly where residual
+    codec state re-zeroes, so (z, step) IS the whole restartable state),
+    and a retry resumes there instead of from ``z_T``, losing at most
+    one dim-run of steps.  Any other exception surfaces immediately;
+  * fault injection: ``inject_fault="dead:G@S,slow:GxF,corrupt@S"``
+    (``runtime/faults.ServingFaultPlan``, CLI ``--inject-fault``)
+    scripts group death, synthetic stragglers and one-step wire
+    corruption against the per-step hook for drills and the
+    ``benchmarks/fault_recovery.py`` gate; ``wire_nan_guard`` (default
+    on) arms the halo-wire decode guard that absorbs a NaN/Inf payload
+    by falling back to the rank-local stale slab (bit-identical when
+    every wire message is finite);
   * engine auto-selection + wire codecs: ``lp_impl="auto"`` picks the
     psum engine at K=2 and the halo engine beyond (the comm-model
     break-even, ``core/spmd.select_lp_impl``); ``wire_codec`` squeezes
@@ -42,10 +60,17 @@ Production behaviours implemented (scaled to the container):
     meshes) issues the ppermute rounds before any accumulation so they
     overlap the Phi_m tail;
   * mid-request re-planning: with ``elastic=True`` the per-step hook
-    consults ``StragglerState.propose_group_eviction`` and applies a
-    proposed eviction through ``runtime.elastic.replan_lp_compiler``
-    WHILE a batch is denoising — the compiled-step cache can never
-    serve a stale-geometry entry and codec state resets exactly once.
+    consults ``GroupHealthMonitor.propose`` (dead groups first, then the
+    EMA slow test) and applies a proposed eviction through
+    ``runtime.elastic.replan_lp_compiler`` WHILE a batch is denoising —
+    the compiled-step cache can never serve a stale-geometry entry and
+    codec state resets exactly once.  Mesh-bound engines shrink too:
+    ``launch/mesh.shrink_hybrid_mesh`` rebuilds the ``(M-1, T)`` mesh
+    from the survivors and :meth:`LPServingEngine._build_forward` hands
+    ``replan_lp_compiler`` forward hooks re-bound to it, so the hybrid
+    halo engine evicts mid-request instead of limping to the batch
+    boundary.  A resolved codec schedule is re-derived for the shrunken
+    K (the analytic byte model changed), taking effect next batch.
     The engine cannot time remote LP groups itself: an external
     monitor must feed per-group step times through
     :meth:`LPServingEngine.observe_group_times` (from another thread,
@@ -66,11 +91,14 @@ import numpy as np
 
 from repro.comm.codecs import get_codec
 from repro.configs.base import ArchConfig
-from repro.core import LPStepCompiler, lp_denoise
+from repro.core import DenoiseSnapshot, LPStepCompiler, lp_denoise
 from repro.core.spmd import select_lp_impl
 from repro.diffusion.pipeline import make_guided_step_denoiser
 from repro.diffusion.sampler import FlowMatchEuler
-from repro.runtime.straggler import StragglerState
+from repro.runtime.faults import CorruptingCodec, ServingFault, \
+    parse_fault_plan
+from repro.runtime.ft import DeviceFailure
+from repro.runtime.health import GroupHealthMonitor
 
 
 @dataclasses.dataclass
@@ -93,6 +121,9 @@ class VideoResult:
     batch_wall_s: float
     batch_size: int
     restarts: int = 0
+    # denoise step the last retry resumed from (0 = from z_T / no retry):
+    # together with ``restarts`` this quantifies the work a fault cost
+    resumed_from_step: int = 0
 
 
 class LPServingEngine:
@@ -118,6 +149,9 @@ class LPServingEngine:
         tp_axis: str = "model",
         wire_shard: Optional[bool] = None,
         eager_sends: Optional[bool] = None,
+        inject_fault=None,
+        wire_nan_guard: bool = True,
+        snapshots: bool = True,
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -128,13 +162,24 @@ class LPServingEngine:
         self.max_batch = max_batch
         self.max_wait = max_wait_requests
         self.uniform = uniform
-        self.straggler = StragglerState(num_partitions)
+        self.health = GroupHealthMonitor(num_partitions)
+        # back-compat alias: external monitors (and the elastic tests)
+        # that fed the EMA directly keep working — the health monitor
+        # wraps the very same StragglerState
+        self.straggler = self.health.straggler
         self.elastic = elastic
         self.evictions = 0
         self._queue: List[VideoRequest] = []
         self._polls = 0
         self._enqueued_at: Dict[int, int] = {}       # request_id -> poll no.
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
+        self._fault_plan = parse_fault_plan(inject_fault)
+        self.wire_nan_guard = bool(wire_nan_guard)
+        self.snapshots = bool(snapshots)
+        self.last_steps_lost: Optional[int] = None
+        self._corrupt_active = False
+        self._saved_codec = None
+        self._plan_resolver: Optional[Callable] = None
         self._sampler = FlowMatchEuler(num_steps)
         tp = 1
         if mesh is not None and tp_axis in mesh.axis_names:
@@ -179,11 +224,22 @@ class LPServingEngine:
                 num_blocks=cfg.num_layers,
                 num_steps=num_steps,
             )
-            self.plan = resolve_cli_schedule(
-                codec_schedule, ccfg, self.K, self.r, self._sampler,
-                num_steps, psnr_floor_db=psnr_floor, tp=tp,
-                wire_shard=wire_shard,
-            )
+            # kept re-invocable: an elastic eviction shrinks K, which
+            # changes the analytic byte model the schedule was tuned
+            # against, so _maybe_evict_straggler re-resolves the plan
+            # (closing over the ORIGINAL cli wire_shard tri-state, not
+            # the value the first resolution pinned)
+            wire_shard_cli = wire_shard
+
+            def _resolve_plan(k):
+                return resolve_cli_schedule(
+                    codec_schedule, ccfg, k, self.r, self._sampler,
+                    num_steps, psnr_floor_db=psnr_floor, tp=tp,
+                    wire_shard=wire_shard_cli,
+                )
+
+            self._plan_resolver = _resolve_plan
+            self.plan = self._plan_resolver(self.K)
             if lp_impl == "auto":
                 lp_impl = self.plan.lp_impl
             if set(self.plan.step_codecs) != {"fp32"}:
@@ -231,72 +287,44 @@ class LPServingEngine:
                     f"(mesh={'yes' if mesh is not None else 'no'}, tp={tp})"
                 )
             self.wire_shard = False
-        forward = None
-        forward_factory = None
-        compiler_codec = None
-        if mesh is not None:
-            from repro.core.hybrid import lp_forward_halo_hybrid
-            from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
-
-            if self.lp_impl in ("halo", "halo_hybrid"):
-                codec = self.codec
-                if self.lp_impl == "halo_hybrid":
-                    def halo_fwd(fn, z, plan, axis, **kw):
-                        return lp_forward_halo_hybrid(
-                            fn, z, plan, axis, mesh, lp_axis, tp_axis,
-                            eager_sends=self.eager_sends,
-                            wire_shard=self.wire_shard, **kw)
-                else:
-                    # the plain halo engine composes with extra mesh
-                    # axes; slabs are replicated over tp there too, so
-                    # the wire can still be sharded over it
-                    halo_shard = tp_axis if (self.wire_shard and tp > 1) \
-                        else None
-
-                    def halo_fwd(fn, z, plan, axis, **kw):
-                        return lp_forward_halo(
-                            fn, z, plan, axis, mesh, lp_axis,
-                            eager_sends=self.eager_sends,
-                            shard_axis=halo_shard, **kw)
-                if schedule is not None:
-                    # scheduled: LPStepCompiler asks for a hook per
-                    # segment codec; each bound hook is the same halo
-                    # collective, just encoding with that segment's codec
-                    def forward_factory(seg_codec):
-                        if seg_codec.stateful:
-                            return (lambda fn, z, plan, axis, st:
-                                    halo_fwd(fn, z, plan, axis,
-                                             codec=seg_codec,
-                                             codec_state=st))
-                        return (lambda fn, z, plan, axis:
-                                halo_fwd(fn, z, plan, axis,
-                                         codec=seg_codec))
-                elif codec.stateful:
-                    forward = (lambda fn, z, plan, axis, st:
-                               halo_fwd(fn, z, plan, axis, codec=codec,
-                                        codec_state=st))
-                else:
-                    forward = (lambda fn, z, plan, axis:
-                               halo_fwd(fn, z, plan, axis, codec=codec))
-                if schedule is None:
-                    compiler_codec = codec
-            else:
-                forward = (lambda fn, z, plan, axis:
-                           lp_forward_shard_map(fn, z, plan, axis, mesh,
-                                                lp_axis))
-        elif self.lp_impl in ("halo", "halo_hybrid") and \
-                (codec_active or explicit_halo) and schedule is None:
-            # off-mesh: the single-process mirror of the halo collective
-            # (comm.wire.simulate_halo_forward — LPStepCompiler's codec
-            # default), bit-faithful incl. the codec round-trips.  Only
-            # taken when a codec is active or halo was asked for by name:
-            # with fp32 wires an auto-selected halo has nothing to
-            # simulate and the uniform vmapped engine is the same math
-            # for a fraction of the dispatch work.  A schedule needs no
-            # compiler codec — the per-segment codecs route every step
-            # through the same simulate mirror.
-            compiler_codec = self.codec
-        # else: uniform vmapped engine (psum-equivalent math, no wire)
+        self._lp_axis = lp_axis
+        self._tp_axis = tp_axis
+        self._schedule = schedule
+        # off-mesh halo family runs the single-process simulate mirror
+        # (comm.wire.simulate_halo_forward — LPStepCompiler's codec
+        # default), bit-faithful incl. the codec round-trips.  Only when
+        # a codec is active or halo was asked for by name: with fp32
+        # wires an auto-selected halo has nothing to simulate and the
+        # uniform vmapped engine is the same math for a fraction of the
+        # dispatch work.  A schedule needs no compiler codec — the
+        # per-segment codecs route every step through the same mirror.
+        self._simulate_codec = (
+            self.lp_impl in ("halo", "halo_hybrid")
+            and (codec_active or explicit_halo) and schedule is None
+        )
+        forward, forward_factory, compiler_codec = self._build_forward(mesh)
+        if self._fault_plan is not None and self._fault_plan.corrupt:
+            # the corrupt fault swaps the live wire codec for one step;
+            # that only means something on an engine with a fixed wire
+            if schedule is not None:
+                raise ValueError(
+                    "corrupt@S faults need a fixed wire codec — "
+                    "sigma-scheduled segments own their codecs"
+                )
+            if compiler_codec is None:
+                raise ValueError(
+                    "corrupt@S faults poison the halo wire, but this "
+                    f"engine has none (lp_impl={self.lp_impl!r}); use "
+                    "the halo family with a wire codec"
+                )
+            if compiler_codec.stateful:
+                raise ValueError(
+                    "corrupt@S faults need a stateless wire codec: the "
+                    "residual EF protocol is symmetric (sender and "
+                    "receiver decode the same base payload), so a "
+                    "poisoned decode would desync the sender's own EF "
+                    "state, not just the wire"
+                )
         # Hoisted out of the batch loop: conditioning is traced, so this
         # closure (and every step it compiles) is batch-independent.
         self._guided = make_guided_step_denoiser(dit_forward, params, cfg)
@@ -314,7 +342,88 @@ class LPServingEngine:
             schedule=schedule,
             mesh_shape=None if mesh is None else (self.K, tp),
             wire_shard=self.wire_shard,
+            nan_guard=self.wire_nan_guard,
         )
+
+    # ----------------------------------------------------------- forward
+    def _build_forward(self, mesh):
+        """(Re-)build the engine's forward hook family for ``mesh``.
+
+        Returns ``(forward, forward_factory, compiler_codec)`` in
+        ``LPStepCompiler`` terms.  Factored out of ``__init__`` so
+        elastic mesh-shrink recovery can re-invoke it: after
+        ``launch.mesh.shrink_hybrid_mesh`` drops a dead LP group, the
+        rebuilt ``(M-1, T)`` mesh needs hooks closing over IT, and
+        ``runtime.elastic.replan_lp_compiler`` refuses to change K on a
+        mesh-bound compiler without them.
+
+        Fixed-codec hooks read ``self._compiler.codec`` at trace time
+        (late-bound, not captured) so the one-step ``corrupt@S`` codec
+        swap reaches the mesh-bound wire — the codec name is in the
+        step-cache key, so the swap always keys a distinct entry.
+        """
+        forward = None
+        forward_factory = None
+        compiler_codec = None
+        schedule = self._schedule
+        if mesh is not None:
+            from repro.core.hybrid import lp_forward_halo_hybrid
+            from repro.core.spmd import lp_forward_halo, lp_forward_shard_map
+
+            lp_axis, tp_axis = self._lp_axis, self._tp_axis
+            if self.lp_impl in ("halo", "halo_hybrid"):
+                if self.lp_impl == "halo_hybrid":
+                    def halo_fwd(fn, z, plan, axis, **kw):
+                        return lp_forward_halo_hybrid(
+                            fn, z, plan, axis, mesh, lp_axis, tp_axis,
+                            eager_sends=self.eager_sends,
+                            wire_shard=self.wire_shard,
+                            nan_guard=self.wire_nan_guard, **kw)
+                else:
+                    # the plain halo engine composes with extra mesh
+                    # axes; slabs are replicated over tp there too, so
+                    # the wire can still be sharded over it
+                    halo_shard = tp_axis if (self.wire_shard and
+                                             self.tp > 1) else None
+
+                    def halo_fwd(fn, z, plan, axis, **kw):
+                        return lp_forward_halo(
+                            fn, z, plan, axis, mesh, lp_axis,
+                            eager_sends=self.eager_sends,
+                            shard_axis=halo_shard,
+                            nan_guard=self.wire_nan_guard, **kw)
+                if schedule is not None:
+                    # scheduled: LPStepCompiler asks for a hook per
+                    # segment codec; each bound hook is the same halo
+                    # collective, just encoding with that segment's codec
+                    def forward_factory(seg_codec):
+                        if seg_codec.stateful:
+                            return (lambda fn, z, plan, axis, st:
+                                    halo_fwd(fn, z, plan, axis,
+                                             codec=seg_codec,
+                                             codec_state=st))
+                        return (lambda fn, z, plan, axis:
+                                halo_fwd(fn, z, plan, axis,
+                                         codec=seg_codec))
+                elif self.codec.stateful:
+                    forward = (lambda fn, z, plan, axis, st:
+                               halo_fwd(fn, z, plan, axis,
+                                        codec=self._compiler.codec,
+                                        codec_state=st))
+                else:
+                    forward = (lambda fn, z, plan, axis:
+                               halo_fwd(fn, z, plan, axis,
+                                        codec=self._compiler.codec))
+                if schedule is None:
+                    compiler_codec = self.codec
+            else:
+                forward = (lambda fn, z, plan, axis:
+                           lp_forward_shard_map(fn, z, plan, axis, mesh,
+                                                lp_axis))
+        elif self._simulate_codec:
+            compiler_codec = self.codec
+        # else: uniform vmapped engine (psum-equivalent math, no wire)
+        return forward, forward_factory, compiler_codec
 
     # ------------------------------------------------------------- queue
     def submit(self, req: VideoRequest) -> None:
@@ -360,56 +469,139 @@ class LPServingEngine:
 
     # ------------------------------------------------------------ serving
     def observe_group_times(self, step_times) -> None:
-        """Feed per-LP-group step times (seconds) into the straggler
-        EMA.  This is the ``elastic=True`` data source: the engine
-        runs single-process and cannot time remote groups, so an
-        external monitor (per-host heartbeats, profiler stream) calls
-        this — any thread, any time; the elastic step hook consumes
-        the EMA at the next step boundary."""
-        self.straggler.observe(step_times)
+        """Feed per-LP-group step times (seconds) into the health
+        monitor (heartbeat deadlines + the straggler EMA).  This is the
+        ``elastic=True`` data source: the engine runs single-process and
+        cannot time remote groups, so an external monitor (per-host
+        heartbeats, profiler stream) calls this — any thread, any time;
+        the elastic step hook consumes the verdicts at the next step
+        boundary.  Pass ``None``/``inf`` for a group that failed to
+        report: enough missed rounds declare it dead."""
+        self.health.observe(step_times)
+
+    def _replan_schedule(self) -> None:
+        """Post-eviction: re-resolve the codec schedule at the new K.
+
+        The schedule was tuned against the analytic byte model of the
+        OLD partition count; keeping it would mis-price every remaining
+        segment (the stale-plan bug this fixes: ``self.K`` shrank but
+        ``self.plan`` never followed).  The re-resolved schedule is
+        installed on the shared compiler and takes effect at the next
+        batch — the in-flight denoise keeps its resolved segment layout,
+        which stays valid because hooks bind per segment codec."""
+        if self._plan_resolver is None:
+            return
+        self.plan = self._plan_resolver(self.K)
+        new_sched = self.plan.schedule
+        if new_sched is not None and \
+                set(self.plan.step_codecs) != {"fp32"}:
+            from repro.policy.schedule import parse_schedule
+
+            self._schedule = parse_schedule(new_sched)
+            self._compiler.schedule = self._schedule
 
     def _maybe_evict_straggler(self) -> None:
-        """Per-step elastic hook: apply a straggler-group eviction
-        proposal WHILE a batch is denoising.
+        """Per-step elastic hook: apply a group-eviction proposal (dead
+        group first, straggler EMA second) WHILE a batch is denoising.
 
-        ``StragglerState.propose_group_eviction`` fires when one LP
-        group's step-time EMA is far beyond the median (dying host,
-        broken link); ``replan_lp_compiler`` retargets the live compiler
-        — full geometry in the step-cache key, codec state reset exactly
-        once — and the in-flight ``lp_denoise`` loop picks up the new
-        plan at the next step boundary.  Mesh-bound compilers are
-        skipped: their forward hooks close over a Mesh whose lp axis
-        cannot shrink mid-request; those engines re-plan between
-        requests instead (``replan_lp_compiler`` would raise, and a
-        half-applied eviction is worse than a slow straggler).
-        """
-        proposal = self.straggler.propose_group_eviction((self.K, self.tp))
-        if proposal is None or self.mesh is not None:
+        ``GroupHealthMonitor.propose`` fires when a group exhausted its
+        heartbeat retry budget (dead) or its step-time EMA is far beyond
+        the median (slow: dying host, broken link);
+        ``replan_lp_compiler`` retargets the live compiler — full
+        geometry in the step-cache key, codec state reset exactly once —
+        and the in-flight ``lp_denoise`` loop picks up the new plan at
+        the next step boundary.  Mesh-bound compilers shrink too:
+        ``shrink_hybrid_mesh`` rebuilds the ``(M-1, T)`` mesh from the
+        survivors and :meth:`_build_forward` supplies hooks re-bound to
+        it, which ``replan_lp_compiler`` requires before changing K on a
+        mesh-bound compiler.  A resolved codec schedule is re-derived
+        for the shrunken K (:meth:`_replan_schedule`)."""
+        proposal = self.health.propose((self.K, self.tp))
+        if proposal is None:
             return
         from repro.runtime.elastic import replan_lp_compiler
 
-        evicted, new_shape = proposal
-        if replan_lp_compiler(self._compiler, new_shape):
-            self.straggler.evict(evicted)
+        evicted, new_shape = proposal.group, proposal.new_mesh_shape
+        forward = forward_factory = None
+        new_mesh = self.mesh
+        if self.mesh is not None:
+            from repro.launch.mesh import shrink_hybrid_mesh
+
+            new_mesh = shrink_hybrid_mesh(self.mesh, evicted, self.tp)
+            forward, forward_factory, _ = self._build_forward(new_mesh)
+        if replan_lp_compiler(self._compiler, new_shape, forward=forward,
+                              forward_factory=forward_factory):
+            self.health.evict(evicted)
             self.K = new_shape[0]
+            self.mesh = new_mesh
             self.evictions += 1
+            if self._fault_plan is not None:
+                # the dead hardware left the ring: its scripted faults
+                # stop firing and the survivors re-index
+                self._fault_plan.mark_recovered(evicted)
+            self._replan_schedule()
+
+    # ------------------------------------------------------ fault drills
+    def _activate_corrupt(self) -> None:
+        """Swap the live wire codec for its NaN-decoding twin for ONE
+        step.  The codec name is part of the step-cache key, so this
+        keys (and compiles) a distinct entry — the healthy executable is
+        never poisoned and is re-hit verbatim after the restore."""
+        comp = self._compiler
+        self._saved_codec = comp.codec
+        comp.codec = CorruptingCodec.wrap(comp.codec)
+        self._corrupt_active = True
+
+    def _restore_codec(self) -> None:
+        if self._corrupt_active:
+            self._compiler.codec = self._saved_codec
+            self._corrupt_active = False
 
     def _step_hook(self) -> Optional[Callable[[int], None]]:
         """Compose the per-step hooks.  A hook disables scan fusion, so
         return None (fused fast path) unless a fault injector is
-        registered or elastic mid-request re-planning is on."""
-        if self._step_fault is None and not self.elastic:
+        registered or elastic mid-request re-planning is on.
+
+        Hook order is load-bearing for recovery: scripted heartbeats
+        feed the health monitor FIRST, the eviction attempt runs SECOND,
+        and the dead-group raise comes LAST — so the step on which the
+        monitor finally declares the group dead evicts it (marking the
+        fault recovered) instead of burning another restart."""
+        if self._step_fault is None and not self.elastic and \
+                self._fault_plan is None:
             return None
 
         def hook(i: int) -> None:
+            plan = self._fault_plan
+            if plan is not None:
+                if self._corrupt_active:
+                    # the corrupt step is behind us: restore the wire
+                    self._restore_codec()
+                if plan.touches_health:
+                    self.health.observe(plan.heartbeats(i, self.K))
+                if plan.corrupt_fires(i):
+                    self._activate_corrupt()
             if self._step_fault is not None:
                 self._step_fault(i)
             if self.elastic:
                 self._maybe_evict_straggler()
+            if plan is not None:
+                dead = plan.active_dead(i)
+                if dead is not None:
+                    # the group is gone and not (yet) evicted: the halo
+                    # collective would hang on it — surface a
+                    # recoverable fault so run() retries from the last
+                    # boundary snapshot
+                    raise ServingFault(
+                        f"LP group {dead} stopped heartbeating "
+                        f"(denoise step {i})", step=i)
 
         return hook
 
-    def _denoise_batch(self, reqs: List[VideoRequest]) -> List[VideoResult]:
+    def _denoise_batch(
+        self, reqs: List[VideoRequest],
+        snapshot: Optional[DenoiseSnapshot] = None,
+    ) -> List[VideoResult]:
         t0 = time.time()
         shape = reqs[0].latent_shape
         ctx = jnp.concatenate([r.context for r in reqs], axis=0)
@@ -421,12 +613,18 @@ class LPServingEngine:
             for k in keys
         ], axis=0)
 
-        z0 = lp_denoise(
-            None, z_T, self._sampler, self.num_steps, self.K, self.r,
-            self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
-            extras=(ctx, null_ctx, guidance), compiler=self._compiler,
-            step_hook=self._step_hook(),
-        )
+        try:
+            z0 = lp_denoise(
+                None, z_T, self._sampler, self.num_steps, self.K, self.r,
+                self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
+                extras=(ctx, null_ctx, guidance), compiler=self._compiler,
+                step_hook=self._step_hook(), snapshot=snapshot,
+            )
+        finally:
+            # a corrupt-wire drill must never outlive its batch (the
+            # swap is one-step; a fault between swap and restore would
+            # otherwise leak the corrupting codec into the next batch)
+            self._restore_codec()
         wall = time.time() - t0
         return [
             VideoResult(r.request_id, z0[i : i + 1], self.num_steps,
@@ -436,7 +634,13 @@ class LPServingEngine:
 
     def run(self, max_batches: Optional[int] = None,
             max_restarts_per_batch: int = 2) -> List[VideoResult]:
-        """Drain the queue; failed batches re-queue (bounded retries)."""
+        """Drain the queue.  A batch that fails with a *recoverable*
+        fault (``DeviceFailure`` — lost hardware; ``ServingFault`` —
+        group death / injected wire fault) retries from its last
+        boundary snapshot, bounded by ``max_restarts_per_batch``.  Any
+        other exception is a programming/XLA error and surfaces
+        immediately instead of burning restarts on a deterministic
+        failure."""
         out: List[VideoResult] = []
         batches = 0
         while self._queue and (max_batches is None or batches < max_batches):
@@ -445,15 +649,23 @@ class LPServingEngine:
             if not reqs:
                 break
             restarts = 0
+            resumed_from = 0
+            snapshot = DenoiseSnapshot() if self.snapshots else None
             while True:
                 try:
-                    results = self._denoise_batch(reqs)
+                    results = self._denoise_batch(reqs, snapshot)
                     for res in results:
                         res.restarts = restarts
+                        res.resumed_from_step = resumed_from
                     out.extend(results)
                     break
-                except RuntimeError:
+                except (DeviceFailure, ServingFault) as e:
                     restarts += 1
+                    step = getattr(e, "step", None)
+                    if snapshot is not None and step is not None:
+                        self.last_steps_lost = max(
+                            0, int(step) - 1 - snapshot.step)
+                    resumed_from = 0 if snapshot is None else snapshot.step
                     if restarts > max_restarts_per_batch:
                         raise
             batches += 1

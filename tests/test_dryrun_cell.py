@@ -88,6 +88,38 @@ def test_dryrun_codec_schedule_lowers_one_cell_per_segment(tmp_path):
 
 
 @pytest.mark.slow
+def test_dryrun_corrupt_fault_drill(tmp_path):
+    """--inject-fault corrupt@S lowers the vdm cell with the
+    NaN-poisoning wire wrapper and the decode guard auto-armed;
+    dead/slow components are recorded but leave the lowering alone."""
+    out = tmp_path / "rec.json"
+    res = _run(["--arch", "wan21-dit-1.3b", "--shape", "vdm_3s",
+                "--mesh", "3x2", "--lp-impl", "halo_hybrid",
+                "--wire-codec", "int8",
+                "--inject-fault", "dead:1@3,corrupt@2",
+                "--out", str(out)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK   wan21-dit-1.3b x vdm_3s [3x2]" in res.stdout
+    rec = json.load(open(out))[0]
+    assert rec["fault_drill"] == "dead:1@3,corrupt@2"
+    assert rec["wire_nan_guard"] is True
+    # the guarded halo wire still lowers to the explicit schedule
+    assert rec["collective_counts"].get("collective-permute", 0) >= 1
+    assert rec["collective_counts"].get("all-gather", 0) >= 1
+
+
+@pytest.mark.slow
+def test_dryrun_corrupt_needs_coded_halo_wire(tmp_path):
+    """corrupt@S poisons the *compressed* wire — an uncoded cell must
+    fail loudly instead of lowering an unguarded drill."""
+    res = _run(["--arch", "wan21-dit-1.3b", "--shape", "vdm_3s",
+                "--mesh", "3x2", "--lp-impl", "halo_hybrid",
+                "--inject-fault", "corrupt@2"])
+    assert "FAIL" in res.stdout
+    assert "needs a halo-family" in res.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_skip_rule(tmp_path):
     res = _run(["--arch", "granite-3-2b", "--shape", "long_500k"])
     assert res.returncode == 0

@@ -1,0 +1,411 @@
+"""Elastic fault recovery: group health, fault injection, NaN-guarded
+wire, boundary-snapshot resume, and mesh-shrink re-planning."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.comm import get_codec
+from repro.comm.wire import simulate_halo_forward
+from repro.configs import get_config
+from repro.core import plan_uniform
+from repro.models import dit, frontends
+from repro.runtime.faults import (
+    CorruptingCodec,
+    ServingFault,
+    ServingFaultPlan,
+    parse_fault_plan,
+)
+from repro.runtime.health import GroupHealthMonitor
+from repro.runtime.straggler import StragglerState
+from repro.serving.engine import LPServingEngine, VideoRequest
+
+
+# ------------------------------------------------------- health monitor
+def test_health_monitor_declares_death_after_miss_budget():
+    mon = GroupHealthMonitor(3, max_misses=2, default_deadline_s=10.0)
+    for _ in range(3):
+        mon.observe([1.0, 1.0, 1.0])          # healthy history
+    assert mon.dead_groups() == []
+    mon.observe([1.0, None, 1.0])             # miss 1
+    mon.observe([1.0, float("inf"), 1.0])     # miss 2 (budget boundary)
+    assert mon.dead_groups() == []            # retries not yet exhausted
+    mon.observe([1.0, float("nan"), 1.0])     # miss 3 > max_misses
+    assert mon.dead_groups() == [1]
+    prop = mon.propose((3, 2))
+    assert prop is not None and prop.reason == "dead"
+    assert prop.group == 1 and prop.new_mesh_shape == (2, 2)
+
+
+def test_health_monitor_on_time_round_clears_misses():
+    mon = GroupHealthMonitor(2, max_misses=2, default_deadline_s=10.0)
+    mon.observe([1.0, None])
+    mon.observe([1.0, None])
+    assert mon._misses[1] == 2
+    mon.observe([1.0, 1.0])                   # transient hiccup cleared
+    assert mon._misses[1] == 0 and mon.dead_groups() == []
+
+
+def test_health_monitor_backoff_extends_deadline():
+    mon = GroupHealthMonitor(2, backoff=2.0, max_misses=3)
+    assert mon.deadline_s(1) == mon.default_deadline_s  # no EMA history
+    for _ in range(3):
+        mon.observe([1.0, 1.0])               # EMA-based deadline now
+    d0 = mon.deadline_s(1)
+    assert d0 == pytest.approx(mon.deadline_factor * 1.0)
+    mon.observe([1.0, None])
+    assert mon.deadline_s(1) == pytest.approx(d0 * 2.0)
+    mon.observe([1.0, None])
+    assert mon.deadline_s(1) == pytest.approx(d0 * 4.0)
+    assert mon.deadline_s(0) == pytest.approx(d0)  # per-group backoff
+
+
+def test_health_monitor_miss_does_not_trip_slow_ema():
+    """A missed heartbeat is judged by the retry counter, NOT the EMA:
+    before the miss budget runs out the straggler's 2x-median slow test
+    must not fire off the (infinite) reading."""
+    mon = GroupHealthMonitor(4, max_misses=3, default_deadline_s=10.0)
+    for _ in range(3):
+        mon.observe([1.0, 1.0, 1.0, 1.0])
+    mon.observe([1.0, 1.0, 1.0, None])        # miss 1 of 3
+    assert mon.propose((4, 1)) is None        # neither dead nor "slow"
+
+
+def test_health_monitor_dead_takes_precedence_over_slow():
+    # 3x the median: beyond the 2x slow-eviction threshold but inside
+    # the 4x heartbeat deadline, so the EMA (not the miss counter) flags
+    # this group
+    mon = GroupHealthMonitor(4, max_misses=0, default_deadline_s=10.0)
+    for _ in range(5):
+        mon.observe([1.0, 3.0, 1.0, 1.0])     # group 1 is a straggler
+    assert mon.propose((4, 1)).reason == "slow"
+    mon.observe([1.0, 3.0, 1.0, None])        # group 3 dies outright
+    prop = mon.propose((4, 1))
+    assert prop.reason == "dead" and prop.group == 3
+
+
+def test_health_monitor_refuses_eviction_at_two_groups():
+    mon = GroupHealthMonitor(2, max_misses=0, default_deadline_s=10.0)
+    mon.observe([1.0, None])
+    assert mon.dead_groups() == [1]
+    assert mon.propose((2, 4)) is None        # LP floor: 2 groups
+
+
+def test_health_monitor_evict_remaps_indices():
+    mon = GroupHealthMonitor(4, max_misses=0, default_deadline_s=10.0)
+    mon.observe([1.0, 1.0, None, None])
+    assert mon.dead_groups() == [2, 3]
+    mon.evict(2)
+    assert mon.num_groups == 3
+    assert mon.dead_groups() == [2]           # old index 3 slid down
+    assert mon.straggler.num_partitions == 3
+    assert len(mon._misses) == 3
+    with pytest.raises(ValueError, match="not in"):
+        mon.evict(3)
+
+
+def test_health_monitor_restarts_on_layout_change():
+    mon = GroupHealthMonitor(3, max_misses=0, default_deadline_s=10.0)
+    mon.observe([1.0, None, 1.0])
+    assert mon.dead_groups() == [1]
+    mon.observe([1.0, 1.0, 1.0, 1.0])         # external layout change
+    assert mon.num_groups == 4
+    assert mon.dead_groups() == [] and not mon._misses.any()
+
+
+# ------------------------------------------- straggler EMA edge cases
+def test_straggler_observe_restarts_ema_on_group_count_change():
+    st = StragglerState(3)
+    for _ in range(4):
+        st.observe([1.0, 1.0, 5.0])
+    st.observe([2.0, 2.0])                    # layout changed mid-flight
+    assert st.num_partitions == 2
+    np.testing.assert_allclose(st._ema, [2.0, 2.0])  # no stale history
+
+
+def test_straggler_refuses_eviction_at_two_groups():
+    st = StragglerState(2)
+    for _ in range(5):
+        st.observe([1.0, 99.0])
+    assert st.propose_group_eviction((2, 2)) is None
+    assert StragglerState(4).propose_group_eviction((4, 1)) is None  # no EMA
+
+
+def test_straggler_evict_remaps_ema_rows():
+    st = StragglerState(4)
+    st.observe([1.0, 2.0, 3.0, 9.0])
+    st.evict(1)
+    assert st.num_partitions == 3
+    np.testing.assert_allclose(st._ema, [1.0, 3.0, 9.0])
+    assert st.slowest == 2                    # old group 3, new index 2
+    ev = st.propose_group_eviction((3, 1))
+    assert ev == (2, (2, 1))
+    with pytest.raises(ValueError, match="not in"):
+        st.evict(3)
+
+
+# ----------------------------------------------------- fault-plan specs
+def test_fault_plan_parses_and_describes():
+    plan = parse_fault_plan("dead:1@4, slow:0x2.5, corrupt@3")
+    assert plan.dead == ((1, 4),)
+    assert plan.slow == ((0, 2.5),)
+    assert plan.corrupt == (3,)
+    assert plan.describe() == "dead:1@4,slow:0x2.5,corrupt@3"
+    assert plan.touches_health
+    assert parse_fault_plan(None) is None
+    assert parse_fault_plan(plan) is plan
+    assert not parse_fault_plan("corrupt@2").touches_health
+    with pytest.raises(ValueError, match="bad fault spec"):
+        parse_fault_plan("explode@7")
+
+
+def test_fault_plan_dead_is_sticky_until_recovered():
+    """A host that died at step S stays dead when a snapshot-resumed
+    retry replays earlier steps — otherwise the replayed healthy
+    heartbeats would reset the monitor's miss budget forever."""
+    plan = ServingFaultPlan.parse("dead:1@4")
+    assert plan.active_dead(3) is None
+    assert plan.heartbeats(3, 3) == [1.0, 1.0, 1.0]
+    assert plan.active_dead(4) == 1           # fault triggers
+    assert plan.active_dead(2) == 1           # sticky on replayed steps
+    assert plan.heartbeats(2, 3)[1] == float("inf")
+    plan.mark_recovered(1)                    # engine evicted the group
+    assert plan.active_dead(9) is None
+    assert plan.heartbeats(9, 2) == [1.0, 1.0]
+
+
+def test_fault_plan_corrupt_fires_once():
+    plan = ServingFaultPlan.parse("corrupt@2")
+    assert not plan.corrupt_fires(1)
+    assert plan.corrupt_fires(2)
+    assert not plan.corrupt_fires(2)          # retried step: clean wire
+
+
+# ------------------------------------------------- NaN-guarded wire
+def _simulate(codec, nan_guard):
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(26, 3, 2)).astype(np.float32))
+    plan = plan_uniform(26, 2, 3, 0.5)
+    den = lambda x: jnp.tanh(x) * 0.5 + x
+    return simulate_halo_forward(den, z, plan, 0, codec,
+                                 nan_guard=nan_guard)
+
+
+def test_corrupting_codec_nan_guard_absorbs_poisoned_wire():
+    corrupt = CorruptingCodec.wrap(get_codec("int8"))
+    assert corrupt.name == "int8-corrupt" and not corrupt.stateful
+    assert not np.isfinite(np.asarray(_simulate(corrupt, False))).all()
+    assert np.isfinite(np.asarray(_simulate(corrupt, True))).all()
+    # the guard is elementwise-only: finite wires are bit-identical
+    clean = get_codec("int8")
+    np.testing.assert_array_equal(np.asarray(_simulate(clean, False)),
+                                  np.asarray(_simulate(clean, True)))
+    with pytest.raises(ValueError, match="stateless"):
+        CorruptingCodec.wrap(get_codec("int8-residual"))
+
+
+# --------------------------------------------------- engine integration
+def _engine(num_steps=3, **kw):
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    return cfg, LPServingEngine(fwd, params, cfg, overlap_ratio=0.5,
+                                num_steps=num_steps, max_batch=1, **kw)
+
+
+def _req(cfg, i, shape=(4, 8, 12)):
+    return VideoRequest(
+        request_id=i,
+        context=frontends.text_context(jax.random.PRNGKey(100 + i), 1, cfg),
+        latent_shape=shape,
+        seed=i,
+    )
+
+
+def test_engine_corrupt_drill_is_absorbed_and_restored():
+    cfg, eng = _engine(num_partitions=2, wire_codec="int8",
+                       inject_fault="corrupt@2")
+    eng.submit(_req(cfg, 0))
+    res = eng.run()[0]
+    assert np.isfinite(np.asarray(res.latent, np.float32)).all()
+    assert res.restarts == 0                  # guard absorbed, no retry
+    assert eng._compiler.codec.name == "int8"  # swap was restored
+    # the corrupt step keyed (and compiled) its own distinct cache entry
+    names = {k[6] for k in eng._compiler._cache}
+    assert names == {"int8", "int8-corrupt"}
+
+
+def test_engine_corrupt_drill_unguarded_propagates_nan():
+    """Negative control: with the decode guard disarmed the poisoned
+    wire must reach the output — proving the guard is load-bearing."""
+    cfg, eng = _engine(num_partitions=2, wire_codec="int8",
+                       inject_fault="corrupt@2", wire_nan_guard=False)
+    eng.submit(_req(cfg, 0))
+    res = eng.run()[0]
+    assert not np.isfinite(np.asarray(res.latent, np.float32)).all()
+
+
+def test_engine_corrupt_fault_config_errors():
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fwd = lambda p, z, t, c, m: dit.forward(p, z, t, c, m)
+    with pytest.raises(ValueError, match="fixed wire codec"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=2,
+                        codec_schedule="auto", inject_fault="corrupt@1")
+    with pytest.raises(ValueError, match="no wire|has none"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=2,
+                        inject_fault="corrupt@1")   # psum engine, no wire
+    with pytest.raises(ValueError, match="stateless"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2, num_steps=2,
+                        wire_codec="int8-residual",
+                        inject_fault="corrupt@1")
+
+
+def test_engine_dead_group_evicted_and_batch_resumed():
+    """The scripted death: step hook raises ServingFault while the
+    monitor's retry budget holds, run() resumes from the boundary
+    snapshot, and the round that exhausts the budget evicts the group
+    BEFORE the raise — so the final attempt completes on K-1 groups."""
+    cfg, eng = _engine(num_steps=3, num_partitions=4, elastic=True,
+                       wire_codec="int8", inject_fault="dead:3@2")
+    eng.submit(_req(cfg, 0, shape=(8, 8, 12)))
+    res = eng.run()[0]
+    assert eng.evictions == 1
+    assert eng.K == 3 and eng._compiler.num_partitions == 3
+    assert eng.health.num_groups == 3
+    assert res.restarts == 2                  # max_misses=2 retry rounds
+    assert res.resumed_from_step == 1         # boundary before the fault
+    assert eng.last_steps_lost == 0           # every step is a boundary
+    assert np.isfinite(np.asarray(res.latent, np.float32)).all()
+
+
+def test_engine_dead_group_without_elastic_exhausts_restarts():
+    cfg, eng = _engine(num_steps=3, num_partitions=4, elastic=False,
+                       wire_codec="int8", inject_fault="dead:3@2")
+    eng.submit(_req(cfg, 0, shape=(8, 8, 12)))
+    with pytest.raises(ServingFault, match="stopped heartbeating"):
+        eng.run()
+    assert eng.evictions == 0
+
+
+def test_engine_replan_refreshes_codec_schedule_after_eviction():
+    """Stale-plan regression: an eviction shrinks K, so the resolved
+    codec schedule (tuned against K's analytic byte model) must be
+    re-resolved — before this fix ``self.K`` changed but ``self.plan``
+    kept pricing the old ring."""
+    cfg, eng = _engine(num_steps=3, num_partitions=4, elastic=True,
+                       codec_schedule="auto")
+    plan_before = eng.plan
+    for _ in range(5):
+        eng.straggler.observe([1.0, 1.0, 1.0, 9.0])
+    eng.submit(_req(cfg, 0, shape=(8, 8, 12)))
+    eng.run()
+    assert eng.evictions == 1 and eng.K == 3
+    assert eng.plan is not plan_before        # plan followed the ring
+    # and it matches what a fresh K=3 engine would resolve
+    cfg2, eng2 = _engine(num_steps=3, num_partitions=3,
+                         codec_schedule="auto")
+    assert eng.plan.step_codecs == eng2.plan.step_codecs
+    assert eng.plan.schedule.spec == eng2.plan.schedule.spec
+    assert eng.plan.wire_bytes == eng2.plan.wire_bytes
+    assert eng.plan.wire_bytes != plan_before.wire_bytes  # K=4 pricing gone
+
+
+# --------------------------------------------------- multi-device (slow)
+SHRINK_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit, frontends
+    from repro.launch.mesh import make_hybrid_mesh, shrink_hybrid_mesh
+    from repro.serving.engine import LPServingEngine, VideoRequest
+
+    # ---- unit: the evicted group's device row leaves the mesh
+    mesh4 = make_hybrid_mesh(4, 2)
+    m3 = shrink_hybrid_mesh(mesh4, 1, 2)
+    assert np.asarray(m3.devices).shape == (3, 2)
+    want = np.delete(np.asarray(mesh4.devices), 1, axis=0)
+    got = np.asarray(m3.devices)
+    assert [d.id for d in got.ravel()] == [d.id for d in want.ravel()]
+    assert m3.axis_names == mesh4.axis_names
+    m2 = shrink_hybrid_mesh(m3, 0)            # (3,2) -> (2,2): still legal
+    assert np.asarray(m2.devices).shape == (2, 2)
+    try:
+        shrink_hybrid_mesh(m2, 0)             # 2 groups is the LP floor
+        raise SystemExit("shrink below 2 LP groups must raise")
+    except ValueError:
+        pass
+    try:
+        shrink_hybrid_mesh(mesh4, 1, 4)
+        raise SystemExit("tp mismatch must raise")
+    except ValueError:
+        pass
+    print("SHRINK-OK")
+
+    # ---- end-to-end: mesh-bound engine survives a mid-denoise death
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    mesh = make_hybrid_mesh(3, 2)
+    eng = LPServingEngine(
+        fwd, params, cfg, num_partitions=3, overlap_ratio=0.5,
+        num_steps=4, max_batch=1, elastic=True,
+        wire_codec="int8-residual", mesh=mesh, lp_impl="halo_hybrid",
+        inject_fault="dead:1@3",
+    )
+    req = VideoRequest(
+        request_id=0,
+        context=frontends.text_context(jax.random.PRNGKey(1), 1, cfg),
+        latent_shape=(8, 8, 12), seed=0,
+    )
+    eng.submit(req)
+    res = eng.run()[0]
+    assert eng.evictions == 1, eng.evictions
+    assert eng.K == 2 and eng._compiler.num_partitions == 2
+    assert eng._compiler.mesh_shape == (2, 2), eng._compiler.mesh_shape
+    assert np.asarray(eng.mesh.devices).shape == (2, 2)
+    assert res.restarts >= 1 and res.resumed_from_step >= 1
+    assert eng.last_steps_lost == 0, eng.last_steps_lost
+    assert np.isfinite(np.asarray(res.latent, np.float32)).all()
+    # the shrunken engine keeps serving: next batch, no new evictions
+    eng.submit(VideoRequest(
+        request_id=1,
+        context=frontends.text_context(jax.random.PRNGKey(2), 1, cfg),
+        latent_shape=(8, 8, 12), seed=1,
+    ))
+    res2 = eng.run()[0]
+    assert eng.evictions == 1 and res2.restarts == 0
+    assert np.isfinite(np.asarray(res2.latent, np.float32)).all()
+    print("RECOVERY-OK", res.restarts, res.resumed_from_step)
+    """
+)
+
+
+@pytest.mark.slow
+def test_mesh_shrink_recovery_end_to_end():
+    res = subprocess.run(
+        [sys.executable, "-c", SHRINK_SCRIPT],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+        timeout=580,
+    )
+    assert res.returncode == 0, f"stdout={res.stdout}\nstderr={res.stderr}"
+    assert "SHRINK-OK" in res.stdout and "RECOVERY-OK" in res.stdout

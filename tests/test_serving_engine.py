@@ -7,6 +7,8 @@ import pytest
 from repro import models
 from repro.configs import get_config
 from repro.models import dit, frontends
+from repro.runtime.faults import ServingFault
+from repro.runtime.ft import DeviceFailure
 from repro.serving.engine import LPServingEngine, VideoRequest
 
 
@@ -63,12 +65,71 @@ def test_engine_requeues_failed_batch():
     def fault(step):
         if step == 2 and fired["n"] == 0:
             fired["n"] += 1
-            raise RuntimeError("injected LP group failure")
+            raise ServingFault("injected LP group failure", step=step)
 
     eng._step_fault = fault
     results = eng.run()
     assert len(results) == 1 and results[0].restarts == 1
     assert np.isfinite(np.asarray(results[0].latent, np.float32)).all()
+
+
+def test_engine_retry_is_narrowed_to_recoverable_faults():
+    """The retry loop must only catch DeviceFailure/ServingFault — a bare
+    RuntimeError (XLA error, programming bug) is deterministic and must
+    surface immediately instead of burning the restart budget."""
+    cfg, eng = _engine()
+    eng.submit(_req(cfg, 0))
+    calls = {"n": 0}
+
+    def bug(step):
+        if step == 2:
+            calls["n"] += 1
+            raise RuntimeError("not a serving fault")
+
+    eng._step_fault = bug
+    with pytest.raises(RuntimeError, match="not a serving fault"):
+        eng.run()
+    assert calls["n"] == 1  # surfaced on first occurrence, no retries
+
+    # DeviceFailure (lost hardware) stays retryable
+    cfg2, eng2 = _engine()
+    eng2.submit(_req(cfg2, 0))
+    fired = {"n": 0}
+
+    def dev_fault(step):
+        if step == 1 and fired["n"] == 0:
+            fired["n"] += 1
+            raise DeviceFailure("host fell out of the ring")
+
+    eng2._step_fault = dev_fault
+    results = eng2.run()
+    assert len(results) == 1 and results[0].restarts == 1
+
+
+def test_engine_retry_resumes_from_boundary_snapshot():
+    """A recoverable fault at step s resumes from the last dim-rotation
+    boundary, not from z_T: with a 3-dim latent every step is its own
+    dim-run, so the retry re-executes ONLY the faulted step and the
+    result matches a fault-free serve bit-for-bit."""
+    cfg, eng = _engine(num_steps=3)
+    eng.submit(_req(cfg, 0))
+    clean = eng.run()[0].latent
+
+    cfg2, eng2 = _engine(num_steps=3)
+    eng2.submit(_req(cfg2, 0))
+    fired = {"n": 0}
+
+    def fault(step):
+        if step == 3 and fired["n"] == 0:
+            fired["n"] += 1
+            raise ServingFault("late fault", step=step)
+
+    eng2._step_fault = fault
+    res = eng2.run()[0]
+    assert res.restarts == 1
+    assert res.resumed_from_step == 2      # boundary right before step 3
+    assert eng2.last_steps_lost == 0       # nothing beyond the boundary
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(res.latent))
 
 
 def test_engine_reuses_compiled_steps_across_batches():
