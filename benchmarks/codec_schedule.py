@@ -28,7 +28,6 @@ import json
 import subprocess
 import sys
 import textwrap
-import time
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +39,7 @@ from repro.diffusion import FlowMatchEuler
 from repro.policy import auto_plan
 
 from .common import divergence, reduced_dit_denoiser
+from repro.obs.clock import perf_s
 
 STEPS = 6
 K = 4
@@ -153,10 +153,10 @@ def run(print_csv=True, measure_hlo=True):
 
         jax.block_until_ready(loop())          # compile
         compiles = comp.compiles
-        t0 = time.perf_counter()
+        t0 = perf_s()
         z0 = loop()
         jax.block_until_ready(z0)
-        step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+        step_ms = (perf_s() - t0) / STEPS * 1e3
         outs[name] = z0
         div = ({"rel_l2": 0.0, "psnr_db": float("inf")} if name == "fp32"
                else divergence(z0, outs["fp32"]))

@@ -1,8 +1,6 @@
 """Shared benchmark utilities: timing, reduced-DiT setup, divergence."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,16 +10,17 @@ from repro.configs import get_config
 from repro.diffusion import FlowMatchEuler, generate_centralized, generate_lp
 from repro.diffusion.pipeline import make_guided_denoiser
 from repro.models import dit, frontends
+from repro.obs.clock import perf_s
 
 
 def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    t0 = perf_s()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    return (perf_s() - t0) / iters * 1e6
 
 
 def reduced_dit_denoiser(seed: int = 0, latent=(6, 8, 12), guidance=3.0):

@@ -1,0 +1,123 @@
+"""Flight-recorder overhead gate -> BENCH_obs_overhead.json.
+
+The observability invariant (docs/observability.md): attaching a
+``repro.obs.FlightRecorder`` to ``lp_denoise`` must cost <= 3% step
+latency and exactly 0 extra XLA compiles — the recorder is host state
+and never enters ``LPStepCompiler``'s cache key.
+
+Method: one shared compiler on the reduced WAN DiT, warmed bare; then
+min-of-N full denoise loops without and with a recorder on the SAME
+compiler.  min() is robust to scheduler noise; any compile the recorder
+caused would show up in ``compiler.compiles`` (and dwarf the 3% gate).
+The instrumented run's trace + metrics snapshots are written alongside
+the JSON for CI artifact upload.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+from repro.core import LPStepCompiler, lp_denoise
+from repro.diffusion import FlowMatchEuler
+from repro.obs import FlightRecorder, perf_s, validate_trace
+
+from .common import reduced_dit_denoiser
+
+STEPS = 6
+K = 2
+R = 0.5
+ITERS = 5
+OUT_JSON = "BENCH_obs_overhead.json"
+OUT_TRACE = "obs_trace.json"
+OUT_METRICS = "obs_metrics.prom"
+MAX_OVERHEAD_PCT = 3.0
+
+
+def run(print_csv=True):
+    den, z_T, cfg = reduced_dit_denoiser(0, latent=(6, 8, 12))
+    sampler = FlowMatchEuler(STEPS)
+    import jax.numpy as jnp
+
+    def den_fast(w, t):
+        tv = jnp.full((w.shape[0],), t, jnp.float32)
+        return den(w, tv)
+
+    comp = LPStepCompiler(den_fast, sampler.update, K, R, cfg.patch_sizes,
+                          (1, 2, 3), uniform=True)
+
+    def loop(recorder=None):
+        return lp_denoise(None, z_T, sampler, STEPS, K, R, cfg.patch_sizes,
+                          (1, 2, 3), uniform=True, compiler=comp,
+                          recorder=recorder)
+
+    jax.block_until_ready(loop())  # warm: compiles the per-dim steps
+    compiles_warm = comp.compiles
+
+    bare_s = []
+    for _ in range(ITERS):
+        t0 = perf_s()
+        jax.block_until_ready(loop())
+        bare_s.append(perf_s() - t0)
+    compiles_bare = comp.compiles
+
+    # the gate recorder: full trace + metrics planes on, same compiler
+    rec = FlightRecorder()
+    rec_s = []
+    for _ in range(ITERS):
+        t0 = perf_s()
+        jax.block_until_ready(loop(recorder=rec))
+        rec_s.append(perf_s() - t0)
+    compiles_rec = comp.compiles
+
+    bare_step_ms = min(bare_s) / STEPS * 1e3
+    rec_step_ms = min(rec_s) / STEPS * 1e3
+    overhead_pct = (rec_step_ms - bare_step_ms) / bare_step_ms * 100.0
+    extra_compiles = compiles_rec - compiles_bare
+
+    rec.write_trace(OUT_TRACE)
+    rec.write_metrics(OUT_METRICS)
+    trace_errors = validate_trace(json.load(open(OUT_TRACE)))
+
+    record = {
+        "config": "wan21_dit_1p3b reduced",
+        "num_steps": STEPS,
+        "num_partitions": K,
+        "iters": ITERS,
+        "bare_step_ms": bare_step_ms,
+        "recorded_step_ms": rec_step_ms,
+        "overhead_pct": overhead_pct,
+        "max_overhead_pct": MAX_OVERHEAD_PCT,
+        "compiles_after_warmup": compiles_warm,
+        "extra_compiles_with_recorder": extra_compiles,
+        "trace_events": len(rec.trace.events),
+        "trace_schema_errors": trace_errors,
+        "pass_overhead": bool(overhead_pct <= MAX_OVERHEAD_PCT),
+        "pass_no_recompile": bool(extra_compiles == 0),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    if extra_compiles != 0:
+        raise AssertionError(
+            f"recorder caused {extra_compiles} extra compiles — it must "
+            "never enter the LPStepCompiler cache key")
+    if trace_errors:
+        raise AssertionError(f"trace schema errors: {trace_errors}")
+    if overhead_pct > MAX_OVERHEAD_PCT:
+        raise AssertionError(
+            f"recorder overhead {overhead_pct:.2f}% > "
+            f"{MAX_OVERHEAD_PCT}% gate (bare {bare_step_ms:.2f}ms vs "
+            f"recorded {rec_step_ms:.2f}ms per step)")
+
+    if print_csv:
+        print(f"obs_overhead/bare,{bare_step_ms * 1e3:.0f},per_step")
+        print(f"obs_overhead/recorded,{rec_step_ms * 1e3:.0f},"
+              f"overhead={overhead_pct:.2f}%")
+        print(f"obs_overhead/compiles,0,extra={extra_compiles}")
+        print(f"obs_overhead/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 import traceback
+
+from repro.obs.clock import perf_s
 
 from . import (
     codec_schedule,
@@ -18,6 +19,7 @@ from . import (
     fig9_duration,
     fig10_rotation_ablation,
     hybrid_lp_tp,
+    obs_overhead,
     quality_fidelity,
     step_latency,
     table1_comm,
@@ -40,6 +42,7 @@ ALL = {
     "codec_schedule": codec_schedule.run,
     "wire_shard": wire_shard.run,
     "fault_recovery": fault_recovery.run,
+    "obs_overhead": obs_overhead.run,
 }
 
 
@@ -52,14 +55,14 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
-        t0 = time.time()
+        t0 = perf_s()
         try:
             ALL[name]()
-            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},ok")
+            print(f"{name}/_total,{(perf_s()-t0)*1e6:.0f},ok")
         except Exception as e:
             failures += 1
             traceback.print_exc()
-            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},"
+            print(f"{name}/_total,{(perf_s()-t0)*1e6:.0f},"
                   f"FAILED:{type(e).__name__}:{e}")
     return 1 if failures else 0
 

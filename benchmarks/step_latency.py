@@ -19,7 +19,6 @@ import json
 import subprocess
 import sys
 import textwrap
-import time
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +29,7 @@ from repro.core import comm_model as cm
 from repro.diffusion import FlowMatchEuler
 
 from .common import reduced_dit_denoiser
+from repro.obs.clock import perf_s
 
 STEPS = 6
 K = 2
@@ -104,9 +104,9 @@ def run(print_csv=True):
 
     jax.block_until_ready(seed_loop())  # warm the op caches
     seed_traces["n"] = 0
-    t0 = time.perf_counter()
+    t0 = perf_s()
     jax.block_until_ready(seed_loop())
-    seed_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+    seed_step_ms = (perf_s() - t0) / STEPS * 1e3
 
     # ---- compiled fast path
     fast_traces = {"n": 0}
@@ -123,13 +123,13 @@ def run(print_csv=True):
         return lp_denoise(None, z_T, sampler, STEPS, K, R, cfg.patch_sizes,
                           (1, 2, 3), uniform=True, compiler=comp)
 
-    t0 = time.perf_counter()
+    t0 = perf_s()
     jax.block_until_ready(fast_loop())  # compiles (<= one per rotation dim)
-    cold_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+    cold_step_ms = (perf_s() - t0) / STEPS * 1e3
     fast_compile_traces = fast_traces["n"]
-    t0 = time.perf_counter()
+    t0 = perf_s()
     jax.block_until_ready(fast_loop())
-    fast_step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+    fast_step_ms = (perf_s() - t0) / STEPS * 1e3
 
     # ---- communication: analytic model + measured HLO (4-dev subprocess)
     ccfg = cm.wan21_comm_config(49, num_steps=1)

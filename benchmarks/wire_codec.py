@@ -22,7 +22,6 @@ import json
 import subprocess
 import sys
 import textwrap
-import time
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +32,7 @@ from repro.core import comm_model as cm
 from repro.diffusion import FlowMatchEuler
 
 from .common import divergence, reduced_dit_denoiser
+from repro.obs.clock import perf_s
 
 CODECS = ("fp32", "bf16", "int8", "int4", "int8-residual")
 STEPS = 6
@@ -120,10 +120,10 @@ def run(print_csv=True, measure_hlo=True):
                                   compiler=comp)
 
             jax.block_until_ready(loop())          # compile
-            t0 = time.perf_counter()
+            t0 = perf_s()
             z0 = loop()
             jax.block_until_ready(z0)
-            step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+            step_ms = (perf_s() - t0) / STEPS * 1e3
             if name == "fp32":
                 exact = z0
                 div = {"rel_l2": 0.0, "psnr_db": float("inf")}

@@ -9,7 +9,6 @@ centralized baseline.
 Run:  PYTHONPATH=src python examples/serve_video_lp.py [--requests 6]
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ from repro.core import comm_model
 from repro.diffusion import FlowMatchEuler, generate_centralized
 from repro.diffusion.pipeline import make_guided_denoiser
 from repro.models import dit, frontends
+from repro.obs.clock import perf_s
 from repro.serving.engine import LPServingEngine, VideoRequest
 
 
@@ -65,9 +65,9 @@ def main():
             latent_shape=shape,
             seed=i,
         ))
-    t0 = time.time()
+    t0 = perf_s()
     results = engine.run()
-    wall = time.time() - t0
+    wall = perf_s() - t0
     print(f"Served {len(results)} requests in {wall:.1f}s "
           f"({wall/len(results):.1f}s/request on CPU)")
 

@@ -23,7 +23,9 @@ The production SPMD engines (``core/spmd.py``) plug in via the
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
+from contextlib import nullcontext
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
@@ -484,6 +486,7 @@ def lp_denoise(
     codec=None,
     schedule=None,
     snapshot: Optional[DenoiseSnapshot] = None,
+    recorder=None,
 ) -> jnp.ndarray:
     """Full T-step LP denoising on the compiled fast path.
 
@@ -527,6 +530,18 @@ def lp_denoise(
     fine too — the snapshot holds the full (geometry-independent)
     latent, and the resumed steps re-derive dims from the compiler's
     current K.
+
+    ``recorder`` (a ``repro.obs.FlightRecorder``; duck-typed so core
+    never imports obs) wraps every compiled dispatch in a trace span +
+    ``jax.profiler.TraceAnnotation`` and feeds the run/step latency
+    histograms.  It is pure host state — NEVER passed into the jitted
+    step and never part of the compile cache key — so enabling it can
+    change neither compile counts nor numerics
+    (``benchmarks/obs_overhead.py`` gates both).  Per-step wire bytes
+    are NOT probed here: the serving engine derives them by replaying
+    ``comm_model`` (``repro.obs.account``) against the executed
+    geometry.  Note the spans block on the dispatched value, so device
+    work is attributed to its own span instead of the next one.
     """
     if step_hook is not None:
         fuse_scan = False
@@ -583,6 +598,8 @@ def lp_denoise(
         # a second resume from the same boundary also works)
         start = min(int(snapshot.step), num_steps)
         snapshot.resumes += 1
+        if recorder is not None:
+            recorder.record_resume(start)
         z = jnp.asarray(snapshot.z).astype(z_T.dtype)
     else:
         # private copy: the first step donates its input buffer, and the
@@ -602,7 +619,7 @@ def lp_denoise(
                 runs[-1][1].append(i)
             else:
                 runs.append(((dim, ck), [i]))
-        for (dim, _), idxs in runs:
+        for (dim, ck), idxs in runs:
             # resume support: runs at or before the snapshot boundary are
             # already done.  (A run can straddle ``start`` only when the
             # snapshot was taken under a different geometry — e.g. an
@@ -617,25 +634,43 @@ def lp_denoise(
             ts = [np.float32(sampler.timestep(i)) for i in idxs]
             scs = [sampler.step_scalars(i) for i in idxs]
             st = comp.init_codec_state(dim, z, seg_codec) if stateful else None
-            if len(idxs) == 1:
-                fn = comp.step_fn(dim, z, 1, scs[0], extras, codec=seg_codec)
-                if stateful:
-                    z, _ = fn(z, st, ts[0], scs[0], extras)
+            ck_name = ck or getattr(comp.codec, "name", "none")
+            span = (nullcontext() if recorder is None else
+                    recorder.device_span("denoise.run", dim=dim,
+                                         codec=ck_name, start=idxs[0],
+                                         stop=idxs[-1], n=len(idxs),
+                                         epoch=comp.plan_epoch))
+            t0 = time.perf_counter()
+            with span:
+                if len(idxs) == 1:
+                    fn = comp.step_fn(dim, z, 1, scs[0], extras,
+                                      codec=seg_codec)
+                    if stateful:
+                        z, _ = fn(z, st, ts[0], scs[0], extras)
+                    else:
+                        z = fn(z, ts[0], scs[0], extras)
                 else:
-                    z = fn(z, ts[0], scs[0], extras)
-            else:
-                ts_arr = jnp.asarray(np.stack(ts))
-                scs_arr = jax.tree.map(
-                    lambda *xs: jnp.asarray(np.stack(xs)), *scs
-                )
-                fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras,
-                                  codec=seg_codec)
-                if stateful:
-                    z, _ = fn(z, st, ts_arr, scs_arr, extras)
-                else:
-                    z = fn(z, ts_arr, scs_arr, extras)
+                    ts_arr = jnp.asarray(np.stack(ts))
+                    scs_arr = jax.tree.map(
+                        lambda *xs: jnp.asarray(np.stack(xs)), *scs
+                    )
+                    fn = comp.step_fn(dim, z, len(idxs), scs_arr, extras,
+                                      codec=seg_codec)
+                    if stateful:
+                        z, _ = fn(z, st, ts_arr, scs_arr, extras)
+                    else:
+                        z = fn(z, ts_arr, scs_arr, extras)
+                if recorder is not None:
+                    jax.block_until_ready(z)
+            if recorder is not None:
+                recorder.record_run(idxs[0], idxs[-1],
+                                    time.perf_counter() - t0,
+                                    dim=dim, codec=ck_name,
+                                    epoch=comp.plan_epoch)
             if snapshot is not None and idxs[-1] < num_steps:
                 snapshot.record(idxs[-1], z, comp.plan_epoch)
+                if recorder is not None:
+                    recorder.record_snapshot(idxs[-1])
         return z
 
     # Unfused (step_hook) path: one compiled step per call, codec state
@@ -656,11 +691,15 @@ def lp_denoise(
             cur_epoch = comp.plan_epoch
             dims = _dims()
             cur_state, cur_dim = None, None
+            if recorder is not None:
+                recorder.record_replan(i, comp.num_partitions, cur_epoch)
             if snapshot is not None and i > start + 1:
                 # a re-plan is a boundary too (state re-zeroes here):
                 # record the pre-replan latent so a failure during the
                 # first post-replan step resumes right before it
                 snapshot.record(i - 1, z, cur_epoch)
+                if recorder is not None:
+                    recorder.record_snapshot(i - 1)
         dim = rotation_dim(i, dims)
         seg_codec = step_codecs[i - 1]
         ck = _codec_key(seg_codec)
@@ -671,16 +710,30 @@ def lp_denoise(
                          or ck != cur_codec_key):
             cur_state = comp.init_codec_state(dim, z, seg_codec)
         cur_dim, cur_codec_key = dim, ck
-        fn = comp.step_fn(dim, z, 1, sc, extras, codec=seg_codec)
-        if stateful:
-            z, cur_state = fn(z, cur_state, t, sc, extras)
-        else:
-            z = fn(z, t, sc, extras)
+        ck_name = ck or getattr(comp.codec, "name", "none")
+        span = (nullcontext() if recorder is None else
+                recorder.device_span("denoise.step", dim=dim, step=i,
+                                     codec=ck_name, epoch=comp.plan_epoch))
+        t0 = time.perf_counter()
+        with span:
+            fn = comp.step_fn(dim, z, 1, sc, extras, codec=seg_codec)
+            if stateful:
+                z, cur_state = fn(z, cur_state, t, sc, extras)
+            else:
+                z = fn(z, t, sc, extras)
+            if recorder is not None:
+                jax.block_until_ready(z)
+        if recorder is not None:
+            recorder.record_run(i, i, time.perf_counter() - t0,
+                                dim=dim, codec=ck_name,
+                                epoch=comp.plan_epoch)
         if snapshot is not None and i < num_steps:
             nxt = rotation_dim(i + 1, dims)
             nxt_ck = _codec_key(step_codecs[i])
             if nxt != dim or nxt_ck != ck:    # step i ends a run
                 snapshot.record(i, z, comp.plan_epoch)
+                if recorder is not None:
+                    recorder.record_snapshot(i)
     return z
 
 

@@ -25,7 +25,6 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -50,6 +49,7 @@ from repro.distributed.sharding import (
     param_specs,
 )
 from repro.launch.mesh import make_production_mesh
+from repro.obs.clock import perf_s
 from repro.serving.serve_step import make_decode_step, make_prefill_step
 from repro.train.loop import make_train_step
 
@@ -300,8 +300,16 @@ def lower_cell(
     eager_sends: Optional[bool] = None,
     inject_fault: Optional[str] = None,
     wire_nan_guard: bool = False,
+    recorder=None,
 ) -> Dict[str, Any]:
-    """Lower + compile one cell; return the §Dry-run record."""
+    """Lower + compile one cell; return the §Dry-run record.
+
+    ``recorder`` (``repro.obs.FlightRecorder``, optional) gets
+    ``dryrun``-category spans around lower+compile plus the cell's
+    ``wire_tiers`` bytes as ``wire.bytes`` counters — the same schema
+    the serving engine's derived attribution uses, so measured HLO and
+    ``comm_model`` replay are machine-diffable.
+    """
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     reason = skip_reason(arch, shape_name)
@@ -312,10 +320,15 @@ def lower_cell(
         "skipped": reason,
     }
     if reason:
+        if recorder is not None:
+            recorder.instant("dryrun.skip", cat="dryrun", arch=arch,
+                             shape=shape_name, reason=reason)
         return rec
 
-    t0 = time.time()
+    t0 = perf_s()
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    # a caller-supplied --mesh overrides the production tag
+    rec["mesh"] = "x".join(str(v) for v in dict(mesh.shape).values())
     model = models.build(cfg)
     n_params = count_params(cfg, model)
     parallel = plan_parallel(cfg, shape, multi_pod=multi_pod, n_params=n_params)
@@ -356,8 +369,16 @@ def lower_cell(
     if shape.kind == "vdm_generate" and lp_impl == "gspmd" and             cfg.num_heads % tp_size:
         attn_seq = parallel.tp_axis
     from repro import compat
+    from contextlib import nullcontext
 
-    with compat.set_mesh(mesh), actctx.batch_axes(dp_for_ctx, attn_seq=attn_seq):
+    def _span(name, **kw):
+        if recorder is None:
+            return nullcontext()
+        return recorder.span(name, cat="dryrun", arch=arch,
+                             shape=shape_name, **kw)
+
+    with compat.set_mesh(mesh), actctx.batch_axes(dp_for_ctx, attn_seq=attn_seq), \
+            _span("dryrun.cell", mesh=rec["mesh"]):
         if shape.kind == "train":
             train_step = make_train_step(model, parallel)
             opt_shapes = jax.eval_shape(train_step.opt_init, params_shapes)
@@ -479,9 +500,10 @@ def lower_cell(
         else:
             raise ValueError(shape.kind)
 
-        compiled = lowered.compile()
+        with _span("dryrun.compile", kind=shape.kind):
+            compiled = lowered.compile()
 
-    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    rec["lower_compile_s"] = round(perf_s() - t0, 1)
     from repro.compat import cost_analysis as _cost_analysis
 
     ca = _cost_analysis(compiled)
@@ -505,12 +527,30 @@ def lower_cell(
     rec["collectives_by_group"] = {
         k: float(v) for k, v in anal.collective_group_bytes.items()
     }
+    # the same vocabulary the serving recorder's derived attribution
+    # uses ({"collective", "group_size", "tier", "bytes"}) — one schema,
+    # machine-diffable against obs.account.step_wire_attribution
+    from repro.obs.account import tiered_collectives
+
+    mesh_axes = dict(mesh.shape)
+    M = mesh_axes.get("data", 1)
+    T = mesh_axes.get("model", 1)
+    rec["wire_tiers"] = tiered_collectives(rec["collectives_by_group"], M, T)
+    if recorder is not None:
+        recorder.instant("dryrun.wire_tiers", cat="dryrun", arch=arch,
+                         shape=shape_name, tiers=rec["wire_tiers"])
+        from repro.obs import metrics as obsm
+
+        for row in rec["wire_tiers"]:
+            recorder.inc(obsm.WIRE_BYTES, row["bytes"], tier=row["tier"],
+                         collective=row["collective"])
     return rec
 
 
 def _resolve_dryrun_schedule(shape_name: str, mesh,
                              spec: str, psnr_floor: Optional[float],
-                             wire_shard: Optional[bool] = None):
+                             wire_shard: Optional[bool] = None,
+                             recorder=None):
     """Resolve ``--codec-schedule`` for one vdm cell against its real
     geometry, sampler trajectory, and the mesh's lp-axis size."""
     from repro.core.comm_model import wan21_comm_config
@@ -526,6 +566,7 @@ def _resolve_dryrun_schedule(shape_name: str, mesh,
         spec, ccfg, K, ParallelConfig().overlap_ratio,
         FlowMatchEuler(shape.num_steps), shape.num_steps,
         psnr_floor_db=psnr_floor, tp=tp, wire_shard=wire_shard,
+        recorder=recorder,
     )
 
 
@@ -586,6 +627,13 @@ def main(argv=None) -> int:
                          "guard (stale-slab fallback); auto-armed by "
                          "--inject-fault corrupt@S")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the dry run "
+                         "(dryrun-category spans + wire_tiers instants; "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot (.prom/.txt -> "
+                         "Prometheus text, else JSONL)")
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
         ap.error("--codec-schedule and --wire-codec are exclusive")
@@ -598,6 +646,12 @@ def main(argv=None) -> int:
         if not args.arch or not args.shape:
             ap.error("--arch and --shape required unless --all")
         todo.append((args.arch, args.shape))
+
+    recorder = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import FlightRecorder
+
+        recorder = FlightRecorder()
 
     meshes = [args.multi_pod] if not args.both_meshes else [False, True]
     if args.mesh:
@@ -630,7 +684,7 @@ def main(argv=None) -> int:
                         get_shape(shape).kind == "vdm_generate":
                     plan = _resolve_dryrun_schedule(
                         shape, mesh, args.codec_schedule, args.psnr_floor,
-                        wire_shard=args.wire_shard)
+                        wire_shard=args.wire_shard, recorder=recorder)
                     print(f"PLAN {tag}: {plan.describe()}", flush=True)
                     cells_to_lower = [
                         (seg.codec, plan.lp_impl, plan.wire_shard, {
@@ -649,7 +703,8 @@ def main(argv=None) -> int:
                                      wire_shard=wire_shard,
                                      eager_sends=args.eager_sends,
                                      inject_fault=args.inject_fault,
-                                     wire_nan_guard=args.wire_nan_guard)
+                                     wire_nan_guard=args.wire_nan_guard,
+                                     recorder=recorder)
                     if seg_info is not None:
                         rec["schedule_segment"] = seg_info
                     if rec.get("skipped"):
@@ -678,6 +733,14 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
         print(f"wrote {args.out}")
+    if recorder is not None:
+        if args.trace_out:
+            recorder.write_trace(args.trace_out)
+            print(f"wrote {args.trace_out} "
+                  f"({len(recorder.trace.events)} events)")
+        if args.metrics_out:
+            recorder.write_metrics(args.metrics_out)
+            print(f"wrote {args.metrics_out}")
     return 1 if failures else 0
 
 

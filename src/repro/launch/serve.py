@@ -81,6 +81,12 @@ def main(argv=None):
                     help="absorb NaN/Inf wire payloads by falling back "
                          "to the rank-local stale slab (bit-identical "
                          "when every message is finite)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome-trace JSON of the "
+                         "request lifecycle here (docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot here (.prom/.txt -> "
+                         "Prometheus text, else JSONL)")
     args = ap.parse_args(argv)
     if args.codec_schedule and args.wire_codec:
         ap.error("--codec-schedule and --wire-codec are exclusive")
@@ -103,6 +109,12 @@ def main(argv=None):
                 f"{args.partitions}")
         mesh = make_hybrid_mesh(m, t)
 
+    recorder = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import FlightRecorder
+
+        recorder = FlightRecorder()
+
     engine = LPServingEngine(fwd, params, cfg,
                              num_partitions=args.partitions,
                              overlap_ratio=args.overlap,
@@ -116,7 +128,8 @@ def main(argv=None):
                              eager_sends=args.eager_sends,
                              elastic=args.elastic,
                              inject_fault=args.inject_fault,
-                             wire_nan_guard=args.wire_nan_guard)
+                             wire_nan_guard=args.wire_nan_guard,
+                             recorder=recorder)
     print(f"engine: lp_impl={engine.lp_impl} codec={engine.codec.name} "
           f"tp={engine.tp} wire_shard={engine.wire_shard} "
           f"eager_sends={engine.eager_sends}")
@@ -142,6 +155,30 @@ def main(argv=None):
     if engine.evictions:
         print(f"elastic: evictions={engine.evictions} K={engine.K} "
               f"steps_lost={engine.last_steps_lost}")
+    if recorder is not None:
+        if args.trace_out:
+            recorder.write_trace(args.trace_out)
+            print(f"trace: {args.trace_out} "
+                  f"({len(recorder.trace.events)} events)")
+        if args.metrics_out:
+            recorder.write_metrics(args.metrics_out)
+            print(f"metrics: {args.metrics_out}")
+        m = recorder.metrics
+        if m is not None:
+            from repro.obs import metrics as obsm
+
+            steps = m.hist_values(obsm.STEP_LATENCY_S)
+            if steps:
+                import numpy as np
+
+                p50, p99 = np.percentile(steps, [50, 99])
+                print(f"obs: step_latency p50={p50 * 1e3:.1f}ms "
+                      f"p99={p99 * 1e3:.1f}ms over {len(steps)} steps")
+        for rec in recorder.reconciliations:
+            print(f"obs: run[{rec['start']}-{rec['stop']}] "
+                  f"codec={rec['codec']} "
+                  f"pred_wire={rec['pred_wire_time_ms']:.2f}ms "
+                  f"measured={rec['measured_wall_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

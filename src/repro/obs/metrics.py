@@ -1,0 +1,170 @@
+"""Metrics registry: counters, gauges, histograms + snapshot exporters.
+
+Names are dotted (``serve.queue_depth``); labels are sorted key=value
+pairs so a (name, labels) series is stable across runs — the property
+the trace-schema tests pin.  Export formats:
+
+* **Prometheus text** (``.prom``/``.txt``): standard exposition format,
+  dots mapped to underscores, histograms exported as ``_count`` /
+  ``_sum`` plus p50/p99 ``{quantile=...}`` rows (summary-style).
+* **JSONL** (anything else): one JSON object per series, machine-
+  diffable against ``comm_model`` outputs.
+
+Recording is a dict update — no locks, no I/O until snapshot time, and
+never visible to jit.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .clock import wall_stamp_s
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+# Canonical metric names (docs/observability.md) — feeders use these
+# constants so the schema cannot fork silently.
+QUEUE_DEPTH = "serve.queue_depth"
+BATCH_SIZE = "serve.batch_size"
+REQUESTS = "serve.requests"
+BATCHES = "serve.batches"
+RESTARTS = "serve.restarts"
+EVICTIONS = "serve.evictions"
+BATCH_WALL_S = "serve.batch_wall_s"
+STEP_LATENCY_S = "denoise.step_s"
+RUN_WALL_S = "denoise.run_s"
+COMPILES = "compiler.compiles"
+WIRE_BYTES = "wire.bytes"
+HEARTBEAT_MISSES = "health.heartbeat_misses"
+DEAD_GROUPS = "health.dead_groups"
+STRAGGLER_IMBALANCE = "straggler.imbalance"
+FAULTS_INJECTED = "faults.injected"
+SNAPSHOT_RESUMES = "snapshot.resumes"
+SNAPSHOT_RECORDS = "snapshot.records"
+PLAN_WIRE_BYTES = "policy.plan_wire_bytes"
+PLAN_WIRE_TIME_MS = "policy.plan_wire_time_ms"
+PLAN_SEGMENTS = "policy.plan_segments"
+
+
+def _labels(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Counters/gauges/histograms keyed on (name, sorted labels)."""
+
+    def __init__(self, hist_cap: int = 65536) -> None:
+        self._counters: Dict[Tuple[str, LabelKey], float] = {}
+        self._gauges: Dict[Tuple[str, LabelKey], float] = {}
+        self._hists: Dict[Tuple[str, LabelKey], List[float]] = {}
+        self._hist_cap = hist_cap
+
+    # -- recording ------------------------------------------------------
+    def inc(self, name: str, value: float = 1.0, **labels) -> None:
+        key = (name, _labels(labels))
+        self._counters[key] = self._counters.get(key, 0.0) + float(value)
+
+    def set(self, name: str, value: float, **labels) -> None:
+        self._gauges[(name, _labels(labels))] = float(value)
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        vals = self._hists.setdefault((name, _labels(labels)), [])
+        if len(vals) < self._hist_cap:
+            vals.append(float(value))
+
+    # -- reading --------------------------------------------------------
+    def counter_value(self, name: str, **labels) -> float:
+        return self._counters.get((name, _labels(labels)), 0.0)
+
+    def gauge_value(self, name: str, **labels) -> Optional[float]:
+        return self._gauges.get((name, _labels(labels)))
+
+    def hist_values(self, name: str, **labels) -> List[float]:
+        return list(self._hists.get((name, _labels(labels)), []))
+
+    @staticmethod
+    def _quantiles(vals: Sequence[float]) -> Dict[str, float]:
+        arr = np.asarray(vals, dtype=np.float64)
+        return {
+            "count": int(arr.size),
+            "sum": float(arr.sum()),
+            "min": float(arr.min()),
+            "max": float(arr.max()),
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+        }
+
+    def snapshot(self) -> List[dict]:
+        """Flat series list — the JSONL rows, sorted for stable diffs."""
+        rows: List[dict] = []
+        for (name, lk), v in self._counters.items():
+            rows.append({"name": name, "type": "counter",
+                         "labels": dict(lk), "value": v})
+        for (name, lk), v in self._gauges.items():
+            rows.append({"name": name, "type": "gauge",
+                         "labels": dict(lk), "value": v})
+        for (name, lk), vals in self._hists.items():
+            if vals:
+                rows.append({"name": name, "type": "histogram",
+                             "labels": dict(lk),
+                             **self._quantiles(vals)})
+        rows.sort(key=lambda r: (r["name"], sorted(r["labels"].items())))
+        return rows
+
+    # -- exporters ------------------------------------------------------
+    def to_jsonl(self) -> str:
+        stamp = wall_stamp_s()
+        return "\n".join(
+            json.dumps({**row, "stamp_s": stamp})
+            for row in self.snapshot()
+        ) + "\n"
+
+    def to_prometheus(self) -> str:
+        def pname(name: str) -> str:
+            return "repro_" + name.replace(".", "_").replace("-", "_")
+
+        def fmt_labels(labels: Dict[str, str], extra: str = "") -> str:
+            parts = [f'{k}="{v}"' for k, v in sorted(labels.items())]
+            if extra:
+                parts.append(extra)
+            return "{" + ",".join(parts) + "}" if parts else ""
+
+        lines: List[str] = []
+        typed: set = set()  # one TYPE line per metric name
+
+        def type_line(n: str, kind: str) -> None:
+            if n not in typed:
+                typed.add(n)
+                lines.append(f"# TYPE {n} {kind}")
+
+        for row in self.snapshot():
+            n = pname(row["name"])
+            if row["type"] == "counter":
+                type_line(n, "counter")
+                lines.append(f"{n}{fmt_labels(row['labels'])} "
+                             f"{row['value']}")
+            elif row["type"] == "gauge":
+                type_line(n, "gauge")
+                lines.append(f"{n}{fmt_labels(row['labels'])} "
+                             f"{row['value']}")
+            else:  # histogram -> summary-style quantile rows
+                type_line(n, "summary")
+                for q, field in (("0.5", "p50"), ("0.99", "p99")):
+                    extra = 'quantile="%s"' % q
+                    lines.append(
+                        f"{n}{fmt_labels(row['labels'], extra)} "
+                        f"{row[field]}")
+                lines.append(f"{n}_sum{fmt_labels(row['labels'])} "
+                             f"{row['sum']}")
+                lines.append(f"{n}_count{fmt_labels(row['labels'])} "
+                             f"{row['count']}")
+        return "\n".join(lines) + "\n"
+
+    def write(self, path: str) -> None:
+        """Format by extension: .prom/.txt -> Prometheus text, else JSONL."""
+        text = (self.to_prometheus()
+                if path.endswith((".prom", ".txt")) else self.to_jsonl())
+        with open(path, "w") as f:
+            f.write(text)

@@ -267,12 +267,18 @@ def auto_plan(
     credit_db: float = HIGH_NOISE_CREDIT_DB,
     links: LinkModel = DEFAULT_LINKS,
     wire_shard: Optional[bool] = None,
+    recorder=None,
 ) -> StepPolicyPlan:
     """The auto-plan: byte-minimal (engine, codec schedule) meeting the
     PSNR floor on this workload geometry and sigma trajectory.  On
     hybrid meshes (``tp > 1``) the wire-shard decision is made by
     weighted wire time under ``links`` (``wire_shard=None``); pass a
-    bool to pin it."""
+    bool to pin it.
+
+    ``recorder`` (``repro.obs.FlightRecorder``, optional) gets the
+    chosen plan plus the autotuner's ranked candidate field — cheapest
+    first, each priced by its fixed-codec denoise bytes — so a trace
+    shows not just what was picked but what it beat."""
     if not usable_dims(cfg.latent_dims, cfg.patch_sizes, K):
         raise ValueError(
             f"no latent dim of {cfg.latent_dims} has >= {K} patches"
@@ -280,9 +286,18 @@ def auto_plan(
     sigmas = trajectory_sigmas(sampler, num_steps)
     schedule = schedule_for_floor(cfg, K, r, psnr_floor_db, candidates,
                                   credit_db)
-    return _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
+    plan = _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
                                psnr_floor_db, credit_db, links=links,
                                wire_shard=wire_shard)
+    if recorder is not None:
+        ranked = [
+            {"codec": name,
+             "denoise_bytes": int(cm.comm_lp_halo_codec(cfg, K, r, name)),
+             "floor_db": float(codec_floor_db(name))}
+            for name in _rank_candidates(cfg, K, r, candidates)
+        ]
+        recorder.record_plan(plan, candidates=ranked, context="auto")
+    return plan
 
 
 def resolve_cli_schedule(
@@ -296,6 +311,7 @@ def resolve_cli_schedule(
     tp: int = 1,
     links: LinkModel = DEFAULT_LINKS,
     wire_shard: Optional[bool] = None,
+    recorder=None,
 ) -> StepPolicyPlan:
     """Shared ``--codec-schedule`` resolution for serve/dryrun.
 
@@ -312,7 +328,7 @@ def resolve_cli_schedule(
         return auto_plan(cfg, K, r, sampler, num_steps,
                          psnr_floor_db=40.0 if psnr_floor_db is None
                          else psnr_floor_db, tp=tp, links=links,
-                         wire_shard=wire_shard)
+                         wire_shard=wire_shard, recorder=recorder)
     schedule = parse_schedule(spec)
     sigmas = trajectory_sigmas(sampler, num_steps)
     plan = _plan_from_schedule(cfg, K, r, schedule, sigmas, tp,
@@ -325,4 +341,7 @@ def resolve_cli_schedule(
             f"{plan.envelope_db:.0f} dB < requested floor "
             f"{psnr_floor_db:.0f} dB (see docs/step_policy.md)"
         )
+    if recorder is not None:
+        # explicit spec: an operator pin, so there is no candidate field
+        recorder.record_plan(plan, context="explicit")
     return plan

@@ -23,12 +23,13 @@ import json
 import os
 import shutil
 import threading
-import time
 import uuid
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs.clock import wall_stamp_s
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -66,7 +67,7 @@ def save(
         "paths": paths,
         "shapes": [list(np.shape(np.asarray(l))) for l in leaves],
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        "time": time.time(),
+        "time": wall_stamp_s(),  # epoch stamp on purpose (not a duration)
         **(extra_meta or {}),
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:

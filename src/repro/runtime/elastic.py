@@ -31,7 +31,7 @@ def reshard_tree(tree: Any, mesh: Mesh, parallel: ParallelConfig) -> Any:
 
 
 def replan_lp_compiler(compiler, new_mesh_shape, forward=None,
-                       forward_factory=None) -> bool:
+                       forward_factory=None, recorder=None) -> bool:
     """Mid-request elastic re-plan of a live LP step compiler.
 
     Retargets ``compiler`` (a ``core/lp_step.LPStepCompiler``) at a new
@@ -54,6 +54,10 @@ def replan_lp_compiler(compiler, new_mesh_shape, forward=None,
       This function raises immediately instead of letting that happen
       mid-denoise.  Simulate-path compilers (no ``forward``, no
       ``forward_factory``) need nothing.
+
+    ``recorder`` (``repro.obs.FlightRecorder``, optional) gets an
+    ``elastic.replan`` instant when the re-plan actually changes the
+    compiler (the epoch bump the in-flight denoise will observe).
     """
     new_mesh_shape = tuple(new_mesh_shape)
     if new_mesh_shape[0] != compiler.num_partitions:
@@ -72,12 +76,18 @@ def replan_lp_compiler(compiler, new_mesh_shape, forward=None,
                 f"lp={compiler.num_partitions}, new plan wants "
                 f"lp={new_mesh_shape[0]})"
             )
-    return compiler.replan(
+    changed = compiler.replan(
         num_partitions=new_mesh_shape[0],
         mesh_shape=new_mesh_shape,
         forward=forward,
         forward_factory=forward_factory,
     )
+    if changed and recorder is not None:
+        recorder.instant("elastic.replan", cat="elastic",
+                         new_mesh_shape=list(new_mesh_shape),
+                         epoch=compiler.plan_epoch)
+    return changed
+
 
 
 def restore_elastic(

@@ -113,6 +113,11 @@ class ServingFaultPlan:
     # replayed healthy heartbeats would reset the monitor's miss budget
     # and recovery could never converge
     _dead_active: set = dataclasses.field(default_factory=set)
+    # first-fire event log for the observability plane: one entry per
+    # fault *activation* (corrupt swap, first step a group goes dead),
+    # drained incrementally by the engine's step hook
+    _events: List[dict] = dataclasses.field(default_factory=list)
+    _drained: int = 0
 
     # ------------------------------------------------------------ parsing
     @staticmethod
@@ -142,6 +147,22 @@ class ServingFaultPlan:
         return ",".join(parts) or "none"
 
     # ----------------------------------------------------------- behaviour
+    def _activate_dead(self, group: int, step: int) -> None:
+        """Mark a dead fault live, logging its first activation only."""
+        if group not in self._dead_active:
+            self._events.append(
+                {"kind": "dead", "group": group, "step": step})
+        self._dead_active.add(group)
+
+    def drain_events(self) -> List[dict]:
+        """Fault activations logged since the last drain — the trace
+        feeder (``serving/engine.py`` forwards these to the flight
+        recorder as ``fault.*`` instants).  Each event carries the step
+        it fired at, so drain timing cannot skew the record."""
+        new = self._events[self._drained:]
+        self._drained = len(self._events)
+        return new
+
     @property
     def touches_health(self) -> bool:
         """True when the plan needs heartbeats fed to a health monitor."""
@@ -161,7 +182,7 @@ class ServingFaultPlan:
             if g in self._recovered or g >= num_groups:
                 continue
             if step >= s:
-                self._dead_active.add(g)
+                self._activate_dead(g, step)
             if g in self._dead_active:
                 t[g] = float("inf")
         return t
@@ -175,7 +196,7 @@ class ServingFaultPlan:
             if g in self._recovered:
                 continue
             if step >= s or g in self._dead_active:
-                self._dead_active.add(g)
+                self._activate_dead(g, step)
                 return g
         return None
 
@@ -190,6 +211,7 @@ class ServingFaultPlan:
         corruption was transient, as on real links)."""
         if step in self.corrupt and step not in self._corrupt_fired:
             self._corrupt_fired.add(step)
+            self._events.append({"kind": "corrupt", "step": step})
             return True
         return False
 

@@ -55,12 +55,18 @@ class GroupHealthMonitor:
     backoff: float = 1.5             # deadline growth per missed round
     default_deadline_s: float = 30.0  # before any EMA history exists
     straggler: StragglerState = None  # type: ignore[assignment]
+    # optional obs.MetricsRegistry (duck-typed): heartbeat misses and
+    # the dead-group gauge flow out per observe() round
+    metrics: object = None
     _misses: np.ndarray = None        # type: ignore[assignment]
     _dead: set = dataclasses.field(default_factory=set)
 
     def __post_init__(self):
         if self.straggler is None:
-            self.straggler = StragglerState(self.num_groups)
+            self.straggler = StragglerState(self.num_groups,
+                                            metrics=self.metrics)
+        elif self.metrics is not None and self.straggler.metrics is None:
+            self.straggler.metrics = self.metrics
         if self._misses is None:
             self._misses = np.zeros(self.num_groups, dtype=np.int64)
 
@@ -104,6 +110,13 @@ class GroupHealthMonitor:
             else:
                 self._misses[g] = 0
                 self._dead.discard(g)
+        if self.metrics is not None:
+            from repro.obs import metrics as obsm
+
+            for g, m in enumerate(missed):
+                if m:
+                    self.metrics.inc(obsm.HEARTBEAT_MISSES, group=str(g))
+            self.metrics.set(obsm.DEAD_GROUPS, len(self._dead))
 
     # ----------------------------------------------------------- proposals
     def dead_groups(self) -> List[int]:

@@ -24,6 +24,9 @@ class StragglerState:
     num_partitions: int
     ema_alpha: float = 0.3
     rebalance_threshold: float = 0.15   # re-plan when >15% imbalance
+    # optional obs.MetricsRegistry (duck-typed): the imbalance gauge and
+    # slowest-group index flow out per observe() round
+    metrics: object = None
     _ema: Optional[np.ndarray] = None
 
     def observe(self, step_times: Sequence[float]) -> None:
@@ -37,6 +40,13 @@ class StragglerState:
             self._ema = t
         else:
             self._ema = self.ema_alpha * t + (1 - self.ema_alpha) * self._ema
+        if self.metrics is not None:
+            from repro.obs import metrics as obsm
+
+            s = self.speeds
+            imb = float((s.max() - s.min()) / s.max()) if s.max() else 0.0
+            self.metrics.set(obsm.STRAGGLER_IMBALANCE, imb)
+            self.metrics.set("straggler.slowest_group", self.slowest)
 
     @property
     def speeds(self) -> np.ndarray:

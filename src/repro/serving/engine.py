@@ -81,7 +81,6 @@ Production behaviours implemented (scaled to the container):
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import defaultdict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -95,10 +94,16 @@ from repro.core import DenoiseSnapshot, LPStepCompiler, lp_denoise
 from repro.core.spmd import select_lp_impl
 from repro.diffusion.pipeline import make_guided_step_denoiser
 from repro.diffusion.sampler import FlowMatchEuler
+from repro.obs import metrics as obsm
+from repro.obs.clock import perf_s
 from repro.runtime.faults import CorruptingCodec, ServingFault, \
     parse_fault_plan
 from repro.runtime.ft import DeviceFailure
 from repro.runtime.health import GroupHealthMonitor
+
+from contextlib import nullcontext
+
+_NULL_CM = nullcontext()
 
 
 @dataclasses.dataclass
@@ -152,6 +157,7 @@ class LPServingEngine:
         inject_fault=None,
         wire_nan_guard: bool = True,
         snapshots: bool = True,
+        recorder=None,
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -162,7 +168,15 @@ class LPServingEngine:
         self.max_batch = max_batch
         self.max_wait = max_wait_requests
         self.uniform = uniform
-        self.health = GroupHealthMonitor(num_partitions)
+        # ``recorder`` (repro.obs.FlightRecorder) is the optional
+        # observability plane: request/batch spans, serve metrics, and
+        # derived per-step wire attribution.  Host state only — it is
+        # never traced and never enters the step-cache key, so enabling
+        # it cannot cause a recompile (benchmarks/obs_overhead.py).
+        self.recorder = recorder
+        self.health = GroupHealthMonitor(
+            num_partitions,
+            metrics=None if recorder is None else recorder.metrics)
         # back-compat alias: external monitors (and the elastic tests)
         # that fed the EMA directly keep working — the health monitor
         # wraps the very same StragglerState
@@ -235,7 +249,7 @@ class LPServingEngine:
                 return resolve_cli_schedule(
                     codec_schedule, ccfg, k, self.r, self._sampler,
                     num_steps, psnr_floor_db=psnr_floor, tp=tp,
-                    wire_shard=wire_shard_cli,
+                    wire_shard=wire_shard_cli, recorder=self.recorder,
                 )
 
             self._plan_resolver = _resolve_plan
@@ -344,6 +358,15 @@ class LPServingEngine:
             wire_shard=self.wire_shard,
             nan_guard=self.wire_nan_guard,
         )
+        # Wire-attribution timelines (repro.obs.account): one geometry
+        # entry per (from_step, K) epoch and one codec entry per
+        # (from_step, step_codec_names) epoch; reset per batch, appended
+        # to by mid-request evictions / schedule re-plans.
+        self._cur_step = 1
+        self._geom_events: List[Tuple[int, int]] = [(1, self.K)]
+        self._codec_events: List[Tuple[int, List[str]]] = []
+        self._batch_codecs: List[str] = []
+        self._runs_mark = 0
 
     # ----------------------------------------------------------- forward
     def _build_forward(self, mesh):
@@ -429,6 +452,14 @@ class LPServingEngine:
     def submit(self, req: VideoRequest) -> None:
         self._queue.append(req)
         self._enqueued_at[req.request_id] = self._polls
+        rec = self.recorder
+        if rec is not None:
+            rec.instant("request.enqueue", cat="serve",
+                        request_id=req.request_id,
+                        latent_shape=req.latent_shape,
+                        guidance=req.guidance)
+            rec.inc(obsm.REQUESTS)
+            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
 
     @staticmethod
     def _bucket_key(req: VideoRequest) -> Tuple:
@@ -465,6 +496,14 @@ class LPServingEngine:
         self._queue = [r for r in self._queue if id(r) not in chosen]
         for r in batch:
             self._enqueued_at.pop(r.request_id, None)
+        rec = self.recorder
+        if rec is not None:
+            rec.instant("batch.admit", cat="serve", size=len(batch),
+                        latent_shape=batch[0].latent_shape,
+                        guidance=batch[0].guidance,
+                        request_ids=[r.request_id for r in batch])
+            rec.observe(obsm.BATCH_SIZE, len(batch))
+            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
         return batch
 
     # ------------------------------------------------------------ serving
@@ -499,6 +538,12 @@ class LPServingEngine:
 
             self._schedule = parse_schedule(new_sched)
             self._compiler.schedule = self._schedule
+            if self.recorder is not None:
+                # codec timeline entry: a resumed retry re-resolves its
+                # runs from the compiler's NEW schedule, so steps from
+                # the current one onward are attributed under it
+                self._codec_events.append(
+                    (self._cur_step, self._step_codec_names()))
 
     def _maybe_evict_straggler(self) -> None:
         """Per-step elastic hook: apply a group-eviction proposal (dead
@@ -530,7 +575,8 @@ class LPServingEngine:
             new_mesh = shrink_hybrid_mesh(self.mesh, evicted, self.tp)
             forward, forward_factory, _ = self._build_forward(new_mesh)
         if replan_lp_compiler(self._compiler, new_shape, forward=forward,
-                              forward_factory=forward_factory):
+                              forward_factory=forward_factory,
+                              recorder=self.recorder):
             self.health.evict(evicted)
             self.K = new_shape[0]
             self.mesh = new_mesh
@@ -539,6 +585,18 @@ class LPServingEngine:
                 # the dead hardware left the ring: its scripted faults
                 # stop firing and the survivors re-index
                 self._fault_plan.mark_recovered(evicted)
+            rec = self.recorder
+            if rec is not None:
+                # geometry timeline entry: the eviction applies in the
+                # step hook BEFORE step ``_cur_step`` executes, so that
+                # step (and everything after) runs — and is attributed —
+                # at the new K
+                self._geom_events.append((self._cur_step, self.K))
+                rec.instant("elastic.evict", cat="elastic",
+                            group=evicted, reason=proposal.reason,
+                            step=self._cur_step,
+                            new_mesh_shape=list(new_shape))
+                rec.inc(obsm.EVICTIONS, reason=proposal.reason)
             self._replan_schedule()
 
     # ------------------------------------------------------ fault drills
@@ -572,6 +630,11 @@ class LPServingEngine:
             return None
 
         def hook(i: int) -> None:
+            # the hook fires before step ``i`` executes, so an eviction
+            # applied here changes the geometry step ``i`` runs under —
+            # the wire-attribution timeline depends on this ordering
+            self._cur_step = i
+            rec = self.recorder
             plan = self._fault_plan
             if plan is not None:
                 if self._corrupt_active:
@@ -587,6 +650,15 @@ class LPServingEngine:
                 self._maybe_evict_straggler()
             if plan is not None:
                 dead = plan.active_dead(i)
+                if rec is not None:
+                    # scripted drill events fired at this step (corrupt
+                    # swaps, first-time group deaths) — NaN-guard trips
+                    # happen inside compiled code, so the host-side
+                    # count is the injected corrupt steps forcing them
+                    for ev in plan.drain_events():
+                        rec.instant("fault." + ev["kind"], cat="fault",
+                                    **ev)
+                        rec.inc(obsm.FAULTS_INJECTED, kind=ev["kind"])
                 if dead is not None:
                     # the group is gone and not (yet) evicted: the halo
                     # collective would hang on it — surface a
@@ -602,7 +674,8 @@ class LPServingEngine:
         self, reqs: List[VideoRequest],
         snapshot: Optional[DenoiseSnapshot] = None,
     ) -> List[VideoResult]:
-        t0 = time.time()
+        t0 = perf_s()
+        rec = self.recorder
         shape = reqs[0].latent_shape
         ctx = jnp.concatenate([r.context for r in reqs], axis=0)
         null_ctx = jnp.zeros_like(ctx)
@@ -613,24 +686,89 @@ class LPServingEngine:
             for k in keys
         ], axis=0)
 
+        compiles0 = self._compiler.compiles
+        span = (rec.span("batch.denoise", cat="serve", size=len(reqs),
+                         latent_shape=shape, steps=self.num_steps,
+                         K=self.K, lp_impl=self.lp_impl)
+                if rec is not None else _NULL_CM)
         try:
-            z0 = lp_denoise(
-                None, z_T, self._sampler, self.num_steps, self.K, self.r,
-                self.cfg.patch_sizes, (1, 2, 3), uniform=self.uniform,
-                extras=(ctx, null_ctx, guidance), compiler=self._compiler,
-                step_hook=self._step_hook(), snapshot=snapshot,
-            )
+            with span:
+                z0 = lp_denoise(
+                    None, z_T, self._sampler, self.num_steps, self.K,
+                    self.r, self.cfg.patch_sizes, (1, 2, 3),
+                    uniform=self.uniform,
+                    extras=(ctx, null_ctx, guidance),
+                    compiler=self._compiler,
+                    step_hook=self._step_hook(), snapshot=snapshot,
+                    recorder=rec,
+                )
         finally:
             # a corrupt-wire drill must never outlive its batch (the
             # swap is one-step; a fault between swap and restore would
             # otherwise leak the corrupting codec into the next batch)
             self._restore_codec()
-        wall = time.time() - t0
+        wall = perf_s() - t0
+        if rec is not None:
+            rec.observe(obsm.BATCH_WALL_S, wall)
+            rec.inc(obsm.COMPILES, self._compiler.compiles - compiles0,
+                    epoch=self._compiler.plan_epoch)
         return [
             VideoResult(r.request_id, z0[i : i + 1], self.num_steps,
                         batch_wall_s=wall, batch_size=len(reqs))
             for i, r in enumerate(reqs)
         ]
+
+    # ------------------------------------------------- wire attribution
+    def _step_codec_names(self) -> List[str]:
+        """The codec name each forward pass runs under, resolved the
+        same way ``lp_denoise`` resolves its runs (schedule against the
+        sampler's sigma trajectory, else the fixed wire codec)."""
+        if self._schedule is not None:
+            from repro.policy.schedule import trajectory_sigmas
+
+            sigmas = trajectory_sigmas(self._sampler, self.num_steps)
+            return list(self._schedule.step_codecs(sigmas))
+        return [self.codec.name] * self.num_steps
+
+    def _record_batch_wire(self, shape: Tuple[int, int, int],
+                           batch_size: int) -> None:
+        """Derive the completed batch's per-step wire bytes by replaying
+        ``comm_model`` over the recorded geometry/codec timelines
+        (``repro.obs.account`` — exact per collective per tier, the
+        repo-wide byte-model invariant).  Steps duplicated by
+        snapshot-resumed retries are billed once, under the geometry
+        their surviving execution used; the duplicated work shows up in
+        ``serve.restarts``, not here."""
+        rec = self.recorder
+        if rec is None:
+            return
+        from repro.core.comm_model import VDMCommConfig
+        from repro.obs.account import attribute_denoise_steps
+
+        ccfg = VDMCommConfig(
+            latent_dims=tuple(shape),
+            latent_channels=self.cfg.latent_channels,
+            patch_sizes=self.cfg.patch_sizes,
+            d_model=self.cfg.d_model,
+            num_blocks=self.cfg.num_layers,
+            num_steps=self.num_steps,
+        )
+        # merge the codec timeline: latest event at or before each step
+        codecs = list(self._batch_codecs)
+        for from_step, names in self._codec_events:
+            for i in range(from_step, self.num_steps + 1):
+                codecs[i - 1] = names[i - 1]
+        records = attribute_denoise_steps(
+            ccfg, self.r, codecs, self._geom_events, tp=self.tp,
+            wire_shard=self.wire_shard, lp_impl=self.lp_impl,
+            links=rec.links, batch_size=batch_size,
+        )
+        rec.record_wire_steps(records)
+        runs = rec.measured_runs[self._runs_mark:]
+        if runs:
+            from repro.obs.account import reconcile_segments
+
+            rec.reconciliations.extend(reconcile_segments(records, runs))
 
     def run(self, max_batches: Optional[int] = None,
             max_restarts_per_batch: int = 2) -> List[VideoResult]:
@@ -651,6 +789,14 @@ class LPServingEngine:
             restarts = 0
             resumed_from = 0
             snapshot = DenoiseSnapshot() if self.snapshots else None
+            rec = self.recorder
+            # fresh attribution timelines for this batch (retries keep
+            # appending to them: the timeline describes the geometry of
+            # each logical step's SURVIVING execution)
+            self._geom_events = [(1, self.K)]
+            self._codec_events = []
+            self._batch_codecs = self._step_codec_names()
+            self._runs_mark = 0 if rec is None else len(rec.measured_runs)
             while True:
                 try:
                     results = self._denoise_batch(reqs, snapshot)
@@ -658,6 +804,10 @@ class LPServingEngine:
                         res.restarts = restarts
                         res.resumed_from_step = resumed_from
                     out.extend(results)
+                    self._record_batch_wire(reqs[0].latent_shape,
+                                            len(reqs))
+                    if rec is not None:
+                        rec.inc(obsm.BATCHES)
                     break
                 except (DeviceFailure, ServingFault) as e:
                     restarts += 1
@@ -666,6 +816,12 @@ class LPServingEngine:
                         self.last_steps_lost = max(
                             0, int(step) - 1 - snapshot.step)
                     resumed_from = 0 if snapshot is None else snapshot.step
+                    if rec is not None:
+                        rec.instant("batch.restart", cat="serve",
+                                    restarts=restarts,
+                                    fault=str(e),
+                                    resume_from=resumed_from)
+                        rec.inc(obsm.RESTARTS)
                     if restarts > max_restarts_per_batch:
                         raise
             batches += 1
