@@ -13,6 +13,7 @@ from repro.obs.clock import perf_s
 
 from . import (
     codec_schedule,
+    displaced_halo,
     fault_recovery,
     fig6_fig7_overlap,
     fig8_gpu_scaling,
@@ -41,6 +42,7 @@ ALL = {
     "hybrid_lp_tp": hybrid_lp_tp.run,
     "codec_schedule": codec_schedule.run,
     "wire_shard": wire_shard.run,
+    "displaced_halo": displaced_halo.run,
     "fault_recovery": fault_recovery.run,
     "obs_overhead": obs_overhead.run,
 }

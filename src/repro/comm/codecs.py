@@ -181,7 +181,8 @@ def int4_wire_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:
 
 
 CODEC_NAMES = ("fp32", "bf16", "int8", "int4", "int8-residual",
-               "int4-residual")
+               "int4-residual", "displaced", "displaced:int8-residual",
+               "displaced:int4-residual")
 
 
 def get_codec(name: Union[str, Codec, None]) -> Codec:
@@ -199,6 +200,19 @@ def get_codec(name: Union[str, Codec, None]) -> Codec:
     }
     if name in base:
         return base[name]
+    if name == "displaced":
+        # bare ``displaced`` is sugar for the default residual base
+        name = "displaced:int8-residual"
+    if name.startswith("displaced:"):
+        from .residual import ResidualCodec
+
+        innerc = get_codec(name[len("displaced:"):])
+        if not isinstance(innerc, ResidualCodec):
+            raise ValueError(
+                "displaced halo needs a *-residual base codec (the EF "
+                f"carry is the staleness corrector), got {innerc.name!r}"
+            )
+        return ResidualCodec(base=innerc.base, name=name, displaced=True)
     if name.endswith("-residual"):
         from .residual import ResidualCodec
 

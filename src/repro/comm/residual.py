@@ -50,6 +50,13 @@ class ResidualCodec(Codec):
     base: Codec = dataclasses.field(default_factory=IntCodec)
     name: str = "int8-residual"
     stateful: bool = True
+    # displaced mode: the halo exchange deposits the *previous* step's
+    # decoded slab (already sitting in the scan carry) into the blend
+    # while this step's ppermute lands into the carry for step t+1 — the
+    # DistriFusion construction, with the EF carry absorbing staleness.
+    # The first step of every scan run stays synchronous (fresh flag in
+    # the wire state); resolved via ``get_codec("displaced:<base>")``.
+    displaced: bool = False
 
     def __post_init__(self):
         # mirror the base codec's wire accounting (the delta construction

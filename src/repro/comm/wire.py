@@ -41,6 +41,20 @@ from .residual import ResidualCodec, residual_decode, residual_encode
 WireState = Dict[str, Any]
 
 
+def _dir_key(t) -> str:
+    """Stable per-direction state key for one halo transfer round.
+
+    ``halo_spec`` emits exactly one transfer per nonzero window offset,
+    so the signed offset identifies the direction (``"+1"`` = slab from
+    the left neighbor, ``"-1"`` = from the right, ...).  Keying the
+    send/err/recv state by direction — instead of positional round
+    index — makes it structurally impossible for one direction's stale
+    slab to be read back for the other (the directional-mixing bug
+    class), and survives any reordering of ``spec.transfers``.
+    """
+    return f"{t.offset:+d}"
+
+
 def init_halo_wire_state(codec, spec: HaloSpec,
                          rest_shape: Tuple[int, ...]) -> WireState:
     """Zeroed codec state for one halo-LP geometry.
@@ -50,7 +64,17 @@ def init_halo_wire_state(codec, spec: HaloSpec,
     indexes the same leaves with Python rank ints.  ``ag_prev`` is the
     decoded gathered-core table — identical on every rank by
     construction, kept per-rank (K, K, ...) so the layout is uniform.
-    Stateless codecs get an empty dict (still scan-carry compatible).
+    The ``pp_*`` leaves are dicts keyed per direction
+    (:func:`_dir_key`), one entry per ppermute round.  Stateless codecs
+    get an empty dict (still scan-carry compatible).
+
+    Displaced codecs additionally carry a per-rank ``fresh`` flag,
+    initialized to ones: the first exchange after ANY state init (start
+    of a scan run, dim rotation, codec-segment boundary, replan, resume)
+    deposits the freshly decoded slabs — i.e. runs synchronous — and
+    zeroes the flag, so later steps in the run deposit the one-step-stale
+    carry instead.  This is the dim-rotation flush rule: a rotation
+    re-inits state, which re-arms the flag.
     """
     codec = get_codec(codec)
     if not codec.stateful:
@@ -61,13 +85,19 @@ def init_halo_wire_state(codec, spec: HaloSpec,
     def z(shape):
         return jnp.zeros(shape, jnp.float32)
 
-    return {
-        "pp_send": tuple(z((K, t.length) + rest) for t in spec.transfers),
-        "pp_err": tuple(z((K, t.length) + rest) for t in spec.transfers),
-        "pp_recv": tuple(z((K, t.length) + rest) for t in spec.transfers),
+    state = {
+        "pp_send": {_dir_key(t): z((K, t.length) + rest)
+                    for t in spec.transfers},
+        "pp_err": {_dir_key(t): z((K, t.length) + rest)
+                   for t in spec.transfers},
+        "pp_recv": {_dir_key(t): z((K, t.length) + rest)
+                    for t in spec.transfers},
         "ag_prev": z((K, K, spec.core_pad) + rest),
         "ag_err": z((K, spec.core_pad) + rest),
     }
+    if getattr(codec, "displaced", False):
+        state["fresh"] = jnp.ones((K,), jnp.float32)
+    return state
 
 
 def _pin(x):
@@ -199,24 +229,42 @@ def compressed_halo_exchange(
     only the wire transport is split.
 
     ``nan_guard`` wraps every decode in :func:`_finite_or`: a corrupted
-    payload is replaced by the rank-local stale slab (residual codecs'
-    ``pp_recv`` reference — which is then also NOT advanced, so the
-    reference stays the last healthy decode) or by zeros (stateless).
+    payload is replaced by the rank-local stale slab (the SAME
+    direction's residual ``pp_recv`` reference — which is then also NOT
+    advanced, so the reference stays the last healthy decode) or by
+    zeros (stateless).
+
+    Displaced codecs (``codec.displaced``) deposit the *previous* step's
+    decoded slab (the ``pp_recv`` carry as of entry) into the
+    accumulator while this step's ppermute lands in the carry for the
+    next step — one-step-stale boundary activations, DistriFusion-style,
+    with the EF delta protocol re-injecting the staleness error into the
+    next residual.  The first exchange after a state init runs
+    synchronous (``fresh`` flag).  The collectives issued are IDENTICAL
+    to the synchronous path (elementwise select only), so wire bytes per
+    collective per tier still match ``comm_model`` exactly.
     """
     stateful = isinstance(codec, ResidualCodec)
     base = codec.base if stateful else codec
+    displaced = stateful and getattr(codec, "displaced", False)
     acc_len = spec.core_pad + spec.max_transfer
     trail = (1,) * (wpred.ndim - 1)
     acc = jnp.zeros((acc_len,) + wpred.shape[1:], jnp.float32)
     K = spec.num_partitions
     new_state = dict(state) if stateful else {}
     if stateful:
-        new_state["pp_send"] = list(state["pp_send"])
-        new_state["pp_err"] = list(state["pp_err"])
-        new_state["pp_recv"] = list(state["pp_recv"])
+        new_state["pp_send"] = dict(state["pp_send"])
+        new_state["pp_err"] = dict(state["pp_err"])
+        new_state["pp_recv"] = dict(state["pp_recv"])
+    if displaced:
+        # per-rank scalar inside shard_map (the lp-axis dim is dropped
+        # by the caller); ones right after init_halo_wire_state
+        fresh = state["fresh"].reshape(()) > 0.5
+        new_state["fresh"] = jnp.zeros_like(state["fresh"])
 
-    def send(ti: int, t) -> Tuple:
+    def send(t) -> Tuple:
         """Encode + issue one round; returns (wire, meta, slab_shape)."""
+        dk = _dir_key(t)
         slab = jax.lax.dynamic_slice_in_dim(
             wpred, jnp.asarray(t.src_start)[rank], t.length, 0
         )
@@ -224,10 +272,10 @@ def compressed_halo_exchange(
         slab = slab * valid.reshape((t.length,) + trail).astype(slab.dtype)
         if stateful:
             wire, meta, n_send, n_err = residual_encode(
-                base, slab, state["pp_send"][ti], state["pp_err"][ti]
+                base, slab, state["pp_send"][dk], state["pp_err"][dk]
             )
-            new_state["pp_send"][ti] = n_send
-            new_state["pp_err"][ti] = n_err
+            new_state["pp_send"][dk] = n_send
+            new_state["pp_err"][dk] = n_err
         else:
             wire, meta = codec.encode(slab)
         got_wire, got_meta = _ppermute_msg(
@@ -236,17 +284,24 @@ def compressed_halo_exchange(
         )
         return got_wire, got_meta, slab.shape
 
-    def deposit(acc, ti: int, t, msg) -> jnp.ndarray:
+    def deposit(acc, t, msg) -> jnp.ndarray:
         got_wire, got_meta, slab_shape = msg
         if stateful:
+            dk = _dir_key(t)
+            prev = state["pp_recv"][dk]      # this direction's stale slab
             got, n_recv = residual_decode(
-                base, got_wire, got_meta, state["pp_recv"][ti], slab_shape
+                base, got_wire, got_meta, prev, slab_shape
             )
             if nan_guard:
-                stale = state["pp_recv"][ti]
-                got = _finite_or(got, stale)
-                n_recv = _finite_or(n_recv, stale)
-            new_state["pp_recv"][ti] = n_recv
+                got = _finite_or(got, prev)
+                n_recv = _finite_or(n_recv, prev)
+            new_state["pp_recv"][dk] = n_recv
+            if displaced:
+                # blend the step-(t-1) slab; the fresh decode only feeds
+                # the carry (consumed at step t+1).  First step of a run
+                # is synchronous: prev is zeros there, and zeros are NOT
+                # a valid boundary activation.
+                got = jnp.where(fresh, got, prev)
         else:
             got = codec.decode(got_wire, got_meta, slab_shape)
             if nan_guard:
@@ -255,8 +310,7 @@ def compressed_halo_exchange(
         cur = jax.lax.dynamic_slice_in_dim(acc, dst, t.length, 0)
         return jax.lax.dynamic_update_slice_in_dim(acc, cur + got, dst, 0)
 
-    msgs = ([send(ti, t) for ti, t in enumerate(spec.transfers)]
-            if eager_sends else None)
+    msgs = ([send(t) for t in spec.transfers] if eager_sends else None)
     # own window -> own core (local, never coded)
     own_off = jnp.asarray([spec.core_start[k] - spec.starts[k] for k in range(K)])
     own = jax.lax.dynamic_slice_in_dim(wpred, own_off[rank], spec.core_pad, 0)
@@ -264,12 +318,8 @@ def compressed_halo_exchange(
         acc, own.astype(jnp.float32), 0, 0
     )
     for ti, t in enumerate(spec.transfers):
-        msg = msgs[ti] if eager_sends else send(ti, t)
-        acc = deposit(acc, ti, t, msg)
-    if stateful:
-        new_state["pp_send"] = tuple(new_state["pp_send"])
-        new_state["pp_err"] = tuple(new_state["pp_err"])
-        new_state["pp_recv"] = tuple(new_state["pp_recv"])
+        msg = msgs[ti] if eager_sends else send(t)
+        acc = deposit(acc, t, msg)
     return acc, new_state
 
 
@@ -376,14 +426,21 @@ def simulate_halo_forward(
         off = spec.core_start[k] - spec.starts[k]
         accs.append(a.at[: spec.core_pad].set(wp[k, off : off + spec.core_pad]))
 
+    displaced = stateful and getattr(codec, "displaced", False)
     new_state: WireState = {}
     if stateful:
         new_state = {
-            "pp_send": [list(jnp.split(s, K)) for s in state["pp_send"]],
-            "pp_err": [list(jnp.split(s, K)) for s in state["pp_err"]],
-            "pp_recv": [list(jnp.split(s, K)) for s in state["pp_recv"]],
+            "pp_send": {d: list(jnp.split(s, K))
+                        for d, s in state["pp_send"].items()},
+            "pp_err": {d: list(jnp.split(s, K))
+                       for d, s in state["pp_err"].items()},
+            "pp_recv": {d: list(jnp.split(s, K))
+                        for d, s in state["pp_recv"].items()},
         }
-    for ti, t in enumerate(spec.transfers):
+    if displaced:
+        new_state["fresh"] = jnp.zeros_like(state["fresh"])
+    for t in spec.transfers:
+        dk = _dir_key(t)
         msgs = []
         for j in range(K):  # every rank encodes (state advances SPMD-like)
             slab = wp[j, t.src_start[j] : t.src_start[j] + t.length]
@@ -392,10 +449,10 @@ def simulate_halo_forward(
             if stateful:
                 wire, meta, n_send, n_err = residual_encode(
                     base, slab,
-                    state["pp_send"][ti][j], state["pp_err"][ti][j],
+                    state["pp_send"][dk][j], state["pp_err"][dk][j],
                 )
-                new_state["pp_send"][ti][j] = n_send[None]
-                new_state["pp_err"][ti][j] = n_err[None]
+                new_state["pp_send"][dk][j] = n_send[None]
+                new_state["pp_err"][dk][j] = n_err[None]
             else:
                 wire, meta = codec.encode(slab)
             msgs.append((wire, meta))
@@ -408,14 +465,16 @@ def simulate_halo_forward(
                 meta = tuple(jnp.zeros_like(m) for m in msgs[0][1])
             shape = (t.length,) + rest
             if stateful:
-                got, n_recv = residual_decode(
-                    base, wire, meta, state["pp_recv"][ti][k], shape
-                )
+                prev = state["pp_recv"][dk][k]  # same-direction stale slab
+                got, n_recv = residual_decode(base, wire, meta, prev, shape)
                 if nan_guard:
-                    stale = state["pp_recv"][ti][k]
-                    got = _finite_or(got, stale)
-                    n_recv = _finite_or(n_recv, stale)
-                new_state["pp_recv"][ti][k] = n_recv[None]
+                    got = _finite_or(got, prev)
+                    n_recv = _finite_or(n_recv, prev)
+                new_state["pp_recv"][dk][k] = n_recv[None]
+                if displaced:
+                    # deposit the step-(t-1) slab; the fresh decode only
+                    # advances the carry (mirrors the SPMD deposit)
+                    got = jnp.where(state["fresh"][k] > 0.5, got, prev)
             else:
                 got = codec.decode(wire, meta, shape)
                 if nan_guard:
@@ -478,11 +537,8 @@ def simulate_halo_forward(
     out = jnp.moveaxis(out, 0, axis).astype(z.dtype)
     if not stateful:
         return out
-    new_state["pp_send"] = tuple(
-        jnp.concatenate(s) for s in new_state["pp_send"]
-    )
-    new_state["pp_err"] = tuple(jnp.concatenate(s) for s in new_state["pp_err"])
-    new_state["pp_recv"] = tuple(
-        jnp.concatenate(s) for s in new_state["pp_recv"]
-    )
+    for key in ("pp_send", "pp_err", "pp_recv"):
+        new_state[key] = {
+            d: jnp.concatenate(s) for d, s in new_state[key].items()
+        }
     return out, new_state

@@ -501,6 +501,19 @@ def lp_halo_wire_profile(
     1D codec'd halo model on every tier-1 (inter-group) link and the
     intra tier carries nothing of LP's.  Sharded: the per-device split
     of :func:`lp_halo_sharded_step_collectives`.
+
+    Returns ``{"inter", "intra", "hidden"}``.  ``hidden`` is the
+    displaced-halo tier: for a ``displaced:*`` step that is NOT the
+    first of its (rotation-dim x codec) run, the step consumes the
+    previous step's slabs already in the carry, so its inter-group
+    collective-permute bytes overlap the local compute instead of
+    gating the step — they are moved from ``inter`` (exposed) to
+    ``hidden``.  First-of-run steps stay fully exposed (the dim-rotation
+    flush forces them synchronous), and the core all-gather is always
+    exposed (the step cannot finish without the fresh cores).  The HLO
+    contract is over ``inter + hidden``: displaced mode changes WHEN
+    bytes gate the step, never how many cross the wire — the compiled
+    collectives are identical per collective per tier.
     """
     dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, M)
     cache: dict = {}
@@ -511,20 +524,30 @@ def lp_halo_wire_profile(
             if wire_shard:
                 d = lp_halo_sharded_step_collectives(cfg, M, T, r, dim,
                                                      codec=name)
-                cache[key] = (sum(d["inter"].values()),
+                cache[key] = (d["inter"]["collective-permute"],
+                              d["inter"]["all-gather"],
                               sum(d["intra"].values()))
             else:
                 d = lp_halo_codec_step_collectives(cfg, M, r, dim,
                                                    codec=name)
-                cache[key] = (sum(d.values()), 0)
+                cache[key] = (d["collective-permute"], d["all-gather"], 0)
         return cache[key]
 
-    inter = intra = 0
+    inter = intra = hidden = 0
+    prev_run = None
     for i, name in enumerate(step_codecs, start=1):
-        a, b = step(name, rotation_dim(i, dims))
-        inter += a
+        key = name if isinstance(name, str) else name.name
+        dim = rotation_dim(i, dims)
+        pp, ag, b = step(name, dim)
+        run = (dim, key)
+        if key.startswith("displaced") and run == prev_run:
+            hidden += pp          # slab ppermutes overlap the compute
+            inter += ag
+        else:
+            inter += pp + ag      # first-of-run / synchronous: all exposed
         intra += b
-    return {"inter": inter, "intra": intra}
+        prev_run = run
+    return {"inter": inter, "intra": intra, "hidden": hidden}
 
 
 def lp_halo_hybrid_step_collectives(

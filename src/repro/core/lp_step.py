@@ -693,10 +693,16 @@ def lp_denoise(
             cur_state, cur_dim = None, None
             if recorder is not None:
                 recorder.record_replan(i, comp.num_partitions, cur_epoch)
-            if snapshot is not None and i > start + 1:
+            if snapshot is not None and i - 1 >= max(start, 1):
                 # a re-plan is a boundary too (state re-zeroes here):
                 # record the pre-replan latent so a failure during the
-                # first post-replan step resumes right before it
+                # first post-replan step resumes right before it.  The
+                # ``i == start + 1`` case (a replan firing on the FIRST
+                # resumed step) must re-record too: ``z`` equals the
+                # snapshot's latent then, but the record re-stamps the
+                # boundary with the NEW epoch — a second fault resumes
+                # from a boundary whose epoch matches the geometry its
+                # replay will re-derive, never a pre-replan stamp.
                 snapshot.record(i - 1, z, cur_epoch)
                 if recorder is not None:
                     recorder.record_snapshot(i - 1)

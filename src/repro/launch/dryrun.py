@@ -159,6 +159,14 @@ def _vdm_lp_step(cfg: ArchConfig, shape: ShapeConfig, mesh, parallel,
             f"value-faithful blend); got --lp-impl {lp_impl} (the measured "
             "HLO would be uncoded)"
         )
+    if (wire_codec and str(wire_codec).startswith("displaced")
+            and lp_impl not in ("halo", "halo_hybrid")):
+        raise ValueError(
+            f"--wire-codec {wire_codec} is a displaced halo codec, which "
+            "needs carry-resident slab state — only the halo family keeps "
+            f"one (psum/gspmd have no per-direction slab carry); got "
+            f"--lp-impl {lp_impl}"
+        )
     # hierarchy-aware wire defaults: eager sends + tp-sharded wire on
     # for hybrid meshes (the tp axis is what gets sharded over)
     if eager_sends is None:

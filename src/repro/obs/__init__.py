@@ -136,12 +136,20 @@ class FlightRecorder:
 
 
     def record_wire_steps(self, records: Sequence[dict]) -> None:
-        """Attribution rows -> trace instants + tiered byte counters."""
+        """Attribution rows -> trace instants + tiered byte counters.
+
+        ``hidden_bytes`` (the displaced-halo portion of ``inter_bytes``
+        that overlaps compute, see ``account.attribute_denoise_steps``)
+        rides the same instants and the by-tier counter — it is an
+        attribution OF inter bytes, not an extra tier, so the collective
+        byte counters (which gate HLO-exactness) are unchanged.
+        """
         self.wire_steps.extend(records)
         for rec in records:
             self.instant("wire.step", cat="wire", **{
                 k: rec[k] for k in
-                ("step", "dim", "codec", "K", "inter_bytes", "intra_bytes")
+                ("step", "dim", "codec", "K", "inter_bytes", "intra_bytes",
+                 "hidden_bytes") if k in rec
             })
             for tier in ("inter", "intra"):
                 for coll, nbytes in rec.get(tier, {}).items():
@@ -150,9 +158,20 @@ class FlightRecorder:
         if records and self.trace is not None:
             tot_inter = sum(r["inter_bytes"] for r in records)
             tot_intra = sum(r["intra_bytes"] for r in records)
+            tot_hidden = sum(r.get("hidden_bytes", 0.0) for r in records)
             self.counter_sample("wire.bytes_by_tier",
-                                {"inter": tot_inter, "intra": tot_intra},
+                                {"inter": tot_inter, "intra": tot_intra,
+                                 "hidden": tot_hidden},
                                 cat="wire")
+
+    def record_reconciliations(self, rows: Sequence[dict]) -> None:
+        """Predicted-vs-measured rows (``account.reconcile_segments``)
+        -> ``wire.reconcile`` instants.  ``unattributed_steps`` travels
+        with each row so ``validate_trace`` can fail a trace whose
+        reconciliation silently skipped steps."""
+        self.reconciliations.extend(rows)
+        for row in rows:
+            self.instant("wire.reconcile", cat="wire", **row)
 
     def record_plan(self, plan, candidates: Optional[Sequence[dict]] = None,
                     context: str = "serve") -> None:
@@ -167,6 +186,7 @@ class FlightRecorder:
             "inter_bytes": float(plan.inter_bytes),
             "intra_bytes": float(plan.intra_bytes),
             "wire_time_ms": float(plan.wire_time_ms),
+            "hidden_bytes": float(getattr(plan, "hidden_bytes", 0)),
         }
         if candidates is not None:
             row["candidates"] = list(candidates)

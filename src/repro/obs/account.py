@@ -88,6 +88,15 @@ def attribute_denoise_steps(
     rotation index is the global step ``i``, exactly as ``lp_denoise``
     computes it after a replan.  ``links`` (a ``policy.autotune
     .LinkModel``) prices each step's predicted wire time.
+
+    Displaced codecs (``displaced:*``): ``inter_bytes`` stays the TOTAL
+    inter payload (HLO-matching — the collectives are identical), and
+    ``hidden_bytes`` records the slab-ppermute portion that overlaps
+    compute on every step that is not the first of its (dim x codec x
+    K) run — the same run-boundary rule ``lp_denoise`` uses to flush
+    the stale carry.  ``pred_wire_time_ms`` prices only the EXPOSED
+    bytes (``inter - hidden``).  Non-displaced codecs get
+    ``hidden_bytes = 0`` and identical records to before.
     """
     if not geometry or geometry[0][0] > 1:
         raise ValueError(f"geometry timeline must start at step 1: "
@@ -95,6 +104,7 @@ def attribute_denoise_steps(
     epochs = sorted(geometry, key=lambda g: g[0])
     records: List[dict] = []
     cache: Dict[tuple, dict] = {}
+    prev_run = None
     for i, codec in enumerate(step_codecs, start=1):
         epoch_idx, K = 0, epochs[0][1]
         for j, (start, k) in enumerate(epochs):
@@ -110,6 +120,12 @@ def attribute_denoise_steps(
         tiers = cache[key]
         inter_b = float(sum(tiers.get("inter", {}).values()))
         intra_b = float(sum(tiers.get("intra", {}).values()))
+        hidden_b = 0.0
+        if (str(codec).startswith("displaced") and prev_run == key
+                and lp_impl in HALO_IMPLS):
+            hidden_b = float(tiers.get("inter", {})
+                             .get("collective-permute", 0.0))
+        prev_run = key
         rec = {
             "step": i,
             "dim": dim,
@@ -127,9 +143,11 @@ def attribute_denoise_steps(
                       tiers.get("intra", {}).items()},
             "inter_bytes": inter_b,
             "intra_bytes": intra_b,
+            "hidden_bytes": hidden_b,
         }
         if links is not None:
-            rec["pred_wire_time_ms"] = links.wire_time_ms(inter_b, intra_b)
+            rec["pred_wire_time_ms"] = links.wire_time_ms(
+                inter_b - hidden_b, intra_b)
         records.append(rec)
     return records
 
@@ -193,13 +211,26 @@ def reconcile_segments(
     run with the summed prediction over its step range — the
     calibration feedback that tells the autotuner whether its
     ``LinkModel`` gbps defaults match the deployed links.
+
+    A measured step with no attribution record (or a record without a
+    ``pred_wire_time_ms``) is NOT silently reconciled as zero-cost
+    wire: it is counted in the row's ``unattributed_steps``, and
+    ``validate_trace`` fails a trace whose reconciliation carries a
+    nonzero count — a hole in the attribution is a bug in the feeder,
+    not free bytes.
     """
     by_step = {r["step"]: r for r in records}
     out = []
     for m in measured:
         steps = range(int(m["start"]), int(m["stop"]) + 1)
-        pred = sum(by_step[s].get("pred_wire_time_ms", 0.0)
-                   for s in steps if s in by_step)
+        pred = 0.0
+        unattributed = 0
+        for s in steps:
+            rec = by_step.get(s)
+            if rec is None or "pred_wire_time_ms" not in rec:
+                unattributed += 1
+            else:
+                pred += rec["pred_wire_time_ms"]
         row = {
             "start": int(m["start"]),
             "stop": int(m["stop"]),
@@ -207,8 +238,9 @@ def reconcile_segments(
             "dim": m.get("dim"),
             "measured_wall_ms": float(m["wall_s"]) * 1e3,
             "pred_wire_time_ms": pred,
+            "unattributed_steps": unattributed,
         }
-        if pred > 0:
+        if pred > 0 and not unattributed:
             row["measured_over_pred"] = row["measured_wall_ms"] / pred
         out.append(row)
     return out

@@ -168,4 +168,11 @@ def validate_trace(doc: dict) -> List[str]:
                 json.dumps(ev["args"])
             except TypeError:
                 errs.append(f"{where}: args not JSON-serialisable")
+            ua = ev["args"].get("unattributed_steps") \
+                if isinstance(ev["args"], dict) else None
+            if isinstance(ua, (int, float)) and ua > 0:
+                # a reconciliation row that skipped steps means the wire
+                # attribution has a hole — never "free" wire time
+                errs.append(f"{where}: {ev.get('name')} has "
+                            f"unattributed_steps={ua}")
     return errs

@@ -30,6 +30,15 @@ closed-form walk rather than a search:
    10:1 ratio the sharded wire dominates every unsharded plan, while
    equal-bandwidth links flip the decision back (the reassembly gather
    then costs more than the inter saving).
+5. ``displaced:*`` candidates (stale-slab halo, ``comm/wire.py``) tie
+   their residual bases on bytes but zero out the slab-ppermute term of
+   the EXPOSED wire profile (``lp_halo_wire_profile``'s ``hidden``
+   tier), so the ranking schedules them wherever the envelope's sigma
+   credit admits the staleness floor — trading quality headroom at the
+   noise-dominated head for wire time the compute can hide.  They are
+   only offered on single-rotation-dim geometries (a dim switch forces
+   a synchronous first step, so length-1 runs hide nothing) and pin the
+   plan to the halo family (psum/gspmd keep no slab carry).
 """
 from __future__ import annotations
 
@@ -54,7 +63,15 @@ from .schedule import (
 )
 
 #: Candidate codecs the planner may schedule, all conformance-gated.
+#: The ``displaced:*`` variants move the same bytes as their residual
+#: bases but hide the slab-ppermute portion behind compute (see
+#: ``comm_model.lp_halo_wire_profile``'s ``hidden`` tier), at a steep
+#: quality floor — the envelope's sigma credit confines them to the
+#: high-noise head.  They are dropped on multi-rotation-dim geometries,
+#: where every (dim x codec) run has length 1 and the mandatory
+#: synchronous first step means nothing would ever be hidden.
 DEFAULT_CANDIDATES = (
+    "displaced:int4-residual", "displaced:int8-residual",
     "int4-residual", "int4", "int8-residual", "int8", "bf16", "fp32",
 )
 
@@ -100,9 +117,14 @@ class StepPolicyPlan:
     envelope_db: float                  # conservative schedule envelope
     # two-tier wire profile (hybrid meshes; zeros when tp == 1):
     wire_shard: bool = False            # shard the halo wire over tp
-    inter_bytes: int = 0                # per-device inter-group bytes
+    inter_bytes: int = 0                # per-device EXPOSED inter bytes
     intra_bytes: int = 0                # per-device intra-group LP bytes
     wire_time_ms: float = 0.0           # weighted two-tier wire time
+    # displaced-halo slab ppermutes that overlap compute instead of
+    # gating the step (``lp_halo_wire_profile``'s hidden tier); the
+    # compiled HLO still moves inter_bytes + hidden_bytes on the inter
+    # links, but wire_time_ms prices only the exposed portion
+    hidden_bytes: int = 0
 
     @property
     def num_segments(self) -> int:
@@ -117,21 +139,28 @@ class StepPolicyPlan:
             f"{s.codec}[{s.start}..{s.stop}]" for s in self.segments
         )
         shard = " wire_shard" if self.wire_shard else ""
+        hidden = (f", {self.hidden_bytes} B hidden"
+                  if self.hidden_bytes else "")
         return (
             f"{self.lp_impl}{shard} schedule={self.schedule.spec} -> {segs} "
             f"({self.reduction_vs_fp32_halo:.2f}x vs fp32 halo, "
-            f"envelope {self.envelope_db:.0f} dB)"
+            f"envelope {self.envelope_db:.0f} dB{hidden})"
         )
 
 
 def _rank_candidates(
     cfg: cm.VDMCommConfig, K: int, r: float, names: Sequence[str]
 ) -> Tuple[str, ...]:
-    """Cheapest-first by fixed-codec denoise bytes; residual variants
-    win byte ties (same wire layout, strictly better measured PSNR)."""
+    """Cheapest-first by fixed-codec denoise bytes; displaced variants
+    win byte ties over their bases (same wire layout, strictly less
+    EXPOSED wire time — and sorting them first is what lets the
+    sigma-threshold stacker give them the high-noise head while the
+    synchronous base covers the range below), then residual variants
+    over plain (same layout, strictly better measured PSNR)."""
     def key(name):
         return (
             cm.comm_lp_halo_codec(cfg, K, r, name),
+            0 if name.startswith("displaced") else 1,
             0 if name.endswith("-residual") else 1,
             -codec_floor_db(name),
         )
@@ -193,6 +222,7 @@ def _plan_from_schedule(
     num_steps = len(sigmas)
     step_codecs = schedule.step_codecs(sigmas)
     segments = segment_steps(schedule, sigmas)
+    displaced = any(str(c).startswith("displaced") for c in step_codecs)
     wire = cm.comm_lp_halo_scheduled(cfg, K, r, step_codecs)
     fp32_halo = cm.comm_lp_halo_scheduled(cfg, K, r, ("fp32",) * num_steps)
     cfg_t = dataclasses.replace(cfg, num_steps=num_steps)
@@ -203,7 +233,11 @@ def _plan_from_schedule(
         lp_impl = select_lp_impl(K, tp)
         if lp_impl == "shard_map":
             wire = psum
-    elif allow_engine_flip and psum < wire and tp == 1:
+    elif allow_engine_flip and psum < wire and tp == 1 and not displaced:
+        # (``not displaced``: a displaced schedule was chosen to HIDE
+        # wire time behind compute — a raw-bytes comparison against the
+        # psum ring would discard exactly that, and the psum engine has
+        # no carry-resident slab state to run it on anyway)
         # a strict floor shrank the compressible range enough that the
         # psum engine's fp32 ring beats the codec'd halo schedule.
         # Auto plans only: an explicit operator schedule is a pin, not
@@ -217,11 +251,20 @@ def _plan_from_schedule(
         envelope = float("inf")
     else:
         lp_impl = "halo_hybrid" if tp > 1 else "halo"
+    if displaced and lp_impl not in ("halo", "halo_hybrid"):
+        raise ValueError(
+            f"schedule {schedule.spec!r} uses a displaced halo codec, "
+            f"which needs carry-resident slab state — the {lp_impl!r} "
+            "engine keeps none (psum/gspmd family)"
+        )
     # two-tier wire profile + the wire-shard decision (weighted TIME,
     # not bytes: sharding trades inter-group bytes for an intra-group
-    # reassembly gather, and only the link ratio says which wins)
+    # reassembly gather, and only the link ratio says which wins).  The
+    # profile's ``inter`` is the EXPOSED portion — displaced steps'
+    # hidden slab ppermutes are priced at zero, which is exactly how
+    # displaced wins the ranking without moving fewer bytes.
     ws = False
-    inter = intra = 0
+    inter = intra = hidden = 0
     if lp_impl == "halo_hybrid" and tp > 1:
         prof_off = cm.lp_halo_wire_profile(cfg, K, tp, r, step_codecs,
                                            wire_shard=False)
@@ -231,11 +274,11 @@ def _plan_from_schedule(
         t_on = links.wire_time_ms(prof_on["inter"], prof_on["intra"])
         ws = (t_on < t_off) if wire_shard is None else bool(wire_shard)
         prof = prof_on if ws else prof_off
-        inter, intra = prof["inter"], prof["intra"]
+        inter, intra, hidden = prof["inter"], prof["intra"], prof["hidden"]
     elif lp_impl == "halo":
         prof = cm.lp_halo_wire_profile(cfg, K, 1, r, step_codecs,
                                        wire_shard=False)
-        inter = prof["inter"]
+        inter, hidden = prof["inter"], prof["hidden"]
     else:  # shard_map: the psum ring, per device
         inter = psum // K
     return StepPolicyPlan(
@@ -252,6 +295,7 @@ def _plan_from_schedule(
         inter_bytes=int(inter),
         intra_bytes=int(intra),
         wire_time_ms=links.wire_time_ms(inter, intra),
+        hidden_bytes=int(hidden),
     )
 
 
@@ -279,9 +323,18 @@ def auto_plan(
     chosen plan plus the autotuner's ranked candidate field — cheapest
     first, each priced by its fixed-codec denoise bytes — so a trace
     shows not just what was picked but what it beat."""
-    if not usable_dims(cfg.latent_dims, cfg.patch_sizes, K):
+    dims = usable_dims(cfg.latent_dims, cfg.patch_sizes, K)
+    if not dims:
         raise ValueError(
             f"no latent dim of {cfg.latent_dims} has >= {K} patches"
+        )
+    if len(dims) > 1:
+        # the dim rotation re-inits wire state every step here, so every
+        # (dim x codec) run has length 1 and its mandatory synchronous
+        # first step is the WHOLE run: displaced would hide zero bytes
+        # while still paying the staleness floor — never worth offering
+        candidates = tuple(
+            c for c in candidates if not str(c).startswith("displaced")
         )
     sigmas = trajectory_sigmas(sampler, num_steps)
     schedule = schedule_for_floor(cfg, K, r, psnr_floor_db, candidates,

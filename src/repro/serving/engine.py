@@ -199,13 +199,17 @@ class LPServingEngine:
         if mesh is not None and tp_axis in mesh.axis_names:
             tp = mesh.shape[tp_axis]
         # Hierarchy-aware wire knobs.  ``eager_sends=None`` resolves to
-        # on for hybrid meshes (the ppermute rounds can overlap the
-        # Phi_m tail there) and off otherwise; ``wire_shard=None`` lets
-        # the autotuner's two-tier link model decide when a schedule is
-        # being planned, and otherwise defaults to on for hybrid meshes
-        # (T-fold fewer inter-group bytes; bit-identical values).
-        self.eager_sends = (tp > 1) if eager_sends is None else \
-            bool(eager_sends)
+        # on for hybrid meshes running a halo-family engine (the
+        # ppermute rounds can overlap the Phi_m tail there) and off
+        # otherwise; ``wire_shard=None`` lets the autotuner's two-tier
+        # link model decide when a schedule is being planned, and
+        # otherwise defaults to on for hybrid meshes (T-fold fewer
+        # inter-group bytes; bit-identical values).  BOTH tri-states
+        # resolve AFTER plan resolution + engine selection below — the
+        # autotuner may flip the engine family (e.g. a fp32-only
+        # schedule to psum), and resolving from ``tp`` alone here would
+        # bake wire knobs for an engine the plan then discards.
+        eager_sends_pinned = eager_sends is not None
         if wire_shard and tp <= 1:
             raise ValueError(
                 "wire_shard shards the halo wire over the tp axis; the "
@@ -261,8 +265,6 @@ class LPServingEngine:
             wire_shard = self.plan.wire_shard
         elif psnr_floor is not None:
             raise ValueError("psnr_floor needs codec_schedule")
-        self.wire_shard = (tp > 1) if wire_shard is None else \
-            bool(wire_shard)
         # Engine selection: "auto" follows the comm model (psum at K=2,
         # halo family beyond — select_lp_impl); a non-trivial wire codec
         # or schedule implies the halo family, which is where the codec
@@ -279,6 +281,15 @@ class LPServingEngine:
                 lp_impl not in ("halo", "halo_hybrid"):
             what = (f"wire_codec={self.codec.name!r}" if codec_active
                     else f"codec_schedule={schedule.spec!r}")
+            names = (list(self.plan.step_codecs) if self.plan is not None
+                     else [self.codec.name])
+            if any(str(n).startswith("displaced") for n in names):
+                raise ValueError(
+                    f"{what} uses a displaced halo codec, which needs "
+                    "carry-resident slab state — only the halo family "
+                    "keeps one (the psum/gspmd engines have no "
+                    f"per-direction slab carry); got lp_impl={lp_impl!r}"
+                )
             raise ValueError(
                 f"{what} needs the halo family (the codec layer lives "
                 f"there), got lp_impl={lp_impl!r}"
@@ -286,6 +297,14 @@ class LPServingEngine:
         self.lp_impl = lp_impl
         self.mesh = mesh
         self.tp = tp
+        # tri-state resolution, now that the engine family is final
+        # (satellite fix: was previously derived from ``tp`` alone,
+        # before the plan could flip the family)
+        halo_family = self.lp_impl in ("halo", "halo_hybrid")
+        self.eager_sends = bool(eager_sends) if eager_sends_pinned else \
+            (tp > 1 and halo_family)
+        self.wire_shard = (tp > 1 and halo_family) if wire_shard is None \
+            else bool(wire_shard)
         if self.lp_impl not in ("halo", "halo_hybrid") or tp <= 1 or \
                 mesh is None:
             # sharding is a property of the mesh-bound halo wire; the
@@ -768,7 +787,7 @@ class LPServingEngine:
         if runs:
             from repro.obs.account import reconcile_segments
 
-            rec.reconciliations.extend(reconcile_segments(records, runs))
+            rec.record_reconciliations(reconcile_segments(records, runs))
 
     def run(self, max_batches: Optional[int] = None,
             max_restarts_per_batch: int = 2) -> List[VideoResult]:

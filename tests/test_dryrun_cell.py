@@ -124,3 +124,15 @@ def test_dryrun_skip_rule(tmp_path):
     res = _run(["--arch", "granite-3-2b", "--shape", "long_500k"])
     assert res.returncode == 0
     assert "SKIP" in res.stdout and "quadratic" in res.stdout
+
+
+def test_dryrun_displaced_needs_halo_family(tmp_path):
+    """A displaced (stale-slab) wire codec needs the halo family's
+    carry-resident slab state — gspmd's value-faithful blend has none,
+    so the cell must fail loudly instead of lowering a wire whose
+    staleness corrector silently never runs."""
+    res = _run(["--arch", "wan21-dit-1.3b", "--shape", "vdm_3s",
+                "--mesh", "6x1", "--lp-impl", "gspmd",
+                "--wire-codec", "displaced:int8-residual"])
+    assert "FAIL" in res.stdout
+    assert "displaced halo codec" in res.stdout

@@ -59,15 +59,22 @@ R = 0.5
 
 ALL_CODECS = ("fp32", "bf16", "int8", "int4", "int8-residual")
 STATELESS = ("fp32", "bf16", "int8", "int4")
+# displaced (stale-slab) halo cells: the dim-rotation flush makes the
+# FIRST step of every run synchronous, so a single-pass cell must land
+# exactly where its residual base does — well above the displaced
+# envelope floor, which prices multi-step staleness (the multi-step
+# staleness bound itself is property-tested in test_wire_codec.py).
+DISPLACED = ("displaced:int8-residual", "displaced:int4-residual")
 ENGINE_CODECS = {
     "psum": ("fp32",),            # the psum engine has no codec layer
     "gspmd": STATELESS,           # residual state needs the halo schedule
-    "halo": ALL_CODECS,
-    "halo_hybrid": ALL_CODECS,
+    "halo": ALL_CODECS + DISPLACED[:1],
+    "halo_hybrid": ALL_CODECS + DISPLACED[:1],
     # tp-sharded wire: every codec incl. BOTH residual scan-carry
-    # variants — the cells assert bit-equality with the unsharded
-    # hybrid engine (output AND codec state)
-    "halo_hybrid_ws": ALL_CODECS + ("int4-residual",),
+    # variants and BOTH displaced variants (whose state adds the
+    # staleness flag) — the cells assert bit-equality with the
+    # unsharded hybrid engine (output AND codec state)
+    "halo_hybrid_ws": ALL_CODECS + ("int4-residual",) + DISPLACED,
     "simulate": ALL_CODECS,
 }
 # wire-shard at T=4: K=2 fits the (2, 4) mesh on 8 fake devices
@@ -113,7 +120,8 @@ def _den(x):
 
 @pytest.mark.parametrize("K", KS)
 @pytest.mark.parametrize("dim", [0, 1, 2])
-@pytest.mark.parametrize("codec_name", ALL_CODECS + ("int4-residual",))
+@pytest.mark.parametrize("codec_name",
+                         ALL_CODECS + ("int4-residual",) + DISPLACED)
 def test_simulate_engine_conformance(K, dim, codec_name):
     """The single-process mirror passes every cell of the matrix without
     needing fake devices — this is the tier-1 face of the suite."""

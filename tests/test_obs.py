@@ -255,6 +255,112 @@ def test_attribution_prices_wire_time_with_links():
         assert r["pred_wire_time_ms"] == want > 0
 
 
+def test_attribution_displaced_hidden_bytes_match_wire_profile():
+    """Displaced attribution: ``inter_bytes`` stays the TOTAL (HLO-
+    matching) payload; ``hidden_bytes`` marks the slab-ppermute portion
+    of every step that is NOT the first of its (dim x codec x K) run;
+    and the exposed/hidden split sums to exactly what the autotuner
+    prices via ``lp_halo_wire_profile``."""
+    from repro.policy.autotune import DEFAULT_LINKS
+
+    cfg = _ccfg(dims=(8, 2, 2), steps=4)   # single usable dim at K=3
+    assert usable_dims(cfg.latent_dims, cfg.patch_sizes, 3) == (0,)
+    step_codecs = ["displaced:int8-residual"] * 3 + ["int8-residual"]
+    recs = attribute_denoise_steps(cfg, R, step_codecs, [(1, 3)],
+                                   links=DEFAULT_LINKS)
+    sync = cm.lp_halo_codec_step_collectives(cfg, 3, R, 0,
+                                             codec="int8-residual")
+    pp = float(sync["collective-permute"])
+    # first-of-run exposed, later displaced steps hide their ppermutes,
+    # and the codec-segment boundary (step 4) is first-of-run again
+    assert [r["hidden_bytes"] for r in recs] == [0.0, pp, pp, 0.0]
+    for r in recs:
+        assert r["inter"] == {k: float(v) for k, v in sync.items()}
+        assert r["pred_wire_time_ms"] == DEFAULT_LINKS.wire_time_ms(
+            r["inter_bytes"] - r["hidden_bytes"], r["intra_bytes"])
+    prof = cm.lp_halo_wire_profile(cfg, 3, 1, R, step_codecs)
+    assert sum(r["inter_bytes"] - r["hidden_bytes"] for r in recs) == \
+        float(prof["inter"])
+    assert sum(r["hidden_bytes"] for r in recs) == float(prof["hidden"])
+    # the HLO contract is exposed + hidden: identical to the sync total
+    sync_recs = attribute_denoise_steps(cfg, R, ["int8-residual"] * 4,
+                                        [(1, 3)])
+    assert sum(r["inter_bytes"] for r in recs) == \
+        sum(r["inter_bytes"] for r in sync_recs)
+
+
+def test_attribution_displaced_hides_nothing_across_dim_rotation():
+    """With >1 usable dim the rotation flushes the stale carry every
+    step (each step is first-of-run), so nothing is ever hidden — the
+    rule that makes ``auto_plan`` drop displaced candidates there."""
+    cfg = _ccfg(steps=4)    # (8, 8, 12): three usable dims at K=3
+    assert len(usable_dims(cfg.latent_dims, cfg.patch_sizes, 3)) == 3
+    recs = attribute_denoise_steps(
+        cfg, R, ["displaced:int8-residual"] * 4, [(1, 3)])
+    assert [r["hidden_bytes"] for r in recs] == [0.0] * 4
+    prof = cm.lp_halo_wire_profile(cfg, 3, 1, R,
+                                   ["displaced:int8-residual"] * 4)
+    assert float(prof["hidden"]) == 0.0
+
+
+def test_reconcile_counts_unattributed_steps_and_trace_fails():
+    """Satellite regression: a measured run whose steps have no
+    attribution record (or no priced prediction) must surface a nonzero
+    ``unattributed_steps`` — and a trace carrying such a reconciliation
+    row must FAIL validation, never read as free wire time."""
+    from repro.obs import reconcile_segments
+    from repro.policy.autotune import DEFAULT_LINKS
+
+    cfg = _ccfg(steps=4)
+    recs = attribute_denoise_steps(cfg, R, ["int8"] * 2, [(1, 3)],
+                                   links=DEFAULT_LINKS)
+    measured = [
+        {"start": 1, "stop": 2, "wall_s": 0.2, "codec": "int8"},
+        {"start": 3, "stop": 4, "wall_s": 0.2, "codec": "int8"},
+    ]
+    rows = reconcile_segments(recs, measured)
+    assert rows[0]["unattributed_steps"] == 0
+    assert rows[0]["measured_over_pred"] > 0
+    assert rows[1]["unattributed_steps"] == 2    # steps 3-4: no records
+    assert "measured_over_pred" not in rows[1]   # never ratio'd vs a hole
+    # records lacking pred_wire_time_ms (no links) count as holes too
+    unpriced = attribute_denoise_steps(cfg, R, ["int8"] * 4, [(1, 3)])
+    rows2 = reconcile_segments(unpriced, measured)
+    assert all(r["unattributed_steps"] == 2 for r in rows2)
+
+    rec = FlightRecorder()
+    rec.record_reconciliations([rows[0]])
+    assert validate_trace(rec.trace.to_json()) == []  # clean row passes
+    rec.record_reconciliations([rows[1]])
+    errs = validate_trace(rec.trace.to_json())
+    assert errs and any("unattributed_steps=2" in e for e in errs)
+    assert any("wire.reconcile" in e for e in errs)
+
+
+def test_record_wire_steps_carries_hidden_bytes():
+    """``hidden_bytes`` rides the wire.step instants and the by-tier
+    counter sample as an attribution of inter bytes — the collective
+    byte counters themselves stay HLO-exact (unchanged)."""
+    cfg = _ccfg(dims=(8, 2, 2), steps=3)
+    rec = FlightRecorder()
+    recs = attribute_denoise_steps(cfg, R, ["displaced:int8-residual"] * 3,
+                                   [(1, 3)], links=rec.links)
+    rec.record_wire_steps(recs)
+    steps = [e for e in rec.trace.events if e["name"] == "wire.step"]
+    assert [e["args"]["hidden_bytes"] for e in steps] == \
+        [r["hidden_bytes"] for r in recs]
+    counter = [e for e in rec.trace.events
+               if e["name"] == "wire.bytes_by_tier"][0]
+    assert counter["args"]["hidden"] == sum(r["hidden_bytes"]
+                                            for r in recs) > 0
+    # counters (the HLO-exactness gate) bill the TOTAL inter payload
+    total = sum(rec.metrics.counter_value(obsm.WIRE_BYTES, tier="inter",
+                                          collective=c)
+                for c in ("all-gather", "collective-permute"))
+    assert total == sum(r["inter_bytes"] for r in recs)
+    assert validate_trace(rec.trace.to_json()) == []
+
+
 def test_tiered_collectives_unifies_dryrun_schema():
     """dryrun's ``collectives_by_group`` -> the wire-schema records,
     keyed by the same tier vocabulary the derived attribution uses."""

@@ -13,8 +13,10 @@ runtime/elastic.replan_lp_compiler from a ``lp_denoise`` step hook) must:
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import LPStepCompiler, lp_denoise
+from repro.core.lp_step import DenoiseSnapshot
 from repro.diffusion.sampler import FlowMatchEuler
 from repro.runtime.elastic import replan_lp_compiler
 from repro.runtime.straggler import StragglerState
@@ -80,6 +82,72 @@ def test_replan_resets_codec_state_exactly_once_and_never_reuses_stale():
     # both geometries present in the key space, old one merely dormant
     keys = list(comp._cache.keys())
     assert {k[-5] for k in keys} == {3, 4}  # num_partitions key slot
+
+
+def test_replan_fault_resume_twice_bit_identical_to_fault_free():
+    """Satellite regression (post-replan boundary snapshot): replan ->
+    fault -> resume -> replan-on-the-first-resumed-step -> fault ->
+    resume must finish bit-identical to a fault-free run that took the
+    same final geometry.  The sharp edge is the second replan firing at
+    ``i == start + 1``: no step has advanced since the resume, but the
+    boundary must still be re-stamped with the NEW plan epoch (the old
+    ``i - 1 > start`` guard skipped it, leaving a stamp whose epoch
+    disagreed with the geometry a later replay re-derives)."""
+    z = _single_dim_z(2)
+    steps = 10
+    sampler = FlowMatchEuler(steps)
+
+    class Fault(RuntimeError):
+        pass
+
+    def mk_comp(K, shape):
+        return LPStepCompiler(
+            _den, sampler.update, K, 0.5, (1, 2, 2), (1, 2, 3),
+            uniform=True, codec="int8-residual", mesh_shape=shape,
+        )
+
+    def run(comp, hook, snap):
+        return lp_denoise(None, z, sampler, steps, 4, 0.5, (1, 2, 2),
+                          (1, 2, 3), uniform=True, compiler=comp,
+                          step_hook=hook, snapshot=snap)
+
+    # fault-free twin: one replan straight to the final (2, 1) ring
+    ref_comp = mk_comp(4, (4, 1))
+    ref = run(ref_comp, lambda i: (
+        i == 4 and ref_comp.plan_epoch == 0
+        and replan_lp_compiler(ref_comp, (2, 1))), None)
+
+    comp = mk_comp(4, (4, 1))
+    snap = DenoiseSnapshot()
+    # attempt 1: shrink at step 4, die at step 6
+    with pytest.raises(Fault):
+        def hook1(i):
+            if i == 4:
+                assert replan_lp_compiler(comp, (3, 1))
+            if i == 6:
+                raise Fault
+        run(comp, hook1, snap)
+    assert (snap.step, snap.plan_epoch) == (3, 1)
+
+    # attempt 2: resumes at the boundary; a SECOND shrink fires on the
+    # first resumed step, then the fault repeats
+    with pytest.raises(Fault):
+        def hook2(i):
+            if i == 4 and comp.plan_epoch == 1:
+                assert replan_lp_compiler(comp, (2, 1))
+            if i == 6:
+                raise Fault
+        run(comp, hook2, snap)
+    assert snap.resumes == 1
+    # the regression: same boundary step, re-stamped with the new epoch
+    assert (snap.step, snap.plan_epoch) == (3, 2)
+    assert snap.plan_epoch == comp.plan_epoch
+
+    # attempt 3: clean replay from the re-stamped boundary
+    out = run(comp, lambda i: None, snap)
+    assert snap.resumes == 2
+    assert comp.num_partitions == 2 and comp.plan_epoch == 2
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_replan_mesh_bound_compiler_requires_rebound_forward():

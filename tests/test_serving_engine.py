@@ -263,3 +263,67 @@ def test_engine_determinism_across_batching():
     np.testing.assert_allclose(
         np.asarray(solo), np.asarray(paired[7]), atol=2e-4, rtol=2e-3,
     )
+
+
+class _FakeMesh:
+    """Axis-shape stand-in: the constructor's tri-state resolution only
+    reads ``axis_names`` and ``shape`` (closures capture the mesh but
+    are not traced until a batch is served)."""
+
+    def __init__(self, lp, tp):
+        self.axis_names = ("data", "model")
+        self.shape = {"data": lp, "model": tp}
+
+
+def test_engine_wire_knob_tri_states_resolve_after_plan():
+    """Satellite regression (pinned-vs-auto matrix): ``eager_sends`` /
+    ``wire_shard`` tri-states must resolve from the FINAL engine family
+    — the autotuner may flip a fp32-only schedule to the psum engine,
+    and the pre-fix resolution from ``tp`` alone baked hybrid wire
+    knobs for an engine the plan then discarded."""
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    def mk(**kw):
+        return LPServingEngine(fwd, params, cfg, num_partitions=2,
+                               num_steps=2, **kw)
+
+    # tp=1, off-mesh: autos resolve off; an eager pin is still honored
+    eng = mk(wire_codec="int8-residual")
+    assert (eng.eager_sends, eng.wire_shard) == (False, False)
+    assert mk(wire_codec="int8", eager_sends=True).eager_sends is True
+    with pytest.raises(ValueError, match="tp axis"):
+        mk(wire_shard=True)  # nothing to shard over
+
+    # hybrid mesh, halo family: autos resolve on; pins override both
+    mesh = _FakeMesh(2, 2)
+    eng = mk(wire_codec="int8-residual", mesh=mesh)
+    assert eng.lp_impl == "halo_hybrid"
+    assert (eng.eager_sends, eng.wire_shard) == (True, True)
+    eng = mk(wire_codec="int8-residual", mesh=mesh,
+             eager_sends=False, wire_shard=False)
+    assert (eng.eager_sends, eng.wire_shard) == (False, False)
+
+    # THE regression: a fp32-only schedule on the hybrid mesh flips the
+    # family to the psum engine at K=2 — the wire knobs must follow the
+    # final family, not the mesh shape
+    eng = mk(codec_schedule="fp32", mesh=mesh)
+    assert eng.lp_impl == "shard_map"
+    assert (eng.eager_sends, eng.wire_shard) == (False, False)
+    # an auto-resolving pin that the flip leaves nothing to honor on is
+    # a loud config error, not a silent downgrade
+    with pytest.raises(ValueError, match="mesh-bound halo family"):
+        mk(codec_schedule="fp32", mesh=mesh, wire_shard=True)
+    # a schedule that keeps the halo family keeps the pins verbatim
+    eng = mk(codec_schedule="int8-residual", mesh=mesh, eager_sends=True)
+    assert eng.lp_impl == "halo_hybrid"
+    assert (eng.eager_sends, eng.wire_shard) == (True, True)
+
+    # displaced codecs are halo-family-only at the engine boundary too
+    with pytest.raises(ValueError, match="displaced halo codec"):
+        mk(codec_schedule="displaced:int8-residual@0.5,int8-residual",
+           lp_impl="shard_map")

@@ -343,3 +343,120 @@ def test_scheduled_replan_still_resets_state_once():
     # inits: segment 1 start, re-plan at step 3, segment 2 boundary
     assert comp.state_inits == 3, comp.state_inits
     assert comp.plan_epoch == 1
+
+
+# ------------------------------------------------ displaced hidden tier
+def _single_dim_ccfg(num_steps=6):
+    # patch grid (61, 1, 1): only the frame dim is usable at K=4, so
+    # the rotation never flushes the stale-slab carry and every
+    # non-first step of a displaced run hides its ppermutes
+    return cm.VDMCommConfig(
+        latent_dims=(61, 2, 2), latent_channels=16,
+        patch_sizes=(1, 2, 2), d_model=96, num_blocks=2,
+        num_steps=num_steps,
+    )
+
+
+def test_wire_profile_hidden_tier_accounting():
+    """``lp_halo_wire_profile``'s hidden tier: first-of-run displaced
+    steps stay exposed, later ones move exactly their inter ppermute
+    bytes to ``hidden``, and exposed + hidden equals the synchronous
+    base profile — displaced never changes HOW MANY bytes the compiled
+    HLO moves, only when they gate the step."""
+    cfg = _single_dim_ccfg()
+    codecs = ("displaced:int8-residual",) * 4 + ("int8-residual",) * 2
+    prof = cm.lp_halo_wire_profile(cfg, 4, 1, 0.5, codecs)
+    sync = cm.lp_halo_codec_step_collectives(cfg, 4, 0.5, 0,
+                                             codec="int8-residual")
+    pp, ag = float(sync["collective-permute"]), float(sync["all-gather"])
+    # steps 2-4 hide their ppermutes; 1 (first-of-run), 5-6 (sync) don't
+    assert prof["hidden"] == 3 * pp
+    assert prof["inter"] == 6 * (pp + ag) - 3 * pp
+    base = cm.lp_halo_wire_profile(cfg, 4, 1, 0.5, ("int8-residual",) * 6)
+    assert prof["inter"] + prof["hidden"] == base["inter"]
+    # sharded wire: the same split, against the sharded step model
+    profs = cm.lp_halo_wire_profile(cfg, 4, 2, 0.5, codecs,
+                                    wire_shard=True)
+    d = cm.lp_halo_sharded_step_collectives(cfg, 4, 2, 0.5, 0,
+                                            codec="int8-residual")
+    assert profs["hidden"] == 3 * float(d["inter"]["collective-permute"])
+    bases = cm.lp_halo_wire_profile(cfg, 4, 2, 0.5,
+                                    ("int8-residual",) * 6,
+                                    wire_shard=True)
+    assert profs["inter"] + profs["hidden"] == bases["inter"]
+    assert profs["intra"] == bases["intra"]  # reassembly never hidden
+
+
+def test_wire_profile_hides_nothing_under_dim_rotation():
+    """Multi-dim rotation: every step is first-of-run (the re-init
+    flushes the carry), so a displaced schedule hides zero bytes."""
+    cfg = _ccfg()
+    prof = cm.lp_halo_wire_profile(cfg, 4, 1, 0.5,
+                                   ("displaced:int8-residual",) * 6)
+    base = cm.lp_halo_wire_profile(cfg, 4, 1, 0.5,
+                                   ("int8-residual",) * 6)
+    assert prof["hidden"] == 0
+    assert prof["inter"] == base["inter"]
+
+
+def test_rank_candidates_displaced_wins_byte_ties():
+    from repro.policy.autotune import _rank_candidates
+
+    cfg = _single_dim_ccfg()
+    ranked = _rank_candidates(cfg, 4, 0.5, (
+        "int8-residual", "displaced:int8-residual",
+        "int4-residual", "displaced:int4-residual", "bf16",
+    ))
+    assert ranked == ("displaced:int4-residual", "int4-residual",
+                      "displaced:int8-residual", "int8-residual", "bf16")
+
+
+def test_auto_plan_schedules_displaced_on_single_dim_geometry():
+    """On a single-rotation-dim workload the autotuner gives the
+    high-noise head to the displaced variant (same bytes, strictly less
+    exposed wire time), prices only the exposed portion, and records
+    the hidden bytes on the plan; on a multi-dim workload it never
+    offers displaced at all."""
+    from repro.obs import FlightRecorder
+    from repro.policy.autotune import DEFAULT_LINKS
+
+    cfg = _single_dim_ccfg()
+    rec = FlightRecorder()
+    plan = auto_plan(cfg, 4, 0.5, FlowMatchEuler(6), 6,
+                     psnr_floor_db=24.0, recorder=rec)
+    assert plan.lp_impl == "halo"
+    assert plan.step_codecs[0].startswith("displaced:")
+    assert plan.envelope_db >= 24.0
+    assert plan.hidden_bytes > 0
+    prof = cm.lp_halo_wire_profile(cfg, 4, 1, 0.5, plan.step_codecs)
+    assert plan.inter_bytes == int(prof["inter"])       # EXPOSED only
+    assert plan.hidden_bytes == int(prof["hidden"])
+    assert plan.wire_time_ms == DEFAULT_LINKS.wire_time_ms(
+        plan.inter_bytes, plan.intra_bytes)
+    assert "hidden" in plan.describe()
+    assert rec.plans[0]["hidden_bytes"] == float(plan.hidden_bytes)
+    # byte parity: the displaced head moved no extra bytes vs its base
+    sync = tuple(c.split(":", 1)[1] if c.startswith("displaced:") else c
+                 for c in plan.step_codecs)
+    assert plan.wire_bytes == cm.comm_lp_halo_scheduled(cfg, 4, 0.5, sync)
+    # multi-dim geometry: displaced dropped from the candidate field
+    plan2 = auto_plan(_ccfg(), 4, 0.5, FlowMatchEuler(6), 6,
+                      psnr_floor_db=24.0)
+    assert not any(c.startswith("displaced") for c in plan2.step_codecs)
+    assert plan2.hidden_bytes == 0
+
+
+def test_displaced_explicit_schedule_keeps_halo_and_prices_exposed():
+    """An explicit displaced spec stays on the halo engine even where
+    the raw-bytes rule would pick the psum ring — hiding wire time
+    behind compute is the point, and the psum engine has no slab carry
+    to run it on anyway."""
+    cfg = _single_dim_ccfg(60)
+    plan = resolve_cli_schedule("displaced:int8-residual@0.2,fp32",
+                                cfg, 2, 0.75, FlowMatchEuler(60), 60)
+    assert plan.lp_impl == "halo"
+    assert plan.hidden_bytes > 0
+    from repro.policy.autotune import DEFAULT_LINKS
+
+    assert plan.wire_time_ms == pytest.approx(DEFAULT_LINKS.wire_time_ms(
+        plan.inter_bytes, plan.intra_bytes))
