@@ -15,6 +15,7 @@ the JSON for CI artifact upload.
 from __future__ import annotations
 
 import json
+import os
 
 import jax
 
@@ -29,8 +30,10 @@ K = 2
 R = 0.5
 ITERS = 5
 OUT_JSON = "BENCH_obs_overhead.json"
-OUT_TRACE = "obs_trace.json"
-OUT_METRICS = "obs_metrics.prom"
+# trace/metrics snapshots are run artifacts, not baselines: they land
+# under artifacts/ (gitignored, CI-uploaded), unlike the BENCH json
+OUT_TRACE = os.path.join("artifacts", "obs_trace.json")
+OUT_METRICS = os.path.join("artifacts", "obs_metrics.prom")
 MAX_OVERHEAD_PCT = 3.0
 
 
@@ -75,6 +78,7 @@ def run(print_csv=True):
     overhead_pct = (rec_step_ms - bare_step_ms) / bare_step_ms * 100.0
     extra_compiles = compiles_rec - compiles_bare
 
+    os.makedirs(os.path.dirname(OUT_TRACE), exist_ok=True)
     rec.write_trace(OUT_TRACE)
     rec.write_metrics(OUT_METRICS)
     trace_errors = validate_trace(json.load(open(OUT_TRACE)))

@@ -22,6 +22,7 @@ from . import (
     hybrid_lp_tp,
     obs_overhead,
     quality_fidelity,
+    serving_load,
     step_latency,
     table1_comm,
     table2_latency,
@@ -45,6 +46,7 @@ ALL = {
     "displaced_halo": displaced_halo.run,
     "fault_recovery": fault_recovery.run,
     "obs_overhead": obs_overhead.run,
+    "serving_load": serving_load.run,
 }
 
 

@@ -1,0 +1,255 @@
+"""Serving load-harness gate -> BENCH_serving_load.json.
+
+Four sub-gates over one offered-load replay of the reduced WAN DiT
+serving engine (``serving/loadgen.py`` + ``obs/slo.py``):
+
+* **workload determinism** — the same ``WorkloadSpec`` seed must yield
+  a byte-identical workload (sha256 digest equality), and a different
+  seed a different one;
+* **latency/goodput under load** — at a fixed offered load (0.6 x the
+  calibrated single-batch capacity) the replay must keep goodput >=
+  half the offered rate and e2e p99 within a small multiple of the
+  warm batch wall.  Both gates are *relative* to the calibrated wall,
+  so they hold on any host;
+* **offline == live** — the SLO report recomputed from the written
+  ``--trace-out`` artifact must equal the live report byte-for-byte
+  (the evaluator only reads raw stamps; JSON float round-trip is
+  exact);
+* **lifecycle-obs overhead** — with full request-lifecycle tracing on
+  (recorder + SLO spec), serving the same batch must cost <= 3% wall
+  and exactly 0 extra compiles vs. the bare engine, extending the
+  ``benchmarks/obs_overhead.py`` invariant to the serve path.
+
+Artifacts (trace/metrics/report) land under ``artifacts/`` —
+gitignored, uploaded by CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.models import dit, frontends
+from repro.obs import FlightRecorder
+from repro.obs.clock import perf_s
+from repro.obs.slo import SLOSpec, evaluate_slo, rows_from_trace
+from repro.serving.engine import LPServingEngine, VideoRequest
+from repro.serving.loadgen import (
+    RequestClass,
+    VirtualClock,
+    WorkloadSpec,
+    build_workload,
+    run_workload,
+    workload_digest,
+)
+
+STEPS = 4
+K = 2
+SHAPE = (6, 8, 12)
+MAX_BATCH = 4
+NUM_REQUESTS = 16
+SEED = 0
+UTILIZATION = 0.6          # offered load as a fraction of capacity
+MIN_GOODPUT_FRAC = 0.5     # goodput >= this fraction of offered load
+MAX_P99_BATCH_WALLS = 15.0  # e2e p99 <= this many warm batch walls
+MAX_OVERHEAD_PCT = 3.0
+OVERHEAD_ITERS = 10
+OUT_JSON = "BENCH_serving_load.json"
+ART_DIR = "artifacts"
+OUT_TRACE = os.path.join(ART_DIR, "load_trace.json")
+OUT_METRICS = os.path.join(ART_DIR, "load_metrics.jsonl")
+OUT_REPORT = os.path.join(ART_DIR, "load_slo_report.json")
+
+# one latent geometry for every class (one compiled step; the classes
+# differ only in SLO priority) — per-shape compile costs are
+# step_latency's business, not this gate's
+MIX = (
+    RequestClass("interactive", SHAPE, priority="interactive", weight=1.0),
+    RequestClass("standard", SHAPE, priority="standard", weight=2.0),
+    RequestClass("batch", SHAPE, priority="batch", weight=1.0),
+)
+
+
+def _engine():
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    return LPServingEngine(fwd, params, cfg, num_partitions=K,
+                           num_steps=STEPS, max_batch=MAX_BATCH,
+                           clock=VirtualClock()), cfg
+
+
+def _full_batch(cfg, n=MAX_BATCH, base_id=10_000):
+    return [
+        VideoRequest(request_id=base_id + i,
+                     context=frontends.text_context(
+                         jax.random.PRNGKey(i), 1, cfg),
+                     latent_shape=SHAPE, seed=i)
+        for i in range(n)
+    ]
+
+
+def run(print_csv=True):
+    os.makedirs(ART_DIR, exist_ok=True)
+
+    # -- gate 1: workload determinism (no devices involved) ------------
+    def wl(seed):
+        return build_workload(WorkloadSpec(
+            rate_rps=1.0, num_requests=NUM_REQUESTS, seed=seed, mix=MIX))
+
+    digest = workload_digest(wl(SEED))
+    det_same = workload_digest(wl(SEED)) == digest
+    det_diff = workload_digest(wl(SEED + 1)) != digest
+
+    # -- calibrate: warm the compiled step, measure the batch wall -----
+    engine, cfg = _engine()
+    # warm-up: the replay's ragged admissions hit every batch size
+    # 1..MAX_BATCH, and batch size is in the compiled shape — compile
+    # them all here so the measured run has zero retraces
+    for n in range(1, MAX_BATCH + 1):
+        for r in _full_batch(cfg, n=n, base_id=10_000 + 100 * n):
+            engine.submit(r)
+        engine.run()
+    walls = []
+    for it in range(2):
+        for r in _full_batch(cfg, base_id=20_000 + 100 * it):
+            engine.submit(r)
+        walls.append(engine.run()[0].batch_wall_s)
+    warm_wall_s = min(walls)
+    capacity_rps = MAX_BATCH / warm_wall_s
+    offered_rps = UTILIZATION * capacity_rps
+
+    # -- gate 2: offered-load replay with lifecycle obs on -------------
+    slo = SLOSpec.parse(
+        f"interactive:{10 * warm_wall_s:.6g},"
+        f"standard:{20 * warm_wall_s:.6g}@0.95,"
+        f"batch:{40 * warm_wall_s:.6g}@0.9")
+    rec = FlightRecorder()
+    engine.recorder = rec
+    engine.slo = slo
+    engine.clock = VirtualClock()
+    spec = WorkloadSpec(rate_rps=offered_rps, num_requests=NUM_REQUESTS,
+                        seed=SEED, mix=MIX)
+    workload = build_workload(spec)
+    results = run_workload(engine, workload)
+    live = evaluate_slo(rec.request_rows, spec=slo, num_devices=1,
+                        recorder=rec)
+    goodput = live["goodput_rps"]
+    p99_e2e = max(e["e2e_p99_s"] for e in live["classes"].values())
+    pass_goodput = goodput >= MIN_GOODPUT_FRAC * offered_rps
+    pass_p99 = p99_e2e <= MAX_P99_BATCH_WALLS * warm_wall_s
+
+    # -- gate 3: offline report from the trace artifact == live --------
+    rec.write_trace(OUT_TRACE)
+    rec.write_metrics(OUT_METRICS)
+    offline = evaluate_slo(rows_from_trace(json.load(open(OUT_TRACE))),
+                           spec=slo, num_devices=1)
+    # the live dict goes through the same JSON round-trip the offline
+    # one did, so equality is over identical float representations
+    pass_offline = json.loads(json.dumps(live)) == \
+        json.loads(json.dumps(offline))
+    with open(OUT_REPORT, "w") as f:
+        json.dump(live, f, indent=2, sort_keys=True)
+
+    # -- gate 4: lifecycle-obs overhead on the serve path --------------
+    def serve_once():
+        for r in _full_batch(cfg, base_id=30_000):
+            engine.submit(r)
+        t0 = perf_s()
+        out = engine.run()
+        jax.block_until_ready(out[0].latent)
+        return perf_s() - t0
+
+    engine.recorder = None
+    engine.slo = None
+    bare_s = min(serve_once() for _ in range(OVERHEAD_ITERS))
+    compiles0 = engine._compiler.compiles
+    engine.recorder = FlightRecorder()
+    engine.slo = slo
+    rec_s = min(serve_once() for _ in range(OVERHEAD_ITERS))
+    extra_compiles = engine._compiler.compiles - compiles0
+    overhead_pct = (rec_s - bare_s) / bare_s * 100.0
+    pass_overhead = overhead_pct <= MAX_OVERHEAD_PCT
+    pass_no_recompile = extra_compiles == 0
+
+    record = {
+        "config": "wan21_dit_1p3b reduced",
+        "num_steps": STEPS,
+        "num_partitions": K,
+        "max_batch": MAX_BATCH,
+        "num_requests": NUM_REQUESTS,
+        "workload_seed": SEED,
+        "workload_digest": digest,
+        "warm_batch_wall_s": warm_wall_s,
+        "capacity_rps": capacity_rps,
+        "offered_rps": offered_rps,
+        "served": len(results),
+        "goodput_rps": goodput,
+        "e2e_p99_s": p99_e2e,
+        "violations": live["violations"],
+        "slo_spec": slo.spec,
+        "bare_serve_s": bare_s,
+        "recorded_serve_s": rec_s,
+        "overhead_pct": overhead_pct,
+        "extra_compiles_with_recorder": extra_compiles,
+        "pass_determinism": bool(det_same and det_diff),
+        "pass_goodput": bool(pass_goodput),
+        "pass_p99": bool(pass_p99),
+        "pass_offline_equals_live": bool(pass_offline),
+        "pass_overhead": bool(pass_overhead),
+        "pass_no_recompile": bool(pass_no_recompile),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    if not (det_same and det_diff):
+        raise AssertionError(
+            f"workload not seed-deterministic (same={det_same}, "
+            f"diff={det_diff})")
+    if len(results) != NUM_REQUESTS:
+        raise AssertionError(
+            f"replay lost requests: {len(results)}/{NUM_REQUESTS}")
+    if not pass_goodput:
+        raise AssertionError(
+            f"goodput {goodput:.3f}rps < {MIN_GOODPUT_FRAC} x offered "
+            f"{offered_rps:.3f}rps")
+    if not pass_p99:
+        raise AssertionError(
+            f"e2e p99 {p99_e2e:.2f}s > {MAX_P99_BATCH_WALLS} x warm "
+            f"batch wall {warm_wall_s:.2f}s")
+    if not pass_offline:
+        raise AssertionError(
+            "offline SLO report (from trace artifact) != live report")
+    if not pass_no_recompile:
+        raise AssertionError(
+            f"lifecycle recorder caused {extra_compiles} extra compiles")
+    if not pass_overhead:
+        raise AssertionError(
+            f"lifecycle obs overhead {overhead_pct:.2f}% > "
+            f"{MAX_OVERHEAD_PCT}% (bare {bare_s:.3f}s vs recorded "
+            f"{rec_s:.3f}s per full batch)")
+
+    if print_csv:
+        print(f"serving_load/warm_batch,{warm_wall_s * 1e6:.0f},"
+              f"capacity={capacity_rps:.2f}rps")
+        print(f"serving_load/goodput,0,{goodput:.3f}rps of "
+              f"{offered_rps:.3f} offered")
+        print(f"serving_load/e2e_p99,{p99_e2e * 1e6:.0f},"
+              f"viol={live['violations']}")
+        print(f"serving_load/offline_eq,0,"
+              f"{'equal' if pass_offline else 'DIFF'}")
+        print(f"serving_load/overhead,0,{overhead_pct:.2f}% "
+              f"extra_compiles={extra_compiles}")
+        print(f"serving_load/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -70,6 +70,9 @@ def main():
     wall = perf_s() - t0
     print(f"Served {len(results)} requests in {wall:.1f}s "
           f"({wall/len(results):.1f}s/request on CPU)")
+    for r in sorted(results, key=lambda x: x.request_id):
+        print(f"  request {r.request_id}: wait={r.queue_wait_s:.2f}s "
+              f"e2e={r.e2e_s:.2f}s (batch of {r.batch_size})")
 
     # ---- quality: LP vs centralized on request 0
     req0 = [r for r in results if r.request_id == 0][0]

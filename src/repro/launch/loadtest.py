@@ -1,0 +1,213 @@
+"""Serving load-test CLI — offered-load replay + SLO report.
+
+  PYTHONPATH=src python -m repro.launch.loadtest --rate 2 --requests 12 \
+      --steps 4 --partitions 2 [--arrivals poisson] [--seed 0] \
+      [--mix 'clip,shape=6x8x12,priority=interactive;...'] \
+      [--slo 'interactive:30@0.99,standard:120@0.95'] \
+      [--trace-out artifacts/load_trace.json] \
+      [--metrics-out artifacts/load_metrics.jsonl] \
+      [--report-out artifacts/slo_report.json]
+
+Drives the serving engine open-loop: a seeded workload
+(``serving/loadgen.py`` — Poisson or deterministic arrivals over a
+request-mix of ``(latent_shape, guidance, psnr_floor, priority)``
+classes) is replayed on a virtual clock the engine advances by each
+batch's measured wall, then every request's lifecycle stamps are
+evaluated against the ``--slo`` deadlines (``obs/slo.py``): per-class
+queue-wait and e2e p50/p99, violations, burn rate, goodput per device.
+
+Offline mode re-derives the SAME report from a previously written
+trace artifact — no engine, no devices::
+
+  python -m repro.launch.loadtest --report-from artifacts/load_trace.json \
+      [--slo ...] [--num-devices N]
+
+Because the evaluator only ever reads the raw stamps, the offline
+report equals the live one for the same serve
+(``benchmarks/serving_load.py`` gates the equality byte-for-byte).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _add_engine_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--partitions", type=int, default=2)
+    ap.add_argument("--overlap", type=float, default=0.5)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--lp-impl", default="auto",
+                    choices=["auto", "uniform", "shard_map", "halo",
+                             "halo_hybrid"])
+    ap.add_argument("--wire-codec", default=None)
+    ap.add_argument("--codec-schedule", default=None)
+    ap.add_argument("--psnr-floor", type=float, default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="MxT hybrid mesh; M must equal --partitions")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="offered load, requests/second (virtual time)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--arrivals", default="poisson",
+                    choices=["poisson", "deterministic"])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed: arrivals, mix assignment and "
+                         "per-request latent seeds are all drawn from it "
+                         "(same seed -> byte-identical workload)")
+    ap.add_argument("--mix", default=None,
+                    help="request-mix classes, ';'-separated "
+                         "'name,shape=TxHxW[,guidance=G][,priority=P]"
+                         "[,weight=W][,psnr=F]' (default: built-in 3-class "
+                         "mix)")
+    ap.add_argument("--slo", default=None,
+                    help="SLO spec 'priority:deadline_s[@target],...' "
+                         "(default: obs/slo.py DEFAULT_SLO_SPEC)")
+    ap.add_argument("--num-devices", type=int, default=None,
+                    help="devices the goodput is normalized over "
+                         "(default: jax.device_count() live, 1 offline)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the lifecycle trace artifact here (input "
+                         "to --report-from)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot (.prom/.txt -> "
+                         "Prometheus, else JSONL)")
+    ap.add_argument("--report-out", default=None,
+                    help="write the SLO report JSON here")
+    ap.add_argument("--report-from", default=None, metavar="TRACE_JSON",
+                    help="offline: recompute the SLO report from a trace "
+                         "artifact instead of serving")
+    _add_engine_args(ap)
+    args = ap.parse_args(argv)
+
+    from repro.obs.slo import (
+        SLOSpec,
+        evaluate_slo,
+        format_report,
+        rows_from_trace,
+    )
+
+    if args.report_from:
+        with open(args.report_from) as f:
+            doc = json.load(f)
+        rows = rows_from_trace(doc)
+        report = evaluate_slo(rows, spec=args.slo,
+                              num_devices=args.num_devices or 1)
+        report["source"] = "trace"
+        print(format_report(report))
+        if args.report_out:
+            _write_json(args.report_out, report)
+            print(f"report: {args.report_out}")
+        return report
+
+    import jax
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.obs import FlightRecorder
+    from repro.serving.engine import LPServingEngine
+    from repro.serving.loadgen import (
+        VirtualClock,
+        WorkloadSpec,
+        build_workload,
+        parse_mix,
+        run_workload,
+        workload_digest,
+    )
+
+    spec = WorkloadSpec(rate_rps=args.rate, num_requests=args.requests,
+                        arrivals=args.arrivals, seed=args.seed,
+                        mix=parse_mix(args.mix))
+    workload = build_workload(spec)
+    print(f"workload: {len(workload)} requests at {args.rate}rps "
+          f"({args.arrivals}, seed={args.seed}) "
+          f"digest={workload_digest(workload)[:12]}")
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_hybrid_mesh, parse_mesh
+
+        m, t = parse_mesh(args.mesh)
+        if m != args.partitions:
+            raise SystemExit(f"--mesh {args.mesh}: LP axis {m} != "
+                             f"--partitions {args.partitions}")
+        mesh = make_hybrid_mesh(m, t)
+
+    recorder = FlightRecorder()
+    clock = VirtualClock()
+    slo = SLOSpec.parse(args.slo)   # None -> documented default spec
+    engine = LPServingEngine(fwd, params, cfg,
+                             num_partitions=args.partitions,
+                             overlap_ratio=args.overlap,
+                             num_steps=args.steps,
+                             max_batch=args.max_batch,
+                             lp_impl=args.lp_impl,
+                             wire_codec=args.wire_codec,
+                             codec_schedule=args.codec_schedule,
+                             psnr_floor=args.psnr_floor,
+                             mesh=mesh,
+                             recorder=recorder,
+                             clock=clock,
+                             slo=slo)
+    print(f"engine: lp_impl={engine.lp_impl} K={engine.K} "
+          f"max_batch={engine.max_batch} steps={args.steps} "
+          f"slo={engine.slo.spec}")
+
+    results = run_workload(engine, workload)
+    num_devices = (args.num_devices if args.num_devices is not None
+                   else jax.device_count())
+    report = evaluate_slo(recorder.request_rows, spec=engine.slo,
+                          num_devices=num_devices, recorder=recorder)
+    report["source"] = "live"
+    report["workload"] = {
+        "rate_rps": args.rate, "requests": len(workload),
+        "arrivals": args.arrivals, "seed": args.seed,
+        "digest": workload_digest(workload),
+    }
+    print(format_report(report))
+    print(f"served: {len(results)} results over "
+          f"{report['makespan_s']:.2f}s virtual "
+          f"({clock.now:.2f}s clock)")
+
+    if args.trace_out:
+        _ensure_dir(args.trace_out)
+        recorder.write_trace(args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"({len(recorder.trace.events)} events)")
+    if args.metrics_out:
+        _ensure_dir(args.metrics_out)
+        recorder.write_metrics(args.metrics_out)
+        print(f"metrics: {args.metrics_out}")
+    if args.report_out:
+        _write_json(args.report_out, report)
+        print(f"report: {args.report_out}")
+    return report
+
+
+def _ensure_dir(path: str) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+
+
+def _write_json(path: str, obj: dict) -> None:
+    _ensure_dir(path)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

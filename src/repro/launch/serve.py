@@ -150,7 +150,8 @@ def main(argv=None):
     for r in sorted(results, key=lambda x: x.request_id):
         resumed = f" resumed_from={r.resumed_from_step}" if r.restarts else ""
         print(f"request {r.request_id}: latent {tuple(r.latent.shape)} "
-              f"steps={r.num_steps} batch_wall={r.batch_wall_s:.1f}s "
+              f"steps={r.num_steps} wait={r.queue_wait_s:.2f}s "
+              f"e2e={r.e2e_s:.2f}s batch_wall={r.batch_wall_s:.1f}s "
               f"batch={r.batch_size} restarts={r.restarts}{resumed}")
     if engine.evictions:
         print(f"elastic: evictions={engine.evictions} K={engine.K} "

@@ -28,6 +28,14 @@ from .account import (
 )
 from .clock import perf_s, perf_us, wall_stamp_s
 from .metrics import MetricsRegistry
+from .slo import (
+    SLO_REPORT_SCHEMA,
+    SLOClass,
+    SLOSpec,
+    evaluate_slo,
+    report_from_metrics_jsonl,
+    rows_from_trace,
+)
 from .trace import TRACE_SCHEMA, TraceRecorder, validate_trace
 
 __all__ = [
@@ -36,6 +44,8 @@ __all__ = [
     "step_wire_attribution", "tiered_collectives",
     "tier_for_group_size", "reconcile_segments",
     "perf_s", "perf_us", "wall_stamp_s",
+    "SLOSpec", "SLOClass", "SLO_REPORT_SCHEMA", "evaluate_slo",
+    "rows_from_trace", "report_from_metrics_jsonl",
 ]
 
 
@@ -64,6 +74,7 @@ class FlightRecorder:
         self.plans: List[dict] = []         # resolved plan records
         self.measured_runs: List[dict] = []  # run-span wall times
         self.reconciliations: List[dict] = []  # predicted vs measured
+        self.request_rows: List[dict] = []  # per-request lifecycle rows
 
     # -- trace helpers (no-op when trace plane disabled) ---------------
     def span(self, name: str, cat: str = "serve", **args: Any):
@@ -133,6 +144,33 @@ class FlightRecorder:
     def record_replan(self, step: int, K: int, epoch: int) -> None:
         self.instant("plan.replan", cat="elastic", step=int(step),
                      K=int(K), epoch=int(epoch))
+
+    def record_request(self, row: dict) -> None:
+        """One completed request's lifecycle row (serving engine).
+
+        The row carries the full stamp set (``submit_s`` / ``admit_s``
+        / ``denoise_start_s`` / ``done_s`` on the engine's clock — the
+        workload's *virtual* timeline under the load harness) plus
+        ``priority``, batch identity, and the derived
+        ``queue_wait_s`` / ``e2e_s``.  It is emitted verbatim as a
+        ``request.lifecycle`` complete event so an offline evaluation
+        (``obs.slo.rows_from_trace``) sees byte-identical inputs to
+        the live one, and feeds the per-priority latency histograms.
+        """
+        self.request_rows.append(row)
+        if self.trace is not None:
+            self.trace.complete(
+                "request.lifecycle",
+                ts_us=float(row["submit_s"]) * 1e6,
+                dur_us=(float(row["done_s"]) - float(row["submit_s"]))
+                * 1e6,
+                cat="serve", **row)
+        priority = str(row.get("priority", "standard"))
+        self.observe(M.QUEUE_WAIT_S, row["queue_wait_s"],
+                     priority=priority)
+        self.observe(M.E2E_LATENCY_S, row["e2e_s"], priority=priority)
+        if row.get("violated"):
+            self.inc(M.SLO_VIOLATIONS, priority=priority)
 
 
     def record_wire_steps(self, records: Sequence[dict]) -> None:

@@ -10,12 +10,22 @@ the trace-schema tests pin.  Export formats:
 * **JSONL** (anything else): one JSON object per series, machine-
   diffable against ``comm_model`` outputs.
 
+Histograms keep a bounded **reservoir** of samples (Algorithm R, a
+deterministic per-registry PRNG): once a series passes ``hist_cap``,
+each new sample replaces a uniformly random held one, so p50/p99 stay
+unbiased estimates of the WHOLE stream instead of freezing on the
+first ``hist_cap`` (warm-up) observations.  ``count`` / ``sum`` stay
+exact running totals, and every snapshot row exports ``dropped`` (how
+many observations exceed the held sample count) so truncation is
+always visible.
+
 Recording is a dict update — no locks, no I/O until snapshot time, and
 never visible to jit.
 """
 from __future__ import annotations
 
 import json
+import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -46,20 +56,62 @@ SNAPSHOT_RECORDS = "snapshot.records"
 PLAN_WIRE_BYTES = "policy.plan_wire_bytes"
 PLAN_WIRE_TIME_MS = "policy.plan_wire_time_ms"
 PLAN_SEGMENTS = "policy.plan_segments"
+# request-lifecycle / SLO names (docs/observability.md, obs/slo.py)
+QUEUE_WAIT_S = "serve.queue_wait_s"
+E2E_LATENCY_S = "serve.e2e_latency_s"
+BATCH_OCCUPANCY = "serve.batch_occupancy"
+GOODPUT_RPS = "serve.goodput_rps"
+SLO_VIOLATIONS = "serve.slo_violations"
 
 
 def _labels(labels: Dict[str, object]) -> LabelKey:
     return tuple(sorted((k, str(v)) for k, v in labels.items()))
 
 
+class _Reservoir:
+    """Bounded sample reservoir (Vitter's Algorithm R) with exact
+    running ``seen`` / ``total``: quantiles come from a uniform sample
+    of the whole stream, count/sum stay exact, and ``dropped`` exposes
+    how many observations the reservoir is NOT holding."""
+
+    __slots__ = ("vals", "seen", "total", "mn", "mx")
+
+    def __init__(self) -> None:
+        self.vals: List[float] = []
+        self.seen = 0
+        self.total = 0.0
+        self.mn = float("inf")
+        self.mx = float("-inf")
+
+    def add(self, value: float, cap: int, rng: random.Random) -> None:
+        self.seen += 1
+        self.total += value
+        self.mn = min(self.mn, value)
+        self.mx = max(self.mx, value)
+        if len(self.vals) < cap:
+            self.vals.append(value)
+            return
+        j = rng.randrange(self.seen)
+        if j < cap:
+            self.vals[j] = value
+
+    @property
+    def dropped(self) -> int:
+        return self.seen - len(self.vals)
+
+
 class MetricsRegistry:
     """Counters/gauges/histograms keyed on (name, sorted labels)."""
 
-    def __init__(self, hist_cap: int = 65536) -> None:
+    def __init__(self, hist_cap: int = 65536, seed: int = 0) -> None:
         self._counters: Dict[Tuple[str, LabelKey], float] = {}
         self._gauges: Dict[Tuple[str, LabelKey], float] = {}
-        self._hists: Dict[Tuple[str, LabelKey], List[float]] = {}
+        self._hists: Dict[Tuple[str, LabelKey], _Reservoir] = {}
         self._hist_cap = hist_cap
+        # one seeded PRNG for every reservoir: the same observation
+        # sequence always yields the same held samples (replayable
+        # snapshots under a fixed workload seed)
+        self._rng = random.Random(seed)
 
     # -- recording ------------------------------------------------------
     def inc(self, name: str, value: float = 1.0, **labels) -> None:
@@ -70,9 +122,8 @@ class MetricsRegistry:
         self._gauges[(name, _labels(labels))] = float(value)
 
     def observe(self, name: str, value: float, **labels) -> None:
-        vals = self._hists.setdefault((name, _labels(labels)), [])
-        if len(vals) < self._hist_cap:
-            vals.append(float(value))
+        res = self._hists.setdefault((name, _labels(labels)), _Reservoir())
+        res.add(float(value), self._hist_cap, self._rng)
 
     # -- reading --------------------------------------------------------
     def counter_value(self, name: str, **labels) -> float:
@@ -82,18 +133,24 @@ class MetricsRegistry:
         return self._gauges.get((name, _labels(labels)))
 
     def hist_values(self, name: str, **labels) -> List[float]:
-        return list(self._hists.get((name, _labels(labels)), []))
+        res = self._hists.get((name, _labels(labels)))
+        return [] if res is None else list(res.vals)
+
+    def hist_dropped(self, name: str, **labels) -> int:
+        res = self._hists.get((name, _labels(labels)))
+        return 0 if res is None else res.dropped
 
     @staticmethod
-    def _quantiles(vals: Sequence[float]) -> Dict[str, float]:
-        arr = np.asarray(vals, dtype=np.float64)
+    def _quantiles(res: _Reservoir) -> Dict[str, float]:
+        arr = np.asarray(res.vals, dtype=np.float64)
         return {
-            "count": int(arr.size),
-            "sum": float(arr.sum()),
-            "min": float(arr.min()),
-            "max": float(arr.max()),
+            "count": int(res.seen),          # exact stream length
+            "sum": float(res.total),         # exact stream total
+            "min": float(res.mn),            # exact stream extrema
+            "max": float(res.mx),
             "p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),
+            "dropped": int(res.dropped),     # samples not held
         }
 
     def snapshot(self) -> List[dict]:
@@ -105,11 +162,11 @@ class MetricsRegistry:
         for (name, lk), v in self._gauges.items():
             rows.append({"name": name, "type": "gauge",
                          "labels": dict(lk), "value": v})
-        for (name, lk), vals in self._hists.items():
-            if vals:
+        for (name, lk), res in self._hists.items():
+            if res.vals:
                 rows.append({"name": name, "type": "histogram",
                              "labels": dict(lk),
-                             **self._quantiles(vals)})
+                             **self._quantiles(res)})
         rows.sort(key=lambda r: (r["name"], sorted(r["labels"].items())))
         return rows
 
@@ -125,8 +182,13 @@ class MetricsRegistry:
         def pname(name: str) -> str:
             return "repro_" + name.replace(".", "_").replace("-", "_")
 
+        def escape(v: str) -> str:
+            # exposition-format label escaping: backslash, quote, newline
+            return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
+
         def fmt_labels(labels: Dict[str, str], extra: str = "") -> str:
-            parts = [f'{k}="{v}"' for k, v in sorted(labels.items())]
+            parts = [f'{k}="{escape(v)}"' for k, v in sorted(labels.items())]
             if extra:
                 parts.append(extra)
             return "{" + ",".join(parts) + "}" if parts else ""
@@ -160,6 +222,10 @@ class MetricsRegistry:
                              f"{row['sum']}")
                 lines.append(f"{n}_count{fmt_labels(row['labels'])} "
                              f"{row['count']}")
+                # reservoir truncation, visible per series: how many
+                # observations the quantile sample is NOT holding
+                lines.append(f"{n}_dropped{fmt_labels(row['labels'])} "
+                             f"{row['dropped']}")
         return "\n".join(lines) + "\n"
 
     def write(self, path: str) -> None:

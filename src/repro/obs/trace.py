@@ -100,6 +100,22 @@ class TraceRecorder:
         finally:
             self.end_span(name, t0, cat=cat, **args)
 
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 cat: str = "serve", **args: Any) -> None:
+        """Complete ("X") event with caller-supplied timestamps.
+
+        Used for events whose clock domain is not ``perf_us`` — e.g.
+        per-request lifecycle spans stamped on the serving engine's
+        (possibly virtual) clock.  ``dur_us`` is clamped at 0 so a
+        degenerate stamp pair can never produce an invalid event.
+        """
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X",
+            "ts": float(ts_us), "dur": max(0.0, float(dur_us)),
+            "pid": self.pid, "tid": self.tid,
+            "args": _clean(args),
+        })
+
     def instant(self, name: str, cat: str = "serve", **args: Any) -> None:
         self.events.append({
             "name": name, "cat": cat, "ph": "i", "s": "t",

@@ -76,7 +76,19 @@ Production behaviours implemented (scaled to the container):
     :meth:`LPServingEngine.observe_group_times` (from another thread,
     mid-batch, is fine — the hook reads the EMA at the next step
     boundary).  Note ``elastic=True`` installs a per-step hook, which
-    disables scan fusion; leave it off when no monitor is attached.
+    disables scan fusion; leave it off when no monitor is attached;
+  * request-lifecycle observability: every request is stamped
+    submit/admit/denoise-start/done on the engine ``clock`` (injectable
+    — the load harness passes a ``serving/loadgen.VirtualClock`` so
+    open-loop arrivals and measured service times share one replayable
+    timeline), carries a ``priority`` SLO class, and lands per-request
+    ``queue_wait_s`` / ``e2e_s`` on its :class:`VideoResult` plus —
+    with a recorder — a ``request.lifecycle`` trace span and
+    per-priority latency histograms (``serve.queue_wait_s`` /
+    ``serve.e2e_latency_s``).  An optional ``slo`` spec (``obs/slo.py``
+    grammar) counts deadline violations live
+    (``serve.slo_violations``); the offline evaluator recomputes the
+    same per-class report from the ``--trace-out`` artifact.
 """
 from __future__ import annotations
 
@@ -113,6 +125,16 @@ class VideoRequest:
     latent_shape: Tuple[int, int, int]   # (T_lat, H_lat, W_lat)
     seed: int = 0
     guidance: float = 5.0
+    # SLA metadata (obs/slo.py, serving/loadgen.py): ``priority`` names
+    # the request's SLO class (deadline via an SLOSpec) and labels its
+    # lifecycle metrics; ``psnr_floor`` is the per-request quality
+    # floor the class maps to — carried through the lifecycle records
+    # today, consumed by per-request plan selection when the replica
+    # router lands (docs/step_policy.md).  Neither enters the batch
+    # bucketing key: requests of different classes share a compiled
+    # denoise.
+    priority: str = "standard"
+    psnr_floor: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -129,6 +151,12 @@ class VideoResult:
     # denoise step the last retry resumed from (0 = from z_T / no retry):
     # together with ``restarts`` this quantifies the work a fault cost
     resumed_from_step: int = 0
+    # per-request lifecycle latencies on the engine clock (virtual time
+    # under the load harness): submit -> batch admission, and submit ->
+    # batch done.  Unlike ``batch_wall_s`` these ARE per-request — two
+    # riders of one batch differ by their queue waits.
+    queue_wait_s: float = 0.0
+    e2e_s: float = 0.0
 
 
 class LPServingEngine:
@@ -158,6 +186,8 @@ class LPServingEngine:
         wire_nan_guard: bool = True,
         snapshots: bool = True,
         recorder=None,
+        clock: Optional[Callable[[], float]] = None,
+        slo=None,
     ):
         self.dit_forward = dit_forward
         self.params = params
@@ -174,6 +204,26 @@ class LPServingEngine:
         # never traced and never enters the step-cache key, so enabling
         # it cannot cause a recompile (benchmarks/obs_overhead.py).
         self.recorder = recorder
+        # ``clock`` is the request-lifecycle time source (submit/admit/
+        # done stamps).  Default: the shared monotonic perf clock.  The
+        # load harness passes a ``serving.loadgen.VirtualClock`` so
+        # open-loop arrival times and measured service times share one
+        # replayable timeline; the engine advances a virtual clock by
+        # each batch's measured wall (see ``_denoise_batch``).  The
+        # clock is host state only — never traced, never in a cache key.
+        self.clock: Callable[[], float] = clock if clock is not None \
+            else perf_s
+        # optional SLO spec (obs/slo.py, or its string grammar): when
+        # set, completed requests are checked against their priority
+        # class's deadline and ``serve.slo_violations`` counts live.
+        # The offline evaluator recomputes violations from stamps, so
+        # serving without a spec loses nothing but the live counter.
+        if slo is not None:
+            from repro.obs.slo import SLOSpec
+            slo = SLOSpec.parse(slo)
+        self.slo = slo
+        self._lifecycle: Dict[int, dict] = {}   # request_id -> stamps
+        self._batch_seq = 0
         self.health = GroupHealthMonitor(
             num_partitions,
             metrics=None if recorder is None else recorder.metrics)
@@ -471,12 +521,23 @@ class LPServingEngine:
     def submit(self, req: VideoRequest) -> None:
         self._queue.append(req)
         self._enqueued_at[req.request_id] = self._polls
+        # lifecycle stamps are kept engine-side (not only recorder-side)
+        # so VideoResult.queue_wait_s/e2e_s work without a recorder
+        self._lifecycle[req.request_id] = {
+            "request_id": req.request_id,
+            "priority": str(req.priority),
+            "latent_shape": list(req.latent_shape),
+            "guidance": float(req.guidance),
+            "psnr_floor": req.psnr_floor,
+            "submit_s": float(self.clock()),
+        }
         rec = self.recorder
         if rec is not None:
             rec.instant("request.enqueue", cat="serve",
                         request_id=req.request_id,
                         latent_shape=req.latent_shape,
-                        guidance=req.guidance)
+                        guidance=req.guidance,
+                        priority=req.priority)
             rec.inc(obsm.REQUESTS)
             rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
 
@@ -513,15 +574,25 @@ class LPServingEngine:
                 return []
         chosen = {id(r) for r in batch}
         self._queue = [r for r in self._queue if id(r) not in chosen]
+        self._batch_seq += 1
+        admit_s = float(self.clock())
         for r in batch:
             self._enqueued_at.pop(r.request_id, None)
+            life = self._lifecycle.get(r.request_id)
+            if life is not None:
+                life["admit_s"] = admit_s
+                life["batch_seq"] = self._batch_seq
+                life["batch_size"] = len(batch)
         rec = self.recorder
         if rec is not None:
             rec.instant("batch.admit", cat="serve", size=len(batch),
                         latent_shape=batch[0].latent_shape,
                         guidance=batch[0].guidance,
-                        request_ids=[r.request_id for r in batch])
+                        request_ids=[r.request_id for r in batch],
+                        batch_seq=self._batch_seq)
             rec.observe(obsm.BATCH_SIZE, len(batch))
+            rec.observe(obsm.BATCH_OCCUPANCY,
+                        len(batch) / max(1, self.max_batch))
             rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
         return batch
 
@@ -696,6 +767,14 @@ class LPServingEngine:
         t0 = perf_s()
         rec = self.recorder
         shape = reqs[0].latent_shape
+        # service start on the lifecycle clock; setdefault so a
+        # snapshot-resumed retry keeps the FIRST dispatch stamp (the
+        # retry cost is visible as done - denoise_start growing)
+        start_s = float(self.clock())
+        for r in reqs:
+            life = self._lifecycle.get(r.request_id)
+            if life is not None:
+                life.setdefault("denoise_start_s", start_s)
         ctx = jnp.concatenate([r.context for r in reqs], axis=0)
         null_ctx = jnp.zeros_like(ctx)
         guidance = jnp.float32(reqs[0].guidance)
@@ -727,6 +806,14 @@ class LPServingEngine:
             # otherwise leak the corrupting codec into the next batch)
             self._restore_codec()
         wall = perf_s() - t0
+        # a virtual lifecycle clock (load harness) advances by the
+        # batch's MEASURED wall: arrivals follow the offered-load
+        # process, service times are real — the standard open-loop
+        # replay for a synchronous engine.  The perf clock (default)
+        # has already advanced by exactly this much on its own.
+        advance = getattr(self.clock, "advance", None)
+        if advance is not None:
+            advance(wall)
         if rec is not None:
             rec.observe(obsm.BATCH_WALL_S, wall)
             rec.inc(obsm.COMPILES, self._compiler.compiles - compiles0,
@@ -789,6 +876,36 @@ class LPServingEngine:
 
             rec.record_reconciliations(reconcile_segments(records, runs))
 
+    # ------------------------------------------------ request lifecycle
+    def _finalize_requests(self, results: List[VideoResult]) -> None:
+        """Close each request's lifecycle: stamp ``done_s``, derive
+        ``queue_wait_s`` / ``e2e_s`` (onto the :class:`VideoResult` and
+        the lifecycle row), check the SLO deadline for the request's
+        priority class, and hand the row to the recorder — which emits
+        it as a ``request.lifecycle`` trace span and feeds the
+        per-priority latency histograms.  All stamps share the engine
+        clock, so under the load harness the row lives entirely on the
+        workload's virtual timeline."""
+        done_s = float(self.clock())
+        rec = self.recorder
+        for res in results:
+            life = self._lifecycle.pop(res.request_id, None)
+            if life is None:
+                continue
+            life["done_s"] = done_s
+            life["queue_wait_s"] = life["admit_s"] - life["submit_s"]
+            life["e2e_s"] = done_s - life["submit_s"]
+            life["restarts"] = res.restarts
+            res.queue_wait_s = life["queue_wait_s"]
+            res.e2e_s = life["e2e_s"]
+            if self.slo is not None:
+                deadline = self.slo.deadline_for(life["priority"])
+                life["deadline_s"] = (deadline
+                                      if deadline != float("inf") else None)
+                life["violated"] = bool(life["e2e_s"] > deadline)
+            if rec is not None:
+                rec.record_request(life)
+
     def run(self, max_batches: Optional[int] = None,
             max_restarts_per_batch: int = 2) -> List[VideoResult]:
         """Drain the queue.  A batch that fails with a *recoverable*
@@ -822,6 +939,7 @@ class LPServingEngine:
                     for res in results:
                         res.restarts = restarts
                         res.resumed_from_step = resumed_from
+                    self._finalize_requests(results)
                     out.extend(results)
                     self._record_batch_wire(reqs[0].latent_shape,
                                             len(reqs))

@@ -148,6 +148,90 @@ def test_metrics_exporters():
     assert 'quantile="0.5"' in prom
 
 
+def test_histogram_reservoir_keeps_exact_totals_and_counts_dropped():
+    """Satellite regression: ``observe`` used to silently stop keeping
+    samples at hist_cap, freezing quantiles on the warm-up window.  The
+    reservoir must (a) hold exactly ``hist_cap`` samples, (b) keep
+    count/sum/min/max EXACT over the whole stream, (c) export the
+    dropped-sample count, and (d) keep late samples reachable so the
+    quantiles track the stream, not its head."""
+    cap = 64
+    m = MetricsRegistry(hist_cap=cap, seed=0)
+    n = 1000
+    for i in range(n):
+        m.observe(obsm.E2E_LATENCY_S, float(i))
+    held = m.hist_values(obsm.E2E_LATENCY_S)
+    assert len(held) == cap
+    assert m.hist_dropped(obsm.E2E_LATENCY_S) == n - cap
+    row = [r for r in m.snapshot()
+           if r["name"] == obsm.E2E_LATENCY_S][0]
+    assert row["count"] == n                      # exact, not cap
+    assert row["sum"] == float(sum(range(n)))     # exact
+    assert row["min"] == 0.0 and row["max"] == float(n - 1)
+    assert row["dropped"] == n - cap
+    # an all-first-cap reservoir would put p50 at ~cap/2; a uniform one
+    # tracks the stream median ~n/2
+    assert row["p50"] > n * 0.2
+    # below cap nothing ever drops
+    m2 = MetricsRegistry(hist_cap=cap)
+    for v in (0.1, 0.2):
+        m2.observe(obsm.QUEUE_WAIT_S, v)
+    assert m2.hist_values(obsm.QUEUE_WAIT_S) == [0.1, 0.2]
+    assert m2.hist_dropped(obsm.QUEUE_WAIT_S) == 0
+
+
+def test_histogram_reservoir_is_seed_deterministic():
+    """Same observation sequence + same registry seed -> identical held
+    samples (replayable snapshots under a fixed workload seed)."""
+    def fill(seed):
+        m = MetricsRegistry(hist_cap=16, seed=seed)
+        for i in range(500):
+            m.observe(obsm.STEP_LATENCY_S, float(i) * 0.01)
+        return m.hist_values(obsm.STEP_LATENCY_S)
+
+    assert fill(0) == fill(0)
+    assert fill(0) != fill(1)
+
+
+def test_prometheus_exposition_format_parses():
+    """Format-level lint of ``to_prometheus()``: every sample line must
+    match the exposition grammar (mangled names without dots, escaped
+    label values), and histograms must export quantile + _sum/_count/
+    _dropped rows."""
+    import re
+
+    m = MetricsRegistry(hist_cap=4)
+    m.inc(obsm.WIRE_BYTES, 7.0, tier="inter", collective="all-gather")
+    m.set(obsm.QUEUE_DEPTH, 3, source='we"ird\\lab\nel')
+    for v in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6):
+        m.observe(obsm.E2E_LATENCY_S, v, priority="interactive")
+    text = m.to_prometheus()
+    name_re = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+    label_re = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\["\\n])*"'
+    sample_re = re.compile(
+        rf"^({name_re})(\{{{label_re}(,{label_re})*\}})? (-?[0-9.einf+-]+)$")
+    names = set()
+    for line in text.strip().splitlines():
+        if line.startswith("# TYPE "):
+            _, _, n, kind = line.split(" ")
+            assert kind in ("counter", "gauge", "summary")
+            continue
+        match = sample_re.match(line)
+        assert match, f"unparseable exposition line: {line!r}"
+        names.add(match.group(1))
+        assert "." not in match.group(1)          # dots mangled away
+        float(match.group(4))                      # value parses
+    e2e = "repro_serve_e2e_latency_s"
+    assert {e2e, f"{e2e}_sum", f"{e2e}_count", f"{e2e}_dropped"} <= names
+    assert f'{e2e}{{priority="interactive",quantile="0.5"}}' in text
+    # escaped label round-trip: backslash, quote, newline
+    assert r'source="we\"ird\\lab\nel"' in text
+    # histogram past cap: _count is the exact stream length, _dropped
+    # the truncation
+    assert f"{e2e}_count{{priority=\"interactive\"}} 6" in text
+    assert f"{e2e}_dropped{{priority=\"interactive\"}} 2" in text
+
+
 def test_metrics_write_format_by_extension(tmp_path):
     m = MetricsRegistry()
     m.inc(obsm.BATCHES)

@@ -327,3 +327,71 @@ def test_engine_wire_knob_tri_states_resolve_after_plan():
     with pytest.raises(ValueError, match="displaced halo codec"):
         mk(codec_schedule="displaced:int8-residual@0.5,int8-residual",
            lp_impl="shard_map")
+
+
+def test_engine_request_lifecycle_on_virtual_clock():
+    """Lifecycle stamps live on the injectable engine clock: with a
+    VirtualClock, queue wait is exact virtual time submit -> admit and
+    e2e closes at admit + the batch's measured wall (the clock only
+    advances by measured service time), landing on the VideoResult and
+    — with a recorder + SLO spec — as lifecycle rows, per-priority
+    histograms and a live violation count."""
+    from repro.obs import FlightRecorder
+    from repro.obs import metrics as obsm
+    from repro.serving.loadgen import VirtualClock
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    rec = FlightRecorder()
+    clock = VirtualClock()
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2,
+                          num_steps=2, max_batch=2, recorder=rec,
+                          clock=clock, slo="interactive:1e-9,standard:60")
+    eng.submit(VideoRequest(
+        request_id=0,
+        context=frontends.text_context(jax.random.PRNGKey(1), 1, cfg),
+        latent_shape=(4, 8, 12), seed=0, priority="interactive"))
+    clock.advance(0.25)          # request 1 arrives 0.25s later
+    eng.submit(VideoRequest(
+        request_id=1,
+        context=frontends.text_context(jax.random.PRNGKey(2), 1, cfg),
+        latent_shape=(4, 8, 12), seed=1, priority="standard"))
+    results = {r.request_id: r for r in eng.run()}
+
+    r0, r1 = results[0], results[1]
+    # both admitted at t=0.25; the clock advanced only by the wall
+    assert r0.queue_wait_s == pytest.approx(0.25)
+    assert r1.queue_wait_s == 0.0
+    assert r0.e2e_s == pytest.approx(0.25 + r0.batch_wall_s)
+    assert r1.e2e_s == r1.batch_wall_s      # exact: same float path
+    assert clock.now == pytest.approx(0.25 + r0.batch_wall_s)
+    assert eng._lifecycle == {}             # every row closed out
+
+    rows = {row["request_id"]: row for row in rec.request_rows}
+    assert rows[0]["violated"] is True      # 1ns interactive deadline
+    assert rows[1]["violated"] is False
+    assert rows[0]["deadline_s"] == 1e-9
+    assert rows[0]["batch_seq"] == rows[1]["batch_seq"] == 1
+    assert rows[0]["batch_size"] == 2
+    assert rows[0]["denoise_start_s"] == pytest.approx(0.25)
+    m = rec.metrics
+    assert m.counter_value(obsm.SLO_VIOLATIONS, priority="interactive") \
+        == 1.0
+    assert m.counter_value(obsm.SLO_VIOLATIONS, priority="standard") == 0.0
+    assert m.hist_values(obsm.QUEUE_WAIT_S, priority="interactive") \
+        == [pytest.approx(0.25)]
+    assert m.hist_values(obsm.E2E_LATENCY_S, priority="standard") \
+        == [pytest.approx(r1.e2e_s)]
+    assert m.hist_values(obsm.BATCH_OCCUPANCY) == [1.0]
+    # the lifecycle span rides the trace in the virtual-time domain
+    evs = [e for e in rec.trace.events if e["name"] == "request.lifecycle"]
+    assert len(evs) == 2
+    by_id = {e["args"]["request_id"]: e for e in evs}
+    assert by_id[0]["ts"] == 0.0
+    assert by_id[1]["ts"] == pytest.approx(0.25e6)
+    assert by_id[0]["dur"] == pytest.approx(r0.e2e_s * 1e6)

@@ -1,0 +1,265 @@
+"""Load harness + SLO evaluator: seeded workload determinism, the mix
+and SLO grammars, evaluator math on hand-built rows, and the offline
+(trace-replayed) report equalling the live one through a real engine.
+"""
+import json
+import math
+import types
+
+import jax
+import pytest
+
+from repro.obs import FlightRecorder
+from repro.obs import metrics as obsm
+from repro.obs.slo import (
+    DEFAULT_SLO_SPEC,
+    SLOSpec,
+    evaluate_slo,
+    format_report,
+    report_from_metrics_jsonl,
+    rows_from_trace,
+)
+from repro.serving.loadgen import (
+    DEFAULT_MIX,
+    Arrival,
+    RequestClass,
+    VirtualClock,
+    WorkloadSpec,
+    build_workload,
+    parse_mix,
+    run_workload,
+    workload_digest,
+)
+
+
+# ------------------------------------------------------------ workload
+def test_workload_is_seed_deterministic():
+    spec = WorkloadSpec(rate_rps=3.0, num_requests=32, seed=7)
+    a, b = build_workload(spec), build_workload(spec)
+    assert workload_digest(a) == workload_digest(b)
+    assert [x.arrival_s for x in a] == [x.arrival_s for x in b]
+    assert [x.seed for x in a] == [x.seed for x in b]
+    c = build_workload(WorkloadSpec(rate_rps=3.0, num_requests=32, seed=8))
+    assert workload_digest(c) != workload_digest(a)
+
+
+def test_workload_arrival_processes():
+    det = build_workload(WorkloadSpec(rate_rps=4.0, num_requests=8,
+                                      arrivals="deterministic"))
+    gaps = [b.arrival_s - a.arrival_s for a, b in zip(det, det[1:])]
+    assert all(abs(g - 0.25) < 1e-12 for g in gaps)
+    poi = build_workload(WorkloadSpec(rate_rps=4.0, num_requests=200,
+                                      arrivals="poisson", seed=1))
+    assert all(b.arrival_s > a.arrival_s for a, b in zip(poi, poi[1:]))
+    mean_gap = poi[-1].arrival_s / len(poi)
+    assert 0.15 < mean_gap < 0.40          # ~1/4s, generous CI bounds
+    with pytest.raises(ValueError, match="arrivals"):
+        WorkloadSpec(rate_rps=1.0, num_requests=1, arrivals="uniform")
+    with pytest.raises(ValueError, match="rate_rps"):
+        WorkloadSpec(rate_rps=0.0, num_requests=1)
+
+
+def test_workload_mix_assignment_follows_weights():
+    mix = (RequestClass("a", (4, 8, 12), weight=9.0),
+           RequestClass("b", (6, 8, 12), weight=1.0))
+    wl = build_workload(WorkloadSpec(rate_rps=1.0, num_requests=300,
+                                     seed=0, mix=mix))
+    frac_a = sum(1 for x in wl if x.cls.name == "a") / len(wl)
+    assert 0.8 < frac_a < 1.0
+    assert {x.cls.name for x in wl} == {"a", "b"}
+
+
+def test_workload_digest_covers_every_field():
+    base = Arrival(0, 1.0, DEFAULT_MIX[0], seed=5)
+    d0 = workload_digest([base])
+    for variant in (
+        Arrival(1, 1.0, DEFAULT_MIX[0], seed=5),
+        Arrival(0, 1.5, DEFAULT_MIX[0], seed=5),
+        Arrival(0, 1.0, DEFAULT_MIX[1], seed=5),
+        Arrival(0, 1.0, DEFAULT_MIX[0], seed=6),
+    ):
+        assert workload_digest([variant]) != d0
+
+
+# ----------------------------------------------------------- mix grammar
+def test_parse_mix_grammar():
+    mix = parse_mix("clip,shape=6x8x12,priority=interactive,weight=2,"
+                    "guidance=7.5;bulk,shape=4x8x12,psnr=40")
+    assert mix[0] == RequestClass("clip", (6, 8, 12), guidance=7.5,
+                                  priority="interactive", weight=2.0)
+    assert mix[1].psnr_floor == 40.0 and mix[1].priority == "standard"
+    assert parse_mix(None) == DEFAULT_MIX
+    assert parse_mix("  ") == DEFAULT_MIX
+    with pytest.raises(ValueError, match="needs shape"):
+        parse_mix("clip,priority=interactive")
+    with pytest.raises(ValueError, match="unknown fields"):
+        parse_mix("clip,shape=6x8x12,frames=6")
+    with pytest.raises(ValueError, match="first field is the name"):
+        parse_mix("shape=6x8x12")
+    with pytest.raises(ValueError, match="clip"):
+        parse_mix("clip,shape=6xWRONGx12")
+
+
+# ----------------------------------------------------------- SLO grammar
+def test_slo_spec_parse_and_roundtrip():
+    s = SLOSpec.parse("interactive:2.0@0.999,standard:8,batch:30@0.9")
+    assert s.get("interactive").target == 0.999
+    assert s.get("standard").target == 0.99          # default
+    assert s.deadline_for("standard") == 8.0
+    assert s.deadline_for("unspeced") == math.inf
+    assert SLOSpec.parse(s) is s
+    assert SLOSpec.parse(s.spec).spec == s.spec      # round-trips
+    assert SLOSpec.parse(None).spec == SLOSpec.parse(DEFAULT_SLO_SPEC).spec
+    for bad in ("interactive", "x:0", "x:2@1.5", "x:2,x:3", "x:abc"):
+        with pytest.raises(ValueError):
+            SLOSpec.parse(bad)
+
+
+# ------------------------------------------------------------ evaluator
+def _row(rid, priority, submit, admit, done):
+    return {"request_id": rid, "priority": priority, "submit_s": submit,
+            "admit_s": admit, "done_s": done}
+
+
+def test_evaluate_slo_math_on_hand_rows():
+    rows = [
+        _row(0, "interactive", 0.0, 0.5, 1.0),   # e2e 1.0: meets 2s
+        _row(1, "interactive", 1.0, 1.0, 4.0),   # e2e 3.0: violates
+        _row(2, "batch", 0.0, 2.0, 8.0),         # e2e 8.0: meets 30s
+    ]
+    rep = evaluate_slo(rows, spec="interactive:2@0.9,batch:30",
+                       num_devices=2)
+    inter = rep["classes"]["interactive"]
+    assert inter["count"] == 2 and inter["violations"] == 1
+    assert inter["violation_rate"] == 0.5
+    assert inter["queue_wait_p50_s"] == pytest.approx(0.25)
+    assert inter["e2e_p99_s"] == pytest.approx(3.0, rel=0.02)
+    # burn = violation_rate / (1 - target) = 0.5 / 0.1
+    assert inter["burn_rate"] == pytest.approx(5.0)
+    # makespan: first submit 0.0 -> last done 8.0; good = 2 of 3
+    assert rep["makespan_s"] == pytest.approx(8.0)
+    assert rep["goodput_rps"] == pytest.approx(2 / 8.0)
+    assert rep["goodput_per_device_rps"] == pytest.approx(1 / 8.0)
+    assert rep["violations"] == 1
+    assert "interactive" in format_report(rep)
+
+
+def test_evaluate_slo_unspeced_class_never_violates():
+    rows = [_row(0, "mystery", 0.0, 0.0, 1e6)]
+    rep = evaluate_slo(rows, spec="interactive:2")
+    e = rep["classes"]["mystery"]
+    assert e["violations"] == 0 and e["deadline_s"] is None
+    assert e["burn_rate"] is None
+
+
+def test_evaluate_slo_publishes_goodput_gauges():
+    rec = FlightRecorder()
+    rows = [_row(0, "standard", 0.0, 0.5, 2.0)]
+    rep = evaluate_slo(rows, spec="standard:10", recorder=rec)
+    assert rec.metrics.gauge_value(obsm.GOODPUT_RPS, priority="_total") \
+        == rep["goodput_rps"]
+    assert rec.metrics.gauge_value(obsm.GOODPUT_RPS, priority="standard") \
+        == rep["classes"]["standard"]["goodput_rps"]
+
+
+def test_evaluate_slo_empty_rows():
+    rep = evaluate_slo([], spec="standard:10")
+    assert rep["requests"] == 0 and rep["goodput_rps"] == 0.0
+
+
+# --------------------------------------------- recorder round-trip paths
+def test_record_request_feeds_trace_and_metrics():
+    rec = FlightRecorder()
+    row = {**_row(3, "interactive", 1.0, 1.5, 2.5),
+           "queue_wait_s": 0.5, "e2e_s": 1.5, "violated": True}
+    rec.record_request(row)
+    doc = rec.trace.to_json()
+    evs = [e for e in doc["traceEvents"]
+           if e["name"] == "request.lifecycle"]
+    assert len(evs) == 1
+    assert evs[0]["ph"] == "X"
+    assert evs[0]["ts"] == pytest.approx(1.0 * 1e6)
+    assert evs[0]["dur"] == pytest.approx(1.5 * 1e6)
+    assert rows_from_trace(doc) == [evs[0]["args"]]
+    m = rec.metrics
+    assert m.hist_values(obsm.QUEUE_WAIT_S, priority="interactive") == [0.5]
+    assert m.hist_values(obsm.E2E_LATENCY_S, priority="interactive") == [1.5]
+    assert m.counter_value(obsm.SLO_VIOLATIONS, priority="interactive") \
+        == 1.0
+
+
+def test_report_from_metrics_jsonl_rebuilds_aggregates():
+    rec = FlightRecorder()
+    for i, e2e in enumerate((1.0, 2.0, 3.0)):
+        rec.record_request({**_row(i, "standard", 0.0, 0.5, e2e),
+                            "queue_wait_s": 0.5, "e2e_s": e2e,
+                            "violated": e2e > 2.5})
+    rep = report_from_metrics_jsonl(rec.metrics.to_jsonl(),
+                                    spec="standard:2.5")
+    e = rep["classes"]["standard"]
+    assert e["count"] == 3 and e["violations"] == 1.0
+    assert e["e2e_p50_s"] == pytest.approx(2.0)
+    assert e["deadline_s"] == 2.5
+
+
+# --------------------------------------------------------- virtual clock
+def test_virtual_clock_semantics():
+    clk = VirtualClock()
+    assert clk() == 0.0
+    clk.advance(1.5)
+    clk.advance_to(1.0)       # never rewinds
+    assert clk.now == 1.5
+    clk.advance_to(2.0)
+    assert clk() == 2.0
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+
+
+def test_run_workload_rejects_wall_clock_engine():
+    from repro.obs.clock import perf_s
+
+    fake_engine = types.SimpleNamespace(clock=perf_s, _queue=[])
+    wl = build_workload(WorkloadSpec(rate_rps=1.0, num_requests=1))
+    with pytest.raises(ValueError, match="VirtualClock"):
+        run_workload(fake_engine, wl)
+
+
+# ------------------------------------- engine end-to-end (one compile)
+def test_open_loop_replay_offline_report_equals_live():
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    rec = FlightRecorder()
+    clock = VirtualClock()
+    slo = SLOSpec.parse("interactive:60,standard:120")
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2,
+                          num_steps=2, max_batch=2, recorder=rec,
+                          clock=clock, slo=slo)
+    mix = (RequestClass("i", (4, 8, 12), priority="interactive"),
+           RequestClass("s", (4, 8, 12), priority="standard"))
+    wl = build_workload(WorkloadSpec(rate_rps=50.0, num_requests=4,
+                                     seed=3, mix=mix))
+    results = run_workload(eng, wl)
+    assert sorted(r.request_id for r in results) == [0, 1, 2, 3]
+    for r in results:
+        assert r.e2e_s >= r.queue_wait_s >= 0.0
+    # lifecycle rows live on the virtual timeline and close out
+    assert len(rec.request_rows) == 4
+    assert eng._lifecycle == {}
+    last_done = max(row["done_s"] for row in rec.request_rows)
+    assert last_done == pytest.approx(clock.now)
+
+    live = evaluate_slo(rec.request_rows, spec=slo, num_devices=1)
+    doc = json.loads(json.dumps(rec.trace.to_json()))   # disk round-trip
+    offline = evaluate_slo(rows_from_trace(doc), spec=slo, num_devices=1)
+    assert json.loads(json.dumps(live)) == json.loads(json.dumps(offline))
+    assert live["requests"] == 4 and live["violations"] == 0
