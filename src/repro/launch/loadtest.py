@@ -15,6 +15,10 @@ classes) is replayed on a virtual clock the engine advances by each
 batch's measured wall, then every request's lifecycle stamps are
 evaluated against the ``--slo`` deadlines (``obs/slo.py``): per-class
 queue-wait and e2e p50/p99, violations, burn rate, goodput per device.
+Before the replay, every ``(shape, guidance)`` bucket in the workload
+is compiled at each batch size 1..max_batch so no measured batch pays
+JIT inside its wall (``--skip-warm`` disables; the report's
+``warmed`` field records which).
 
 Offline mode re-derives the SAME report from a previously written
 trace artifact — no engine, no devices::
@@ -81,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--report-from", default=None, metavar="TRACE_JSON",
                     help="offline: recompute the SLO report from a trace "
                          "artifact instead of serving")
+    ap.add_argument("--skip-warm", action="store_true",
+                    help="skip pre-compiling every (shape, guidance) x "
+                         "batch-size bucket before the replay; the first "
+                         "batch of each compiled shape then pays JIT "
+                         "inside the measured wall, contaminating the "
+                         "virtual timeline and the SLO quantiles")
     _add_engine_args(ap)
     args = ap.parse_args(argv)
 
@@ -148,6 +158,9 @@ def main(argv=None):
     recorder = FlightRecorder()
     clock = VirtualClock()
     slo = SLOSpec.parse(args.slo)   # None -> documented default spec
+    # built without the recorder and on a throwaway clock: the warm-up
+    # batches below must pollute neither the trace nor the replay's
+    # virtual timeline; both are swapped in right before run_workload
     engine = LPServingEngine(fwd, params, cfg,
                              num_partitions=args.partitions,
                              overlap_ratio=args.overlap,
@@ -158,12 +171,20 @@ def main(argv=None):
                              codec_schedule=args.codec_schedule,
                              psnr_floor=args.psnr_floor,
                              mesh=mesh,
-                             recorder=recorder,
-                             clock=clock,
+                             recorder=None,
+                             clock=VirtualClock(),
                              slo=slo)
     print(f"engine: lp_impl={engine.lp_impl} K={engine.K} "
           f"max_batch={engine.max_batch} steps={args.steps} "
           f"slo={engine.slo.spec}")
+
+    if not args.skip_warm:
+        nkeys = _warm_compiles(engine, cfg, workload)
+        print(f"warm: {nkeys} bucket key(s) x batch sizes "
+              f"1..{engine.max_batch} "
+              f"({engine._compiler.compiles} compiles pre-replay)")
+    engine.recorder = recorder
+    engine.clock = clock
 
     results = run_workload(engine, workload)
     num_devices = (args.num_devices if args.num_devices is not None
@@ -171,6 +192,7 @@ def main(argv=None):
     report = evaluate_slo(recorder.request_rows, spec=engine.slo,
                           num_devices=num_devices, recorder=recorder)
     report["source"] = "live"
+    report["warmed"] = not args.skip_warm
     report["workload"] = {
         "rate_rps": args.rate, "requests": len(workload),
         "arrivals": args.arrivals, "seed": args.seed,
@@ -194,6 +216,40 @@ def main(argv=None):
         _write_json(args.report_out, report)
         print(f"report: {args.report_out}")
     return report
+
+
+def _warm_compiles(engine, cfg, workload) -> int:
+    """Pre-compile every compiled shape the replay can admit.
+
+    Batch size is in the compiled shape and admission is ragged, so
+    each ``(latent_shape, guidance)`` bucket key in the workload is
+    served once at every batch size ``1..max_batch`` before the
+    measured replay — otherwise the first batch of each shape pays JIT
+    compilation (often >> service time) inside the measured wall, and
+    ``_denoise_batch`` advances the virtual clock by that wall,
+    biasing every downstream quantile and SLO verdict
+    (``benchmarks/serving_load.py`` warms for the same reason).  The
+    engine must be on a throwaway clock with no recorder attached.
+    """
+    import jax
+
+    from repro.models import frontends
+    from repro.serving.engine import VideoRequest
+
+    keys = sorted({(tuple(a.cls.latent_shape), float(a.cls.guidance))
+                   for a in workload})
+    rid = 1_000_000_000          # out of any real workload's id space
+    for shape, guidance in keys:
+        for n in range(1, engine.max_batch + 1):
+            for _ in range(n):
+                engine.submit(VideoRequest(
+                    request_id=rid,
+                    context=frontends.text_context(
+                        jax.random.PRNGKey(rid), 1, cfg),
+                    latent_shape=shape, seed=rid, guidance=guidance))
+                rid += 1
+            engine.run()
+    return len(keys)
 
 
 def _ensure_dir(path: str) -> None:

@@ -6,7 +6,9 @@ the trace-schema tests pin.  Export formats:
 
 * **Prometheus text** (``.prom``/``.txt``): standard exposition format,
   dots mapped to underscores, histograms exported as ``_count`` /
-  ``_sum`` plus p50/p99 ``{quantile=...}`` rows (summary-style).
+  ``_sum`` plus p50/p99 ``{quantile=...}`` rows (summary-style);
+  reservoir truncation is a separate ``<name>_dropped`` counter
+  family (``_dropped`` is not a valid summary child series).
 * **JSONL** (anything else): one JSON object per series, machine-
   diffable against ``comm_model`` outputs.
 
@@ -195,6 +197,11 @@ class MetricsRegistry:
 
         lines: List[str] = []
         typed: set = set()  # one TYPE line per metric name
+        # reservoir truncation per histogram series: NOT a valid
+        # summary child series, so it gets its own counter family —
+        # collected here and emitted after the main pass so every
+        # family's samples stay contiguous under one TYPE line
+        dropped: Dict[str, List[str]] = {}
 
         def type_line(n: str, kind: str) -> None:
             if n not in typed:
@@ -222,10 +229,12 @@ class MetricsRegistry:
                              f"{row['sum']}")
                 lines.append(f"{n}_count{fmt_labels(row['labels'])} "
                              f"{row['count']}")
-                # reservoir truncation, visible per series: how many
-                # observations the quantile sample is NOT holding
-                lines.append(f"{n}_dropped{fmt_labels(row['labels'])} "
-                             f"{row['dropped']}")
+                dropped.setdefault(f"{n}_dropped", []).append(
+                    f"{n}_dropped{fmt_labels(row['labels'])} "
+                    f"{row['dropped']}")
+        for fam in sorted(dropped):
+            lines.append(f"# TYPE {fam} counter")
+            lines.extend(dropped[fam])
         return "\n".join(lines) + "\n"
 
     def write(self, path: str) -> None:

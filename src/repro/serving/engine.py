@@ -518,18 +518,25 @@ class LPServingEngine:
         return forward, forward_factory, compiler_codec
 
     # ------------------------------------------------------------- queue
-    def submit(self, req: VideoRequest) -> None:
+    def submit(self, req: VideoRequest,
+               submit_s: Optional[float] = None) -> None:
         self._queue.append(req)
         self._enqueued_at[req.request_id] = self._polls
         # lifecycle stamps are kept engine-side (not only recorder-side)
-        # so VideoResult.queue_wait_s/e2e_s work without a recorder
+        # so VideoResult.queue_wait_s/e2e_s work without a recorder.
+        # ``submit_s`` lets an open-loop replay stamp the request's
+        # ARRIVAL time instead of the call time: a synchronous driver
+        # can only submit a mid-batch arrival after that batch returns,
+        # and stamping the call would under-report its queue wait (and
+        # e2e) by up to a full batch wall.
         self._lifecycle[req.request_id] = {
             "request_id": req.request_id,
             "priority": str(req.priority),
             "latent_shape": list(req.latent_shape),
             "guidance": float(req.guidance),
             "psnr_floor": req.psnr_floor,
-            "submit_s": float(self.clock()),
+            "submit_s": (float(self.clock()) if submit_s is None
+                         else float(submit_s)),
         }
         rec = self.recorder
         if rec is not None:
@@ -960,6 +967,22 @@ class LPServingEngine:
                                     resume_from=resumed_from)
                         rec.inc(obsm.RESTARTS)
                     if restarts > max_restarts_per_batch:
+                        # terminal: this batch will never be finalized
+                        # — drop its lifecycle rows (a later reused
+                        # request_id must not inherit stale stamps)
+                        # with a failed-lifecycle marker in the trace
+                        failed_s = float(self.clock())
+                        for r in reqs:
+                            life = self._lifecycle.pop(
+                                r.request_id, None)
+                            if rec is not None and life is not None:
+                                rec.instant(
+                                    "request.failed", cat="serve",
+                                    request_id=r.request_id,
+                                    priority=life["priority"],
+                                    submit_s=life["submit_s"],
+                                    failed_s=failed_s,
+                                    restarts=restarts, fault=str(e))
                         raise
             batches += 1
         return out

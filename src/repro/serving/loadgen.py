@@ -255,6 +255,13 @@ def run_workload(
     still pending, the clock fast-forwards to the next arrival — an
     idle server, not time travel.  Arrivals never wait on completions,
     so queue waits are a true function of offered load vs. capacity.
+
+    Each submit is stamped with the request's ``arrival_s`` (the
+    engine's ``submit_s`` override), not the submission call time: a
+    request that arrived while a batch was in flight can only be
+    handed to the synchronous engine after that batch returns, and
+    stamping the call would under-report its queue wait and e2e by up
+    to a full batch wall.
     """
     clock = engine.clock
     if not isinstance(clock, VirtualClock):
@@ -281,7 +288,7 @@ def run_workload(
                 guidance=a.cls.guidance,
                 priority=a.cls.priority,
                 psnr_floor=a.cls.psnr_floor,
-            ))
+            ), submit_s=a.arrival_s)
             i += 1
         results.extend(engine.run(
             max_batches=1,

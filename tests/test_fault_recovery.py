@@ -296,6 +296,9 @@ def test_engine_dead_group_without_elastic_exhausts_restarts():
     with pytest.raises(ServingFault, match="stopped heartbeating"):
         eng.run()
     assert eng.evictions == 0
+    # the terminally failed batch's lifecycle rows must not leak (a
+    # later reused request_id would inherit stale stamps)
+    assert eng._lifecycle == {}
 
 
 def test_engine_replan_refreshes_codec_schedule_after_eviction():

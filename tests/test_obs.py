@@ -211,18 +211,31 @@ def test_prometheus_exposition_format_parses():
     sample_re = re.compile(
         rf"^({name_re})(\{{{label_re}(,{label_re})*\}})? (-?[0-9.einf+-]+)$")
     names = set()
+    fam, kind = None, None
     for line in text.strip().splitlines():
         if line.startswith("# TYPE "):
-            _, _, n, kind = line.split(" ")
+            _, _, fam, kind = line.split(" ")
             assert kind in ("counter", "gauge", "summary")
             continue
         match = sample_re.match(line)
         assert match, f"unparseable exposition line: {line!r}"
-        names.add(match.group(1))
-        assert "." not in match.group(1)          # dots mangled away
+        name = match.group(1)
+        names.add(name)
+        assert "." not in name                     # dots mangled away
         float(match.group(4))                      # value parses
+        # family grouping: every sample must belong to the TYPE line
+        # above it.  The only valid summary children are the quantile
+        # / _sum / _count rows — in particular '_dropped' must NOT
+        # ride inside a summary family (strict OpenMetrics parsers
+        # reject it); it is its own counter family.
+        if kind == "summary":
+            assert name in (fam, f"{fam}_sum", f"{fam}_count"), \
+                f"{name!r} is not a summary child of {fam!r}"
+        else:
+            assert name == fam
     e2e = "repro_serve_e2e_latency_s"
     assert {e2e, f"{e2e}_sum", f"{e2e}_count", f"{e2e}_dropped"} <= names
+    assert f"# TYPE {e2e}_dropped counter" in text
     assert f'{e2e}{{priority="interactive",quantile="0.5"}}' in text
     # escaped label round-trip: backslash, quote, newline
     assert r'source="we\"ird\\lab\nel"' in text

@@ -225,6 +225,44 @@ def test_run_workload_rejects_wall_clock_engine():
 
 
 # ------------------------------------- engine end-to-end (one compile)
+def test_mid_batch_arrival_accrues_wait_from_arrival_offset():
+    """A request that arrives while a batch is in flight can only be
+    handed to the synchronous engine after that batch returns; its
+    lifecycle must nonetheless be stamped at ARRIVAL (the driver
+    passes ``submit_s=arrival_s``), so the batch wall it sat out
+    counts as queue wait.  Stamping at submission-call time instead
+    under-reported queue_wait/e2e by up to a full batch wall, biasing
+    the SLO report optimistic under load."""
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2,
+                          num_steps=2, max_batch=1,
+                          clock=VirtualClock())
+    cls_ = RequestClass("i", (4, 8, 12), priority="interactive")
+    eps = 1e-6
+    # request 1 arrives eps after request 0 — i.e. while batch 0 (a
+    # real, measured denoise) is in flight on the virtual timeline
+    wl = [Arrival(0, 0.0, cls_, seed=1), Arrival(1, eps, cls_, seed=2)]
+    by_id = {r.request_id: r for r in run_workload(eng, wl)}
+    w0 = by_id[0].batch_wall_s
+    assert by_id[0].queue_wait_s == pytest.approx(0.0, abs=1e-12)
+    # request 1 waited out batch 0's whole wall (minus its arrival
+    # offset), not zero
+    assert by_id[1].queue_wait_s == pytest.approx(w0 - eps)
+    assert by_id[1].e2e_s == pytest.approx(
+        w0 - eps + by_id[1].batch_wall_s)
+
+
 def test_open_loop_replay_offline_report_equals_live():
     from repro import models
     from repro.configs import get_config
