@@ -1,0 +1,332 @@
+"""Replica-router resilience gate -> BENCH_router_resilience.json.
+
+One seeded overload workload is replayed twice over a fleet of
+``REPLICAS`` reduced WAN DiT engines behind ``serving/router.py``:
+once fault-free (the baseline), once with ``replica:<K>:dead@1`` — the
+last replica is killed at its first denoise step, mid-run.  Gates:
+
+* **zero lost requests** — every admitted request has exactly one
+  disposition (completed result, ``request.shed`` trace row, or
+  terminal ``request.failed`` trace row): completed + shed + failed ==
+  admitted, in the router's own stats AND recomputed from trace rows;
+* **goodput floor** — goodput with the kill >= (N-1)/N x the
+  fault-free goodput of the same workload (losing 1 of N replicas
+  costs at most its capacity share, never a collapse);
+* **degrade before violation** — the router's first ``router.degrade``
+  instant fires before any high-priority (interactive) deadline
+  violation completes: quality is spent before deadlines are;
+* **offline == live, per replica** — the SLO report recomputed by the
+  real ``loadtest --report-from`` CLI from the written trace artifact
+  is byte-identical (canonical JSON serialization) to the live report,
+  including the per-replica and disposition sections.
+
+The burst at t=0 drives queue depth through both the shed and degrade
+watermarks, so both code paths land rows in the artifact; shedding
+happens at admission (before any service), so the baseline and the
+kill run shed identically and stay goodput-comparable.
+
+Artifacts land under ``artifacts/`` — gitignored, uploaded by CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.models import dit, frontends
+from repro.obs import FlightRecorder
+from repro.obs.slo import SLOSpec, evaluate_slo
+from repro.serving.engine import LPServingEngine, VideoRequest
+from repro.serving.loadgen import (
+    Arrival,
+    RequestClass,
+    VirtualClock,
+    WorkloadSpec,
+    build_workload,
+)
+from repro.serving.router import ReplicaRouter
+
+STEPS = 2
+K = 2                       # latent partitions per engine
+SHAPE = (4, 8, 12)
+MAX_BATCH = 2
+REPLICAS = 3
+BURST = 10                  # arrivals at t=0 (forces shed + degrade)
+TRAILING = 8                # arrivals after the burst
+TRAIL_UTIL = 0.3            # trailing rate as a fraction of capacity
+SEED = 0
+SHED_WATERMARK = 8          # < BURST: the burst must shed
+DEGRADE_WATERMARK = 3
+MAX_REDISPATCH = 2
+PSNR_FLOOR_DB = 32.0
+MIN_FLOOR_DB = 24.0
+OUT_JSON = "BENCH_router_resilience.json"
+ART_DIR = "artifacts"
+OUT_TRACE = os.path.join(ART_DIR, "router_trace.json")
+OUT_METRICS = os.path.join(ART_DIR, "router_metrics.jsonl")
+OUT_REPORT = os.path.join(ART_DIR, "router_slo_report.json")
+OUT_REPORT_OFFLINE = os.path.join(ART_DIR, "router_slo_report_offline.json")
+
+MIX = (
+    RequestClass("interactive", SHAPE, priority="interactive",
+                 weight=1.0, psnr_floor=PSNR_FLOOR_DB),
+    RequestClass("standard", SHAPE, priority="standard",
+                 weight=2.0, psnr_floor=PSNR_FLOOR_DB),
+)
+
+
+def _engine(recorder, slo):
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    return LPServingEngine(fwd, params, cfg, num_partitions=K,
+                           num_steps=STEPS, max_batch=MAX_BATCH,
+                           max_queue=64, recorder=recorder, slo=slo,
+                           clock=VirtualClock()), cfg
+
+
+def _warm(engine, cfg):
+    """Compile every batch size 1..MAX_BATCH so no measured dispatch
+    pays JIT inside its virtual wall."""
+    walls = []
+    for n in range(1, MAX_BATCH + 1):
+        for i in range(n):
+            engine.submit(VideoRequest(
+                request_id=90_000 + 10 * n + i,
+                context=frontends.text_context(
+                    jax.random.PRNGKey(i), 1, cfg),
+                latent_shape=SHAPE, seed=i))
+        out = engine.run()
+        if n == MAX_BATCH:
+            walls.append(out[0].batch_wall_s)
+    # re-measure once warm
+    for i in range(MAX_BATCH):
+        engine.submit(VideoRequest(
+            request_id=91_000 + i,
+            context=frontends.text_context(jax.random.PRNGKey(i), 1, cfg),
+            latent_shape=SHAPE, seed=i))
+    walls.append(engine.run()[0].batch_wall_s)
+    return min(walls)
+
+
+def _workload(warm_wall_s):
+    """BURST arrivals at t=0 (deep queue -> shed + degrade), then
+    TRAILING more at a rate the (N-1)-replica survivor fleet can
+    absorb — so the kill costs its capacity share, not a collapse."""
+    fleet_rps = REPLICAS * MAX_BATCH / warm_wall_s
+    spec = WorkloadSpec(rate_rps=TRAIL_UTIL * fleet_rps,
+                        num_requests=BURST + TRAILING, seed=SEED,
+                        mix=MIX)
+    arrivals = build_workload(spec)
+    out = [Arrival(a.request_id,
+                   0.0 if a.request_id < BURST else a.arrival_s,
+                   a.cls, a.seed)
+           for a in arrivals]
+    return out, spec
+
+
+def _run_fleet(workload, slo, inject_fault=None):
+    rec = FlightRecorder()
+    engines = []
+    cfg = None
+    for _ in range(REPLICAS):
+        eng, cfg = _engine(recorder=None, slo=slo)
+        _warm(eng, cfg)
+        eng.recorder = rec
+        eng.clock = VirtualClock()
+        engines.append(eng)
+    router = ReplicaRouter(
+        engines, recorder=rec, slo=slo,
+        shed_watermark=SHED_WATERMARK,
+        degrade_watermark=DEGRADE_WATERMARK,
+        max_redispatch=MAX_REDISPATCH,
+        min_psnr_floor_db=MIN_FLOOR_DB,
+        inject_fault=inject_fault)
+    results = router.serve(workload)
+    return router, rec, results
+
+
+def run(print_csv=True):
+    os.makedirs(ART_DIR, exist_ok=True)
+
+    # -- calibrate once, derive the SLO + workload from the warm wall --
+    cal_engine, cal_cfg = _engine(recorder=None, slo=None)
+    warm_wall_s = _warm(cal_engine, cal_cfg)
+    del cal_engine
+    slo = SLOSpec.parse(
+        f"interactive:{40 * warm_wall_s:.6g},"
+        f"standard:{80 * warm_wall_s:.6g}@0.95")
+    workload, spec = _workload(warm_wall_s)
+
+    # -- baseline: same workload, no faults ----------------------------
+    base_router, base_rec, base_results = _run_fleet(workload, slo)
+    base_live = evaluate_slo(
+        base_rec.request_rows, spec=slo, num_devices=K,
+        shed_rows=base_rec.shed_rows, failed_rows=base_rec.failed_rows)
+    base_goodput = base_live["goodput_rps"]
+
+    # -- the drill: kill the last replica at its first denoise step ----
+    fault = f"replica:{REPLICAS - 1}:dead@1"
+    router, rec, results = _run_fleet(workload, slo, inject_fault=fault)
+    live = evaluate_slo(
+        rec.request_rows, spec=slo, num_devices=K,
+        shed_rows=rec.shed_rows, failed_rows=rec.failed_rows)
+    goodput = live["goodput_rps"]
+
+    # -- gate 1: zero lost requests (stats AND trace rows agree) -------
+    admitted = router.stats["admitted"]
+    accounted_stats = (router.stats["completed"] + router.stats["shed"]
+                       + router.stats["failed"])
+    disp = live["disposition"]
+    pass_zero_lost = (
+        admitted == BURST + TRAILING
+        and accounted_stats == admitted
+        and disp["accounted"] == admitted
+        and len(results) == router.stats["completed"]
+        and len(rec.shed_rows) == router.stats["shed"]
+        and len(rec.failed_rows) == router.stats["failed"])
+    killed = router.replicas[REPLICAS - 1]
+    pass_kill_observed = (killed.state == "dead"
+                          and router.stats["replica_deaths"] == 1
+                          and router.stats["redispatches"] >= 1)
+
+    # -- gate 2: goodput floor at (N-1)/N of fault-free ----------------
+    goodput_floor = (REPLICAS - 1) / REPLICAS * base_goodput
+    pass_goodput = goodput >= goodput_floor
+
+    # -- gate 3: degrade fires before any interactive violation --------
+    degrades = [e for e in rec.trace.events
+                if e["name"] == "router.degrade"]
+    first_degrade_s = (min(e["args"]["now_s"] for e in degrades)
+                       if degrades else None)
+    hi_violations = [
+        r["done_s"] for r in rec.request_rows
+        if r.get("priority") == "interactive"
+        and r["e2e_s"] > slo.deadline_for("interactive")]
+    first_violation_s = min(hi_violations) if hi_violations else None
+    pass_degrade = (first_degrade_s is not None
+                    and (first_violation_s is None
+                         or first_degrade_s < first_violation_s))
+
+    # -- gate 4: offline --report-from report byte-identical to live ---
+    rec.write_trace(OUT_TRACE)
+    rec.write_metrics(OUT_METRICS)
+    with open(OUT_REPORT, "w") as f:
+        json.dump(live, f, indent=2, sort_keys=True)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.loadtest",
+         "--report-from", OUT_TRACE, "--slo", slo.spec,
+         "--num-devices", str(K), "--report-out", OUT_REPORT_OFFLINE],
+        check=True, env=env, capture_output=True)
+    with open(OUT_REPORT_OFFLINE) as f:
+        offline = json.load(f)
+    offline.pop("source", None)
+    canon = lambda d: json.dumps(d, indent=2, sort_keys=True)  # noqa: E731
+    pass_offline = canon(offline) == canon(json.loads(json.dumps(live)))
+    pass_per_replica = (
+        "replicas" in live
+        and str(REPLICAS - 1) not in live["replicas"]  # the dead one
+        and sum(e["count"] for e in live["replicas"].values())
+        == router.stats["completed"]
+        and "replicas" in offline)
+
+    record = {
+        "config": "wan21_dit_1p3b reduced",
+        "num_steps": STEPS,
+        "num_partitions": K,
+        "max_batch": MAX_BATCH,
+        "replicas": REPLICAS,
+        "workload": {"burst": BURST, "trailing": TRAILING,
+                     "seed": SEED, "rate_rps": spec.rate_rps},
+        "inject_fault": fault,
+        "warm_batch_wall_s": warm_wall_s,
+        "slo_spec": slo.spec,
+        "baseline": {
+            "goodput_rps": base_goodput,
+            "completed": base_router.stats["completed"],
+            "shed": base_router.stats["shed"],
+            "violations": base_live["violations"],
+        },
+        "fault_run": {
+            "goodput_rps": goodput,
+            "completed": router.stats["completed"],
+            "shed": router.stats["shed"],
+            "failed": router.stats["failed"],
+            "redispatches": router.stats["redispatches"],
+            "replica_deaths": router.stats["replica_deaths"],
+            "replica_states": [r.state for r in router.replicas],
+            "violations": live["violations"],
+            "first_degrade_s": first_degrade_s,
+            "first_interactive_violation_s": first_violation_s,
+        },
+        "goodput_floor_rps": goodput_floor,
+        "pass_zero_lost": bool(pass_zero_lost),
+        "pass_kill_observed": bool(pass_kill_observed),
+        "pass_goodput": bool(pass_goodput),
+        "pass_degrade_before_violation": bool(pass_degrade),
+        "pass_offline_equals_live": bool(pass_offline),
+        "pass_per_replica_report": bool(pass_per_replica),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    if not pass_kill_observed:
+        raise AssertionError(
+            f"kill not observed: state={killed.state} "
+            f"deaths={router.stats['replica_deaths']} "
+            f"redispatches={router.stats['redispatches']}")
+    if not pass_zero_lost:
+        raise AssertionError(
+            f"lost requests: admitted={admitted} "
+            f"completed={router.stats['completed']} "
+            f"shed={router.stats['shed']} "
+            f"failed={router.stats['failed']} "
+            f"disposition={disp}")
+    if not pass_goodput:
+        raise AssertionError(
+            f"goodput {goodput:.3f}rps < (N-1)/N x fault-free "
+            f"{base_goodput:.3f}rps = {goodput_floor:.3f}rps")
+    if not pass_degrade:
+        raise AssertionError(
+            f"degrade did not precede interactive violations "
+            f"(first_degrade={first_degrade_s}, "
+            f"first_violation={first_violation_s})")
+    if not pass_offline:
+        raise AssertionError(
+            "offline --report-from report != live report")
+    if not pass_per_replica:
+        raise AssertionError(
+            f"per-replica report malformed: {live.get('replicas')}")
+
+    if print_csv:
+        print(f"router_resilience/warm_batch,{warm_wall_s * 1e6:.0f},"
+              f"replicas={REPLICAS}")
+        print(f"router_resilience/zero_lost,0,admitted={admitted} "
+              f"completed={router.stats['completed']} "
+              f"shed={router.stats['shed']} "
+              f"failed={router.stats['failed']}")
+        print(f"router_resilience/goodput,0,{goodput:.3f}rps >= "
+              f"{goodput_floor:.3f} floor (fault-free "
+              f"{base_goodput:.3f})")
+        print(f"router_resilience/degrade,0,first={first_degrade_s} "
+              f"violations={live['violations']}")
+        print(f"router_resilience/offline_eq,0,"
+              f"{'equal' if pass_offline else 'DIFF'}")
+        print(f"router_resilience/json,0,wrote {OUT_JSON}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,7 @@ from . import (
     hybrid_lp_tp,
     obs_overhead,
     quality_fidelity,
+    router_resilience,
     serving_load,
     step_latency,
     table1_comm,
@@ -47,6 +48,7 @@ ALL = {
     "fault_recovery": fault_recovery.run,
     "obs_overhead": obs_overhead.run,
     "serving_load": serving_load.run,
+    "router_resilience": router_resilience.run,
 }
 
 

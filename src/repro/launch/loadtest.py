@@ -29,6 +29,16 @@ trace artifact — no engine, no devices::
 Because the evaluator only ever reads the raw stamps, the offline
 report equals the live one for the same serve
 (``benchmarks/serving_load.py`` gates the equality byte-for-byte).
+
+Fleet mode (``--replicas N``, N >= 2) serves the same workload through
+``serving/router.ReplicaRouter`` — N independent engine replicas, each
+on its own virtual clock, behind one front-door queue with admission
+control (``--shed-watermark``), redispatch on replica loss
+(``--max-redispatch``; kill a replica mid-run with
+``--inject-fault replica:1:dead@3``) and graceful quality degradation.
+The SLO report gains per-replica sections and disposition accounting
+(completed / shed / terminally failed), and the offline report stays
+byte-identical (``benchmarks/router_resilience.py`` gates it).
 """
 from __future__ import annotations
 
@@ -50,6 +60,33 @@ def _add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--psnr-floor", type=float, default=None)
     ap.add_argument("--mesh", default=None,
                     help="MxT hybrid mesh; M must equal --partitions")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound each engine queue: submit raises "
+                         "QueueFull beyond this many queued requests "
+                         "(default: unbounded)")
+
+
+def _add_router_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a ReplicaRouter over this many "
+                         "engine replicas (1 = direct single-engine "
+                         "replay, the historical path)")
+    ap.add_argument("--router-policy", default="least-loaded",
+                    choices=["least-loaded", "round-robin"])
+    ap.add_argument("--inject-fault", default=None,
+                    help="fault drill plan; with --replicas scope "
+                         "chunks per replica, e.g. 'replica:1:dead@3,"
+                         "replica:0:slow:0x2' (runtime/faults.py)")
+    ap.add_argument("--max-redispatch", type=int, default=2,
+                    help="redispatch attempts for a request lost to a "
+                         "replica death before terminal failure")
+    ap.add_argument("--shed-watermark", type=int, default=None,
+                    help="aggregate queue depth beyond which the "
+                         "lowest-priority requests are shed (default: "
+                         "8 x total batch capacity)")
+    ap.add_argument("--degrade-watermark", type=int, default=None,
+                    help="queue depth that triggers stepwise psnr_floor "
+                         "relaxation (default: half the shed watermark)")
 
 
 def main(argv=None):
@@ -92,21 +129,35 @@ def main(argv=None):
                          "inside the measured wall, contaminating the "
                          "virtual timeline and the SLO quantiles")
     _add_engine_args(ap)
+    _add_router_args(ap)
     args = ap.parse_args(argv)
 
     from repro.obs.slo import (
         SLOSpec,
         evaluate_slo,
+        failures_from_trace,
         format_report,
         rows_from_trace,
+        shed_from_trace,
     )
 
     if args.report_from:
         with open(args.report_from) as f:
             doc = json.load(f)
         rows = rows_from_trace(doc)
-        report = evaluate_slo(rows, spec=args.slo,
-                              num_devices=args.num_devices or 1)
+        shed = shed_from_trace(doc)
+        failed = failures_from_trace(doc)
+        # a routed serve is recognizable from its artifact alone (rows
+        # carry replica identities / shed / terminal-failure events);
+        # only then does the report gain the disposition block, so a
+        # single-engine offline report stays byte-identical to its
+        # historical live form
+        routed = (shed or failed
+                  or any(r.get("replica") is not None for r in rows))
+        report = evaluate_slo(
+            rows, spec=args.slo, num_devices=args.num_devices or 1,
+            shed_rows=shed if routed else None,
+            failed_rows=failed if routed else None)
         report["source"] = "trace"
         print(format_report(report))
         if args.report_out:
@@ -156,41 +207,89 @@ def main(argv=None):
         mesh = make_hybrid_mesh(m, t)
 
     recorder = FlightRecorder()
-    clock = VirtualClock()
     slo = SLOSpec.parse(args.slo)   # None -> documented default spec
-    # built without the recorder and on a throwaway clock: the warm-up
-    # batches below must pollute neither the trace nor the replay's
-    # virtual timeline; both are swapped in right before run_workload
-    engine = LPServingEngine(fwd, params, cfg,
-                             num_partitions=args.partitions,
-                             overlap_ratio=args.overlap,
-                             num_steps=args.steps,
-                             max_batch=args.max_batch,
-                             lp_impl=args.lp_impl,
-                             wire_codec=args.wire_codec,
-                             codec_schedule=args.codec_schedule,
-                             psnr_floor=args.psnr_floor,
-                             mesh=mesh,
-                             recorder=None,
-                             clock=VirtualClock(),
-                             slo=slo)
-    print(f"engine: lp_impl={engine.lp_impl} K={engine.K} "
-          f"max_batch={engine.max_batch} steps={args.steps} "
-          f"slo={engine.slo.spec}")
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
 
-    if not args.skip_warm:
-        nkeys = _warm_compiles(engine, cfg, workload)
-        print(f"warm: {nkeys} bucket key(s) x batch sizes "
-              f"1..{engine.max_batch} "
-              f"({engine._compiler.compiles} compiles pre-replay)")
-    engine.recorder = recorder
-    engine.clock = clock
+    def _make_engine(inject_fault=None):
+        # built without the recorder and on a throwaway clock: the
+        # warm-up batches must pollute neither the trace nor the
+        # replay's virtual timeline; both are swapped in post-warm
+        return LPServingEngine(fwd, params, cfg,
+                               num_partitions=args.partitions,
+                               overlap_ratio=args.overlap,
+                               num_steps=args.steps,
+                               max_batch=args.max_batch,
+                               max_queue=args.max_queue,
+                               lp_impl=args.lp_impl,
+                               wire_codec=args.wire_codec,
+                               codec_schedule=args.codec_schedule,
+                               psnr_floor=args.psnr_floor,
+                               mesh=mesh,
+                               inject_fault=inject_fault,
+                               recorder=None,
+                               clock=VirtualClock(),
+                               slo=slo)
 
-    results = run_workload(engine, workload)
     num_devices = (args.num_devices if args.num_devices is not None
                    else jax.device_count())
-    report = evaluate_slo(recorder.request_rows, spec=engine.slo,
-                          num_devices=num_devices, recorder=recorder)
+    if args.replicas == 1:
+        clock = VirtualClock()
+        engine = _make_engine(inject_fault=args.inject_fault)
+        print(f"engine: lp_impl={engine.lp_impl} K={engine.K} "
+              f"max_batch={engine.max_batch} steps={args.steps} "
+              f"slo={engine.slo.spec}")
+        if not args.skip_warm:
+            nkeys = _warm_compiles(engine, cfg, workload)
+            print(f"warm: {nkeys} bucket key(s) x batch sizes "
+                  f"1..{engine.max_batch} "
+                  f"({engine._compiler.compiles} compiles pre-replay)")
+        engine.recorder = recorder
+        engine.clock = clock
+        results = run_workload(engine, workload)
+        report = evaluate_slo(recorder.request_rows, spec=engine.slo,
+                              num_devices=num_devices,
+                              recorder=recorder)
+    else:
+        from repro.serving.router import ReplicaRouter
+
+        engines = [_make_engine() for _ in range(args.replicas)]
+        if not args.skip_warm:
+            for r, eng in enumerate(engines):
+                nkeys = _warm_compiles(eng, cfg, workload)
+                print(f"warm replica {r}: {nkeys} bucket key(s) "
+                      f"({eng._compiler.compiles} compiles)")
+        for eng in engines:
+            eng.recorder = recorder
+            eng.clock = VirtualClock()   # fresh, per-replica
+        router = ReplicaRouter(
+            engines, recorder=recorder, slo=slo,
+            policy=args.router_policy,
+            max_redispatch=args.max_redispatch,
+            shed_watermark=args.shed_watermark,
+            degrade_watermark=args.degrade_watermark,
+            inject_fault=args.inject_fault)
+        print(f"router: {args.replicas} replicas "
+              f"policy={args.router_policy} "
+              f"shed_watermark={router.shed_watermark} "
+              f"max_redispatch={router.max_redispatch}"
+              + (f" fault={args.inject_fault}" if args.inject_fault
+                 else ""))
+        results = router.serve(workload)
+        clock = max((rep.clock for rep in router.replicas),
+                    key=lambda c: c.now)
+        report = evaluate_slo(recorder.request_rows, spec=router.slo,
+                              num_devices=num_devices,
+                              recorder=recorder,
+                              shed_rows=recorder.shed_rows,
+                              failed_rows=recorder.failed_rows)
+        report["router"] = {
+            "replicas": args.replicas,
+            "policy": args.router_policy,
+            "states": [rep.state for rep in router.replicas],
+            "degrade_level": router.degrade_level,
+            **router.stats,
+        }
     report["source"] = "live"
     report["warmed"] = not args.skip_warm
     report["workload"] = {
@@ -200,7 +299,7 @@ def main(argv=None):
     }
     print(format_report(report))
     print(f"served: {len(results)} results over "
-          f"{report['makespan_s']:.2f}s virtual "
+          f"{report.get('makespan_s', 0.0):.2f}s virtual "
           f"({clock.now:.2f}s clock)")
 
     if args.trace_out:

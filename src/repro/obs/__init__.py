@@ -32,9 +32,12 @@ from .slo import (
     SLO_REPORT_SCHEMA,
     SLOClass,
     SLOSpec,
+    disposition,
     evaluate_slo,
+    failures_from_trace,
     report_from_metrics_jsonl,
     rows_from_trace,
+    shed_from_trace,
 )
 from .trace import TRACE_SCHEMA, TraceRecorder, validate_trace
 
@@ -46,6 +49,7 @@ __all__ = [
     "perf_s", "perf_us", "wall_stamp_s",
     "SLOSpec", "SLOClass", "SLO_REPORT_SCHEMA", "evaluate_slo",
     "rows_from_trace", "report_from_metrics_jsonl",
+    "shed_from_trace", "failures_from_trace", "disposition",
 ]
 
 
@@ -75,6 +79,8 @@ class FlightRecorder:
         self.measured_runs: List[dict] = []  # run-span wall times
         self.reconciliations: List[dict] = []  # predicted vs measured
         self.request_rows: List[dict] = []  # per-request lifecycle rows
+        self.shed_rows: List[dict] = []     # admission-control sheds
+        self.failed_rows: List[dict] = []   # terminal request failures
 
     # -- trace helpers (no-op when trace plane disabled) ---------------
     def span(self, name: str, cat: str = "serve", **args: Any):
@@ -166,12 +172,40 @@ class FlightRecorder:
                 * 1e6,
                 cat="serve", **row)
         priority = str(row.get("priority", "standard"))
-        self.observe(M.QUEUE_WAIT_S, row["queue_wait_s"],
-                     priority=priority)
-        self.observe(M.E2E_LATENCY_S, row["e2e_s"], priority=priority)
+        labels = {"priority": priority}
+        if row.get("replica") is not None:
+            labels["replica"] = str(row["replica"])
+        self.observe(M.QUEUE_WAIT_S, row["queue_wait_s"], **labels)
+        self.observe(M.E2E_LATENCY_S, row["e2e_s"], **labels)
         if row.get("violated"):
-            self.inc(M.SLO_VIOLATIONS, priority=priority)
+            self.inc(M.SLO_VIOLATIONS, **labels)
 
+    def record_shed(self, row: dict) -> None:
+        """One request shed by admission control (the replica router's
+        load-shedding path — never the engine, which REJECTS at submit
+        instead).  ``row`` carries ``request_id`` / ``priority`` /
+        ``submit_s`` / ``shed_s`` / ``reason`` (+ queue depths); it is
+        emitted verbatim as a ``request.shed`` instant so the offline
+        SLO evaluation can reconstruct the disposition of every
+        admitted request (the zero-lost-requests gate), and counts
+        ``router.shed`` per priority."""
+        self.shed_rows.append(row)
+        self.instant("request.shed", cat="serve", **row)
+        self.inc(M.ROUTER_SHED,
+                 priority=str(row.get("priority", "standard")))
+
+    def record_failed(self, row: dict) -> None:
+        """One TERMINAL request failure (redispatch budget exhausted,
+        or no live replica left).  Engine-level ``request.failed``
+        instants are not terminal under a router — the router may still
+        redispatch — so the router records its own row here with
+        ``terminal=True``; offline disposition accounting keys on that
+        flag.  Emitted verbatim as a ``request.failed`` instant and
+        counted as ``router.failed`` per priority."""
+        self.failed_rows.append(row)
+        self.instant("request.failed", cat="serve", **row)
+        self.inc(M.ROUTER_FAILED,
+                 priority=str(row.get("priority", "standard")))
 
     def record_wire_steps(self, records: Sequence[dict]) -> None:
         """Attribution rows -> trace instants + tiered byte counters.

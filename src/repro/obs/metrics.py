@@ -64,6 +64,21 @@ E2E_LATENCY_S = "serve.e2e_latency_s"
 BATCH_OCCUPANCY = "serve.batch_occupancy"
 GOODPUT_RPS = "serve.goodput_rps"
 SLO_VIOLATIONS = "serve.slo_violations"
+# explicit backpressure: submit() rejected a request at the max_queue
+# bound (serving/engine.QueueFull) — counted where it happened
+REQUESTS_REJECTED = "serve.requests_rejected"
+# replica-router family (serving/router.py, docs/observability.md) —
+# fleet-level series; per-replica engine series reuse the serve.*
+# names above with a {replica="<id>"} label
+ROUTER_DISPATCHES = "router.dispatches"
+ROUTER_SHED = "router.shed"
+ROUTER_REDISPATCHES = "router.redispatches"
+ROUTER_FAILED = "router.failed"
+ROUTER_DEGRADE_STEPS = "router.degrade_steps"
+ROUTER_RESTORE_STEPS = "router.restore_steps"
+ROUTER_REPLICA_DEATHS = "router.replica_deaths"
+ROUTER_QUEUE_DEPTH = "router.queue_depth"
+ROUTER_HEALTHY_REPLICAS = "router.healthy_replicas"
 
 
 def _labels(labels: Dict[str, object]) -> LabelKey:

@@ -143,6 +143,62 @@ def rows_from_trace(doc: dict) -> List[dict]:
     return rows
 
 
+def shed_from_trace(doc: dict) -> List[dict]:
+    """Extract ``request.shed`` rows from an exported trace — the
+    inverse of ``FlightRecorder.record_shed``.  One row per request the
+    router's admission control dropped; together with the lifecycle and
+    terminal-failure rows these account for EVERY admitted request (the
+    zero-lost-requests gate in ``benchmarks/router_resilience.py``)."""
+    rows = []
+    for ev in doc.get("traceEvents", []):
+        if ev.get("name") == "request.shed" and "args" in ev:
+            rows.append(dict(ev["args"]))
+    return rows
+
+
+def failures_from_trace(doc: dict, terminal_only: bool = True) -> List[dict]:
+    """Extract ``request.failed`` rows from an exported trace.
+
+    Two producers share the event name: the ENGINE emits one when a
+    batch exhausts its restart budget (under a router that request may
+    still be redispatched and complete elsewhere), and the ROUTER emits
+    one with ``terminal=True`` when the redispatch budget is exhausted.
+    ``terminal_only`` (the default) keeps only the router's terminal
+    rows — the mirror of ``FlightRecorder.record_failed`` and the set
+    disposition accounting needs."""
+    rows = []
+    for ev in doc.get("traceEvents", []):
+        if ev.get("name") == "request.failed" and "args" in ev:
+            args = dict(ev["args"])
+            if terminal_only and not args.get("terminal"):
+                continue
+            rows.append(args)
+    return rows
+
+
+def disposition(completed_rows: Iterable[dict],
+                shed_rows: Iterable[dict],
+                failed_rows: Iterable[dict]) -> Dict[str, object]:
+    """Account for every request's final disposition by ``request_id``.
+
+    Precedence is ``completed > shed > failed``: a redispatched request
+    may have left a non-terminal failure trail (or been shed from one
+    replica's queue and re-admitted) before completing, and completion
+    always wins.  Returns the per-outcome id sets plus counts; the
+    zero-lost gate checks ``completed | shed | failed == admitted``."""
+    completed = {int(r["request_id"]) for r in completed_rows}
+    shed = {int(r["request_id"]) for r in shed_rows} - completed
+    failed = ({int(r["request_id"]) for r in failed_rows}
+              - completed - shed)
+    return {
+        "completed_ids": completed, "shed_ids": shed,
+        "failed_ids": failed,
+        "completed": len(completed), "shed": len(shed),
+        "failed": len(failed),
+        "accounted": len(completed) + len(shed) + len(failed),
+    }
+
+
 def _pct(vals: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(vals, dtype=np.float64), q))
 
@@ -153,6 +209,8 @@ def evaluate_slo(
     spec: "SLOSpec | str | None" = None,
     num_devices: int = 1,
     recorder=None,
+    shed_rows: Optional[Iterable[dict]] = None,
+    failed_rows: Optional[Iterable[dict]] = None,
 ) -> dict:
     """Per-class SLO report from request-lifecycle rows.
 
@@ -164,6 +222,15 @@ def evaluate_slo(
     (first submit -> last done); ``num_devices`` scales it to
     goodput-per-device.  When a ``recorder`` is passed, the canonical
     ``serve.goodput_rps`` gauges are published per class and in total.
+
+    Router extensions (all additive — the report for a routerless
+    serve is byte-identical to before): ``shed_rows`` /
+    ``failed_rows`` (``FlightRecorder.shed_rows`` / ``failed_rows``
+    live, :func:`shed_from_trace` / :func:`failures_from_trace`
+    offline) add per-class ``shed`` / ``failed`` counts and a
+    disposition block; lifecycle rows carrying a ``replica`` field add
+    a per-replica section (count / violations / goodput on the shared
+    makespan).
     """
     spec = SLOSpec.parse(spec)
     rows = list(rows)
@@ -179,6 +246,28 @@ def evaluate_slo(
         "requests": len(rows),
         "classes": {},
     }
+    shed = None if shed_rows is None else list(shed_rows)
+    failed = None if failed_rows is None else list(failed_rows)
+    if shed is not None or failed is not None:
+        disp = disposition(rows, shed or [], failed or [])
+        report["disposition"] = {
+            "completed": disp["completed"], "shed": disp["shed"],
+            "failed": disp["failed"], "accounted": disp["accounted"],
+        }
+        if shed is not None:
+            by_p: Dict[str, int] = {}
+            for r in shed:
+                p = str(r.get("priority", "standard"))
+                by_p[p] = by_p.get(p, 0) + 1
+            report["shed"] = {"total": len(shed),
+                              "by_priority": dict(sorted(by_p.items()))}
+        if failed is not None:
+            by_p = {}
+            for r in failed:
+                p = str(r.get("priority", "standard"))
+                by_p[p] = by_p.get(p, 0) + 1
+            report["failed"] = {"total": len(failed),
+                                "by_priority": dict(sorted(by_p.items()))}
     if not rows:
         report.update(makespan_s=0.0, goodput_rps=0.0,
                       goodput_per_device_rps=0.0, violations=0)
@@ -229,6 +318,33 @@ def evaluate_slo(
     report["violations"] = total_violations
     report["goodput_rps"] = total_good / makespan
     report["goodput_per_device_rps"] = total_good / makespan / num_devices
+    # per-replica section: only when rows carry a fleet identity (the
+    # replica router stamps ``replica`` into every lifecycle row), so a
+    # single-engine serve keeps the exact historical report schema
+    if any(r.get("replica") is not None for r in rows):
+        by_replica: Dict[str, List[dict]] = {}
+        for row in rows:
+            rid = row.get("replica")
+            by_replica.setdefault(
+                "unrouted" if rid is None else str(rid), []).append(row)
+        replicas: Dict[str, dict] = {}
+        for rid in sorted(by_replica):
+            rrows = by_replica[rid]
+            e2es = [float(r["done_s"]) - float(r["submit_s"])
+                    for r in rrows]
+            viol = sum(
+                1 for r, e in zip(rrows, e2es)
+                if e > spec.deadline_for(
+                    str(r.get("priority", "standard"))))
+            good = len(rrows) - viol
+            replicas[rid] = {
+                "count": len(rrows),
+                "e2e_p50_s": _pct(e2es, 50),
+                "e2e_p99_s": _pct(e2es, 99),
+                "violations": viol,
+                "goodput_rps": good / makespan,
+            }
+        report["replicas"] = replicas
     if recorder is not None:
         recorder.gauge(M.GOODPUT_RPS, report["goodput_rps"],
                        priority="_total")
@@ -301,6 +417,18 @@ def format_report(report: dict) -> str:
             f"burn={burn_s}"
             + (f" goodput={e['goodput_rps']:.3f}rps"
                if "goodput_rps" in e else ""))
+    for rid, e in sorted(report.get("replicas", {}).items()):
+        lines.append(
+            f"  replica {rid:<4} n={e['count']:<4} "
+            f"e2e p50/p99={e['e2e_p50_s']:.3f}/{e['e2e_p99_s']:.3f}s "
+            f"viol={e['violations']} "
+            f"goodput={e['goodput_rps']:.3f}rps")
+    if "disposition" in report:
+        d = report["disposition"]
+        lines.append(
+            f"  disposition: completed={d['completed']} "
+            f"shed={d['shed']} failed={d['failed']} "
+            f"(accounted={d['accounted']})")
     if "goodput_rps" in report:
         lines.append(
             f"  total: goodput={report['goodput_rps']:.3f}rps "

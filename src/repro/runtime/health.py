@@ -118,6 +118,24 @@ class GroupHealthMonitor:
                     self.metrics.inc(obsm.HEARTBEAT_MISSES, group=str(g))
             self.metrics.set(obsm.DEAD_GROUPS, len(self._dead))
 
+    def mark_recovered(self, group: int) -> None:
+        """External recovery signal: ``group`` came back (host restart,
+        link re-trained, replica re-attached).  Clears its miss counter
+        and dead verdict so the next heartbeat round judges it fresh —
+        deadlines drop back to the un-backed-off base.  The EMA row is
+        deliberately NOT reset: a recovered group that is still slow
+        should keep tripping the straggler test (dead and slow stay
+        separate verdicts, in both directions)."""
+        if not 0 <= group < self.num_groups:
+            raise ValueError(
+                f"group {group} not in [0, {self.num_groups})")
+        self._misses[group] = 0
+        self._dead.discard(group)
+        if self.metrics is not None:
+            from repro.obs import metrics as obsm
+
+            self.metrics.set(obsm.DEAD_GROUPS, len(self._dead))
+
     # ----------------------------------------------------------- proposals
     def dead_groups(self) -> List[int]:
         return sorted(self._dead)

@@ -108,14 +108,29 @@ from repro.diffusion.pipeline import make_guided_step_denoiser
 from repro.diffusion.sampler import FlowMatchEuler
 from repro.obs import metrics as obsm
 from repro.obs.clock import perf_s
-from repro.runtime.faults import CorruptingCodec, ServingFault, \
-    parse_fault_plan
+from repro.runtime.faults import CorruptingCodec, ReplicaDeath, \
+    ServingFault, parse_fault_plan
 from repro.runtime.ft import DeviceFailure
 from repro.runtime.health import GroupHealthMonitor
 
 from contextlib import nullcontext
 
 _NULL_CM = nullcontext()
+
+
+class QueueFull(RuntimeError):
+    """``submit`` rejected a request because the engine queue is at its
+    ``max_queue`` bound.  Backpressure, made explicit: an overload burst
+    must surface to the caller (the load harness records it; the replica
+    router's requeue path sheds or re-routes) instead of growing engine
+    memory without limit.  The request was NOT enqueued and acquired no
+    lifecycle state."""
+
+    def __init__(self, msg: str, request_id: Optional[int] = None,
+                 depth: Optional[int] = None):
+        super().__init__(msg)
+        self.request_id = request_id
+        self.depth = depth
 
 
 @dataclasses.dataclass
@@ -170,6 +185,8 @@ class LPServingEngine:
         num_steps: int = 20,
         max_batch: int = 4,
         max_wait_requests: int = 8,
+        max_queue: Optional[int] = None,
+        replica_id: Optional[int] = None,
         uniform: bool = True,
         lp_impl: str = "auto",
         wire_codec: Optional[str] = None,
@@ -197,6 +214,20 @@ class LPServingEngine:
         self.num_steps = num_steps
         self.max_batch = max_batch
         self.max_wait = max_wait_requests
+        # bounded admission: ``submit`` raises ``QueueFull`` beyond this
+        # many queued requests (None = unbounded, the historical
+        # behaviour).  The bound is on the QUEUE, not in-flight work —
+        # a router that dispatches at most max_batch at a time never
+        # trips it, while an unrouted overload burst fails loudly.
+        if max_queue is not None and max_queue < max_batch:
+            raise ValueError(
+                f"max_queue={max_queue} < max_batch={max_batch}: the "
+                f"queue could never fill a batch")
+        self.max_queue = max_queue
+        # fleet identity: set by the replica router (or the operator) so
+        # lifecycle rows and serve.* metrics carry a per-replica label;
+        # None (a bare engine) emits the exact historical schema.
+        self.replica_id = replica_id
         self.uniform = uniform
         # ``recorder`` (repro.obs.FlightRecorder) is the optional
         # observability plane: request/batch spans, serve metrics, and
@@ -238,6 +269,19 @@ class LPServingEngine:
         self._enqueued_at: Dict[int, int] = {}       # request_id -> poll no.
         self._step_fault: Optional[Callable[[int], None]] = None  # test hook
         self._fault_plan = parse_fault_plan(inject_fault)
+        if self._fault_plan is not None and \
+                self._fault_plan.has_replica_targets:
+            raise ValueError(
+                f"fault plan {self._fault_plan.describe()!r} carries "
+                "replica:-scoped targets, which a bare engine cannot "
+                "interpret (it does not know which replica it is) — "
+                "route it through serving.router.ReplicaRouter, which "
+                "splits per-replica sub-plans"
+            )
+        # in-flight batch (set by run() while a batch is denoising,
+        # cleared on success/terminal failure): the replica router reads
+        # this to requeue a batch lost to a whole-replica death
+        self._inflight: List[VideoRequest] = []
         self.wire_nan_guard = bool(wire_nan_guard)
         self.snapshots = bool(snapshots)
         self.last_steps_lost: Optional[int] = None
@@ -272,6 +316,12 @@ class LPServingEngine:
         codec_active = self.codec.name not in ("fp32", "identity")
         self.plan = None
         schedule = None
+        # mutable quality floor: the replica router's graceful-
+        # degradation path relaxes it under overload (set_psnr_floor),
+        # re-resolving the autotuner plan toward cheaper codec
+        # schedules, and restores it on recovery.  Meaningful only with
+        # codec_schedule="auto"; None otherwise.
+        self.psnr_floor = psnr_floor
         if codec_schedule is not None:
             from repro.core.comm_model import VDMCommConfig
             from repro.policy import resolve_cli_schedule
@@ -302,7 +352,7 @@ class LPServingEngine:
             def _resolve_plan(k):
                 return resolve_cli_schedule(
                     codec_schedule, ccfg, k, self.r, self._sampler,
-                    num_steps, psnr_floor_db=psnr_floor, tp=tp,
+                    num_steps, psnr_floor_db=self.psnr_floor, tp=tp,
                     wire_shard=wire_shard_cli, recorder=self.recorder,
                 )
 
@@ -518,8 +568,32 @@ class LPServingEngine:
         return forward, forward_factory, compiler_codec
 
     # ------------------------------------------------------------- queue
+    def _rlabels(self) -> Dict[str, str]:
+        """Per-replica metric labels: ``{}`` for a bare engine (the
+        exact historical metric schema), ``{"replica": "<id>"}`` when a
+        router assigned this engine a fleet identity.  Read live (not
+        cached) because the router sets ``replica_id`` after
+        construction."""
+        if self.replica_id is None:
+            return {}
+        return {"replica": str(self.replica_id)}
+
     def submit(self, req: VideoRequest,
                submit_s: Optional[float] = None) -> None:
+        if self.max_queue is not None and \
+                len(self._queue) >= self.max_queue:
+            rec = self.recorder
+            if rec is not None:
+                rec.instant("request.rejected", cat="serve",
+                            request_id=req.request_id,
+                            priority=req.priority,
+                            depth=len(self._queue), **self._rlabels())
+                rec.inc(obsm.REQUESTS_REJECTED, **self._rlabels())
+            raise QueueFull(
+                f"engine queue full ({len(self._queue)} >= "
+                f"max_queue={self.max_queue}); request "
+                f"{req.request_id} not enqueued",
+                request_id=req.request_id, depth=len(self._queue))
         self._queue.append(req)
         self._enqueued_at[req.request_id] = self._polls
         # lifecycle stamps are kept engine-side (not only recorder-side)
@@ -538,15 +612,18 @@ class LPServingEngine:
             "submit_s": (float(self.clock()) if submit_s is None
                          else float(submit_s)),
         }
+        if self.replica_id is not None:
+            self._lifecycle[req.request_id]["replica"] = self.replica_id
         rec = self.recorder
         if rec is not None:
             rec.instant("request.enqueue", cat="serve",
                         request_id=req.request_id,
                         latent_shape=req.latent_shape,
                         guidance=req.guidance,
-                        priority=req.priority)
-            rec.inc(obsm.REQUESTS)
-            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
+                        priority=req.priority, **self._rlabels())
+            rec.inc(obsm.REQUESTS, **self._rlabels())
+            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue),
+                      **self._rlabels())
 
     @staticmethod
     def _bucket_key(req: VideoRequest) -> Tuple:
@@ -597,10 +674,12 @@ class LPServingEngine:
                         guidance=batch[0].guidance,
                         request_ids=[r.request_id for r in batch],
                         batch_seq=self._batch_seq)
-            rec.observe(obsm.BATCH_SIZE, len(batch))
+            rec.observe(obsm.BATCH_SIZE, len(batch), **self._rlabels())
             rec.observe(obsm.BATCH_OCCUPANCY,
-                        len(batch) / max(1, self.max_batch))
-            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue))
+                        len(batch) / max(1, self.max_batch),
+                        **self._rlabels())
+            rec.gauge(obsm.QUEUE_DEPTH, len(self._queue),
+                      **self._rlabels())
         return batch
 
     # ------------------------------------------------------------ serving
@@ -614,6 +693,21 @@ class LPServingEngine:
         boundary.  Pass ``None``/``inf`` for a group that failed to
         report: enough missed rounds declare it dead."""
         self.health.observe(step_times)
+
+    def set_psnr_floor(self, floor: Optional[float]) -> bool:
+        """Move the per-engine quality floor (dB) and re-resolve the
+        codec schedule against it — the replica router's graceful-
+        degradation lever: a LOWER floor admits cheaper (fewer-bit)
+        codec schedules, trading conformance PSNR for wire bytes and
+        wall.  No-op (returns False) when the engine has no autotuned
+        schedule (``codec_schedule`` unset or explicit) or the floor is
+        unchanged.  Takes effect at the next batch, like every other
+        re-plan — the in-flight denoise keeps its resolved segments."""
+        if self._plan_resolver is None or floor == self.psnr_floor:
+            return False
+        self.psnr_floor = floor
+        self._replan_schedule()
+        return True
 
     def _replan_schedule(self) -> None:
         """Post-eviction: re-resolve the codec schedule at the new K.
@@ -693,7 +787,8 @@ class LPServingEngine:
                             group=evicted, reason=proposal.reason,
                             step=self._cur_step,
                             new_mesh_shape=list(new_shape))
-                rec.inc(obsm.EVICTIONS, reason=proposal.reason)
+                rec.inc(obsm.EVICTIONS, reason=proposal.reason,
+                        **self._rlabels())
             self._replan_schedule()
 
     # ------------------------------------------------------ fault drills
@@ -733,6 +828,20 @@ class LPServingEngine:
             self._cur_step = i
             rec = self.recorder
             plan = self._fault_plan
+            if plan is not None and plan.die_fires(i):
+                # whole-replica death: NOT a ServingFault — the dead
+                # replica cannot retry itself, so run() must not catch
+                # this; it propagates to the replica router, which
+                # requeues ``self._inflight`` on a survivor
+                if rec is not None:
+                    for ev in plan.drain_events():
+                        rec.instant("fault." + ev["kind"], cat="fault",
+                                    **ev)
+                        rec.inc(obsm.FAULTS_INJECTED, kind=ev["kind"],
+                                **self._rlabels())
+                raise ReplicaDeath(
+                    f"replica {plan.die_replica} died (denoise step "
+                    f"{i})", replica=plan.die_replica, step=i)
             if plan is not None:
                 if self._corrupt_active:
                     # the corrupt step is behind us: restore the wire
@@ -755,7 +864,8 @@ class LPServingEngine:
                     for ev in plan.drain_events():
                         rec.instant("fault." + ev["kind"], cat="fault",
                                     **ev)
-                        rec.inc(obsm.FAULTS_INJECTED, kind=ev["kind"])
+                        rec.inc(obsm.FAULTS_INJECTED, kind=ev["kind"],
+                                **self._rlabels())
                 if dead is not None:
                     # the group is gone and not (yet) evicted: the halo
                     # collective would hang on it — surface a
@@ -822,9 +932,9 @@ class LPServingEngine:
         if advance is not None:
             advance(wall)
         if rec is not None:
-            rec.observe(obsm.BATCH_WALL_S, wall)
+            rec.observe(obsm.BATCH_WALL_S, wall, **self._rlabels())
             rec.inc(obsm.COMPILES, self._compiler.compiles - compiles0,
-                    epoch=self._compiler.plan_epoch)
+                    epoch=self._compiler.plan_epoch, **self._rlabels())
         return [
             VideoResult(r.request_id, z0[i : i + 1], self.num_steps,
                         batch_wall_s=wall, batch_size=len(reqs))
@@ -929,6 +1039,13 @@ class LPServingEngine:
             reqs = self._next_batch(force=True)
             if not reqs:
                 break
+            # visible to the replica router: if this batch dies with the
+            # replica (ReplicaDeath propagates — it is deliberately not
+            # a ServingFault, a dead replica cannot retry itself) the
+            # router requeues these requests elsewhere.  Cleared only on
+            # success, so a terminal ServingFault leaves them readable
+            # too (the router may still redispatch them).
+            self._inflight = list(reqs)
             restarts = 0
             resumed_from = 0
             snapshot = DenoiseSnapshot() if self.snapshots else None
@@ -947,11 +1064,12 @@ class LPServingEngine:
                         res.restarts = restarts
                         res.resumed_from_step = resumed_from
                     self._finalize_requests(results)
+                    self._inflight = []
                     out.extend(results)
                     self._record_batch_wire(reqs[0].latent_shape,
                                             len(reqs))
                     if rec is not None:
-                        rec.inc(obsm.BATCHES)
+                        rec.inc(obsm.BATCHES, **self._rlabels())
                     break
                 except (DeviceFailure, ServingFault) as e:
                     restarts += 1
@@ -964,8 +1082,9 @@ class LPServingEngine:
                         rec.instant("batch.restart", cat="serve",
                                     restarts=restarts,
                                     fault=str(e),
-                                    resume_from=resumed_from)
-                        rec.inc(obsm.RESTARTS)
+                                    resume_from=resumed_from,
+                                    **self._rlabels())
+                        rec.inc(obsm.RESTARTS, **self._rlabels())
                     if restarts > max_restarts_per_batch:
                         # terminal: this batch will never be finalized
                         # — drop its lifecycle rows (a later reused

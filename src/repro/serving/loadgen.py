@@ -36,7 +36,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .engine import LPServingEngine, VideoRequest, VideoResult
+from .engine import LPServingEngine, QueueFull, VideoRequest, VideoResult
 
 ARRIVAL_PROCESSES = ("poisson", "deterministic")
 
@@ -262,6 +262,12 @@ def run_workload(
     handed to the synchronous engine after that batch returns, and
     stamping the call would under-report its queue wait and e2e by up
     to a full batch wall.
+
+    On an engine with a bounded queue (``max_queue``), an arrival that
+    lands on a full queue is dropped here exactly as a real front door
+    would drop it: the engine's ``QueueFull`` is absorbed (it already
+    emitted the ``request.rejected`` trace instant and counter), the
+    replay continues, and the rejected request simply has no result.
     """
     clock = engine.clock
     if not isinstance(clock, VirtualClock):
@@ -280,15 +286,18 @@ def run_workload(
             clock.advance_to(pending[i].arrival_s)
         while i < len(pending) and pending[i].arrival_s <= clock.now:
             a = pending[i]
-            engine.submit(VideoRequest(
-                request_id=a.request_id,
-                context=make_context(a),
-                latent_shape=tuple(a.cls.latent_shape),
-                seed=a.seed,
-                guidance=a.cls.guidance,
-                priority=a.cls.priority,
-                psnr_floor=a.cls.psnr_floor,
-            ), submit_s=a.arrival_s)
+            try:
+                engine.submit(VideoRequest(
+                    request_id=a.request_id,
+                    context=make_context(a),
+                    latent_shape=tuple(a.cls.latent_shape),
+                    seed=a.seed,
+                    guidance=a.cls.guidance,
+                    priority=a.cls.priority,
+                    psnr_floor=a.cls.psnr_floor,
+                ), submit_s=a.arrival_s)
+            except QueueFull:
+                pass
             i += 1
         results.extend(engine.run(
             max_batches=1,

@@ -186,6 +186,102 @@ def test_fault_plan_corrupt_fires_once():
     assert not plan.corrupt_fires(2)          # retried step: clean wire
 
 
+def test_health_monitor_flapping_dead_recovered_slow_dead():
+    """The replica router's flapping path: a group declared dead comes
+    back (mark_recovered), returns SLOW (EMA verdict, not dead), then
+    dies again — the three verdicts must stay separate through the
+    whole cycle and the miss backoff must reset on recovery."""
+    mon = GroupHealthMonitor(3, max_misses=1, default_deadline_s=10.0)
+    for _ in range(3):
+        mon.observe([1.0, 1.0, 1.0])
+    base = mon.deadline_s(2)
+    mon.observe([1.0, 1.0, None])             # miss 1 (budget)
+    assert mon.dead_groups() == []
+    assert mon.deadline_s(2) > base           # backoff grew
+    mon.observe([1.0, 1.0, None])             # budget exhausted
+    assert mon.dead_groups() == [2]
+    assert mon.propose((3, 1)).reason == "dead"
+    mon.mark_recovered(2)                     # host restarted
+    assert mon.dead_groups() == []
+    assert mon.deadline_s(2) == pytest.approx(base)  # backoff reset
+    # it comes back slow: on-time heartbeats (inside the 4x deadline)
+    # that drive the EMA past the 2x-median straggler threshold
+    for _ in range(8):
+        mon.observe([1.0, 1.0, 2.5])
+    assert mon.dead_groups() == []            # slow is not dead
+    prop = mon.propose((3, 1))
+    assert prop is not None
+    assert prop.reason == "slow" and prop.group == 2
+    mon.observe([1.0, 1.0, None])             # dies for real
+    mon.observe([1.0, 1.0, None])
+    assert mon.dead_groups() == [2]
+    assert mon.propose((3, 1)).reason == "dead"
+
+
+def test_health_monitor_mark_recovered_validates_group():
+    mon = GroupHealthMonitor(2, default_deadline_s=10.0)
+    with pytest.raises(ValueError, match="not in"):
+        mon.mark_recovered(5)
+
+
+def test_fault_plan_parse_errors_name_offending_chunk():
+    """Every malformed spec must echo the chunk the operator typed —
+    a bare 'bad fault spec' with three chunks in play is undebuggable."""
+    cases = [
+        "dead:@3",                    # missing group
+        "dead:1@0",                   # steps are 1-based
+        "slow:1x0",                   # factor must be > 0
+        "dead:1@2,dead:1@5",          # duplicate target
+        "corrupt@2,corrupt@2",        # duplicate corrupt step
+        "replica:0:dead@0",           # bad step inside a replica scope
+        "replica:0:slow:1x2,replica:0:slow:1x3",  # dup inside scope
+        "replica:1:replica:0:dead@2",             # nested scope
+        "replica:x:dead@2",                       # non-integer replica
+    ]
+    for spec in cases:
+        with pytest.raises(ValueError) as ei:
+            ServingFaultPlan.parse(spec)
+        # the offending chunk (operator's spelling) is in the message
+        offending = spec.split(",")[-1]
+        assert offending in str(ei.value), (spec, str(ei.value))
+
+
+def test_fault_plan_describe_round_trips():
+    """describe() -> parse() must reproduce the plan exactly,
+    replica-scoped chunks included."""
+    specs = [
+        "dead:1@4,slow:0x2.5,corrupt@3",
+        "replica:1:dead@3",
+        "replica:0:slow:1x2,replica:1:dead@5,dead:2@7",
+        "replica:2:corrupt@2,replica:2:slow:0x3",
+    ]
+    for spec in specs:
+        plan = ServingFaultPlan.parse(spec)
+        rt = ServingFaultPlan.parse(plan.describe())
+        assert rt.describe() == plan.describe(), spec
+        assert rt.dead == plan.dead and rt.slow == plan.slow
+        assert rt.corrupt == plan.corrupt
+        assert rt.replica_dead == plan.replica_dead
+        assert sorted(rt.replica_scoped) == sorted(plan.replica_scoped)
+
+
+def test_fault_plan_for_replica_splits_scoped_chunks():
+    plan = ServingFaultPlan.parse(
+        "replica:1:dead@3,replica:0:slow:1x2,dead:2@7")
+    assert plan.has_replica_targets
+    assert plan.replicas_targeted() == [0, 1]
+    sub0 = plan.for_replica(0)
+    assert sub0.slow == ((1, 2.0),) and sub0.die_step is None
+    sub1 = plan.for_replica(1)
+    assert sub1.die_step == 3 and sub1.die_replica == 1
+    assert sub1.dead == ()        # fleet-wide chunks are NOT inherited
+    assert plan.for_replica(2) is None
+    # die_fires is sticky: dead hardware does not resurrect when a
+    # retry replays an earlier step counter
+    assert not sub1.die_fires(2)
+    assert sub1.die_fires(3) and sub1.die_fires(1)
+
+
 # ------------------------------------------------- NaN-guarded wire
 def _simulate(codec, nan_guard):
     rng = np.random.default_rng(0)

@@ -1,0 +1,468 @@
+"""Replica router: health states, backpressure/shedding, redispatch
+with preserved arrival stamps, graceful degradation, and the engine's
+bounded-queue rejection the router builds on.
+
+Logic tests run against a stub engine (the router only touches the
+engine's queue/lifecycle/clock surface), so tier-1 stays fast; one
+end-to-end chaos test drives real engines through a mid-run replica
+kill and pins the zero-lost-requests property the
+``benchmarks/router_resilience.py`` gate scales up.
+"""
+import json
+
+import pytest
+
+from repro.obs import FlightRecorder
+from repro.obs import metrics as obsm
+from repro.obs.slo import (
+    SLOSpec,
+    disposition,
+    evaluate_slo,
+    failures_from_trace,
+    rows_from_trace,
+    shed_from_trace,
+)
+from repro.runtime.faults import ReplicaDeath, ServingFault
+from repro.serving.engine import QueueFull, VideoRequest, VideoResult
+from repro.serving.loadgen import (
+    Arrival,
+    RequestClass,
+    VirtualClock,
+    WorkloadSpec,
+    build_workload,
+)
+from repro.serving.router import ReplicaRouter
+
+SLO = SLOSpec.parse("interactive:2,standard:8,batch:30")
+
+
+def _req(i, priority="standard", shape=(4, 8, 12), psnr=None):
+    return VideoRequest(request_id=i, context=None, latent_shape=shape,
+                        seed=i, guidance=5.0, priority=priority,
+                        psnr_floor=psnr)
+
+
+class _StubEngine:
+    """The engine surface the router touches, minus jax: submits queue,
+    run() serves the whole queue as one batch after ``wall`` virtual
+    seconds, ``fail(dispatch_no)`` scripts an exception for a given
+    dispatch."""
+
+    def __init__(self, clock, wall=0.1, max_batch=2, recorder=None,
+                 fail=None, psnr_floor=None):
+        self.clock = clock
+        self.wall = wall
+        self.max_batch = max_batch
+        self.max_queue = None
+        self.replica_id = None
+        self.recorder = recorder
+        self.slo = SLO
+        self.psnr_floor = psnr_floor
+        self._plan_resolver = None
+        self._fault_plan = None
+        self._queue = []
+        self._lifecycle = {}
+        self._enqueued_at = {}
+        self._inflight = []
+        self.dispatches = 0
+        self.fail = fail or (lambda n: None)
+        self.floor_history = []
+        self.served = []          # (request, submit_s) pairs served
+
+    def submit(self, req, submit_s=None):
+        self._queue.append((req, submit_s))
+        self._lifecycle[req.request_id] = {"submit_s": submit_s}
+
+    def set_psnr_floor(self, floor):
+        self.psnr_floor = floor
+        self.floor_history.append(floor)
+        return True
+
+    def run(self, max_batches=None, max_restarts_per_batch=2):
+        self.dispatches += 1
+        batch, self._queue = self._queue, []
+        self._inflight = [r for r, _ in batch]
+        exc = self.fail(self.dispatches)
+        if exc is not None:
+            raise exc
+        self.clock.advance(self.wall)
+        done = self.clock.now
+        out = []
+        for req, s in batch:
+            self._lifecycle.pop(req.request_id, None)
+            res = VideoResult(req.request_id, None, 2,
+                              batch_wall_s=self.wall,
+                              batch_size=len(batch))
+            res.queue_wait_s = 0.0
+            res.e2e_s = done - s
+            out.append(res)
+            self.served.append((req, s))
+        self._inflight = []
+        return out
+
+
+def _router(engines, **kw):
+    kw.setdefault("slo", SLO)
+    return ReplicaRouter(engines, **kw)
+
+
+# --------------------------------------------------- engine bounded queue
+def test_engine_submit_rejects_beyond_max_queue():
+    """Satellite regression: the engine queue is bounded and the bound
+    is loud — QueueFull carries the request id and depth, the request
+    acquires NO lifecycle state, and the queue is unchanged."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    rec = FlightRecorder()
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2,
+                          num_steps=2, max_batch=2, max_queue=2,
+                          recorder=rec, clock=VirtualClock())
+    from repro.models import frontends
+
+    def ctx(i):
+        return frontends.text_context(jax.random.PRNGKey(i), 1, cfg)
+
+    eng.submit(VideoRequest(0, ctx(0), (4, 8, 12)))
+    eng.submit(VideoRequest(1, ctx(1), (4, 8, 12)))
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(VideoRequest(2, ctx(2), (4, 8, 12)))
+    assert ei.value.request_id == 2 and ei.value.depth == 2
+    assert len(eng._queue) == 2
+    assert 2 not in eng._lifecycle          # nothing half-admitted
+    assert rec.metrics.counter_value(obsm.REQUESTS_REJECTED) == 1.0
+    names = [e["name"] for e in rec.trace.events]
+    assert "request.rejected" in names
+    # the bound must be able to hold a batch
+    with pytest.raises(ValueError, match="max_queue"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2,
+                        num_steps=2, max_batch=4, max_queue=2)
+
+
+def test_run_workload_drops_rejected_arrivals_and_continues():
+    """Open-loop replay over a bounded engine queue: an arrival that
+    lands on a full queue is dropped (request.rejected row), not a
+    crash, and the replay serves everything that was admitted."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+    from repro.serving.loadgen import run_workload
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    rec = FlightRecorder()
+    eng = LPServingEngine(fwd, params, cfg, num_partitions=2,
+                          num_steps=2, max_batch=2, max_queue=2,
+                          recorder=rec, clock=VirtualClock())
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(i, 0.0, cls_, seed=i) for i in range(3)]
+    results = run_workload(eng, wl)
+    assert sorted(r.request_id for r in results) == [0, 1]
+    assert rec.metrics.counter_value(obsm.REQUESTS_REJECTED) == 1.0
+
+
+def test_engine_refuses_replica_scoped_fault_plan():
+    import jax
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    with pytest.raises(ValueError, match="replica"):
+        LPServingEngine(fwd, params, cfg, num_partitions=2,
+                        num_steps=2, inject_fault="replica:0:dead@1")
+
+
+# ------------------------------------------------------- router plumbing
+def test_router_validates_engines_and_policy():
+    clock = VirtualClock()
+    with pytest.raises(ValueError, match="at least one"):
+        _router([])
+    with pytest.raises(ValueError, match="policy"):
+        _router([_StubEngine(VirtualClock())], policy="random")
+    e1, e2 = _StubEngine(clock), _StubEngine(clock)
+    with pytest.raises(ValueError, match="share"):
+        _router([e1, e2])
+    with pytest.raises(ValueError, match="unscoped"):
+        _router([_StubEngine(VirtualClock()),
+                 _StubEngine(VirtualClock())],
+                inject_fault="dead:1@3")
+    with pytest.raises(ValueError, match="replica"):
+        _router([_StubEngine(VirtualClock()),
+                 _StubEngine(VirtualClock())],
+                inject_fault="replica:7:dead@3")
+
+
+def test_router_dispatch_spreads_and_assigns_replica_ids():
+    engines = [_StubEngine(VirtualClock()), _StubEngine(VirtualClock())]
+    r = _router(engines)
+    assert [e.replica_id for e in engines] == [0, 1]
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(i, 0.0, cls_, seed=i) for i in range(4)]
+    out = r.serve(wl, make_context=lambda a: None)
+    assert sorted(res.request_id for res in out) == [0, 1, 2, 3]
+    # both replicas served a batch (least-loaded spreads work the
+    # moment replica 0 is busy)
+    assert engines[0].dispatches >= 1 and engines[1].dispatches >= 1
+    assert r.stats["completed"] == 4 and r.stats["admitted"] == 4
+
+
+def test_router_round_robin_policy_rotates():
+    engines = [_StubEngine(VirtualClock(), wall=0.0, max_batch=1)
+               for _ in range(3)]
+    r = _router(engines, policy="round-robin")
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(i, 0.0, cls_, seed=i) for i in range(6)]
+    r.serve(wl, make_context=lambda a: None)
+    assert [e.dispatches for e in engines] == [2, 2, 2]
+
+
+@pytest.mark.chaos
+def test_router_requeues_lost_batch_with_original_submit_stamp():
+    """A replica death mid-batch requeues its riders on a survivor
+    with their ORIGINAL submit_s — queue-wait accounting stays honest
+    across the redispatch."""
+    rec = FlightRecorder()
+    dead = _StubEngine(VirtualClock(), recorder=rec,
+                       fail=lambda n: ReplicaDeath("boom", replica=0,
+                                                   step=1))
+    ok = _StubEngine(VirtualClock(), recorder=rec)
+    r = _router([dead, ok], recorder=rec, backoff_base_s=0.01)
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(0, 0.0, cls_, seed=0), Arrival(1, 0.0, cls_, seed=1)]
+    out = r.serve(wl, make_context=lambda a: None)
+    assert sorted(res.request_id for res in out) == [0, 1]
+    assert r.replicas[0].state == "dead"
+    assert r.stats["replica_deaths"] == 1
+    assert r.stats["redispatches"] == 2
+    # the survivor saw the original arrival stamps, not the retry time
+    assert [s for _, s in ok.served] == [0.0, 0.0]
+    names = [e["name"] for e in rec.trace.events]
+    assert "router.replica_dead" in names
+    assert "router.redispatch" in names
+    assert rec.metrics.counter_value(obsm.ROUTER_REPLICA_DEATHS) == 1.0
+
+
+@pytest.mark.chaos
+def test_router_terminal_failure_after_max_redispatch():
+    """Every replica eats the batch: after max_redispatch attempts the
+    request fails TERMINALLY with a trace row — never silently."""
+    rec = FlightRecorder()
+    engines = [
+        _StubEngine(VirtualClock(), recorder=rec,
+                    fail=lambda n: ReplicaDeath("boom", replica=i))
+        for i in range(2)
+    ]
+    r = _router(engines, recorder=rec, max_redispatch=1,
+                backoff_base_s=0.01)
+    cls_ = RequestClass("s", (4, 8, 12))
+    out = r.serve([Arrival(0, 0.0, cls_, seed=0)],
+                  make_context=lambda a: None)
+    assert out == []
+    assert r.stats["failed"] == 1
+    assert len(rec.failed_rows) == 1
+    row = rec.failed_rows[0]
+    assert row["terminal"] is True and row["request_id"] == 0
+    assert row["submit_s"] == 0.0
+    d = disposition([], rec.shed_rows, rec.failed_rows)
+    assert d["failed"] == 1 and d["accounted"] == 1
+
+
+def test_router_engine_fault_degrades_then_drains_replica():
+    rec = FlightRecorder()
+    flaky = _StubEngine(VirtualClock(), recorder=rec,
+                        fail=lambda n: ServingFault("wire fault"))
+    ok = _StubEngine(VirtualClock(), recorder=rec)
+    r = _router([flaky, ok], recorder=rec, dead_after_failures=2,
+                backoff_base_s=0.01)
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(i, float(i), cls_, seed=i) for i in range(6)]
+    out = r.serve(wl, make_context=lambda a: None)
+    assert sorted(res.request_id for res in out) == list(range(6))
+    # the flaky replica degraded on its first terminal fault and
+    # drained on the second; nothing was lost
+    assert r.replicas[0].state in ("degraded", "draining")
+    assert r.stats["failed"] == 0
+
+
+def test_router_sheds_lowest_priority_newest_first_with_trace_rows():
+    rec = FlightRecorder()
+    # one slow replica so the queue builds: watermark 3
+    eng = _StubEngine(VirtualClock(), wall=5.0, max_batch=1,
+                      recorder=rec)
+    r = _router([eng], recorder=rec, shed_watermark=3)
+    # 1 interactive + 5 batch requests arrive at once: depth 6 > 3,
+    # so the router sheds back down to the watermark
+    icls = RequestClass("i", (4, 8, 12), priority="interactive")
+    bcls = RequestClass("b", (4, 8, 12), priority="batch")
+    wl = [Arrival(0, 0.0, icls, seed=0)] + \
+         [Arrival(i, 0.0, bcls, seed=i) for i in range(1, 6)]
+    out = r.serve(wl, make_context=lambda a: None)
+    assert r.stats["shed"] == 3
+    shed_ids = {row["request_id"] for row in rec.shed_rows}
+    # lowest-priority (batch, largest deadline) newest arrivals go
+    # first; the interactive request is never shed
+    assert shed_ids == {3, 4, 5}
+    for row in rec.shed_rows:
+        assert row["reason"] == "watermark"
+        assert row["priority"] == "batch"
+    assert 0 in {res.request_id for res in out}
+    assert rec.metrics.counter_value(
+        obsm.ROUTER_SHED, priority="batch") == 3.0
+    d = disposition(
+        [{"request_id": res.request_id} for res in out],
+        rec.shed_rows, rec.failed_rows)
+    assert d["accounted"] == 6 and d["shed"] == 3
+
+
+def test_router_degrades_floors_under_overload_and_restores():
+    rec = FlightRecorder()
+    eng = _StubEngine(VirtualClock(), wall=1.0, max_batch=1,
+                      recorder=rec, psnr_floor=32.0)
+    r = _router([eng], recorder=rec, shed_watermark=100,
+                degrade_watermark=2, degrade_step_db=2.0,
+                min_psnr_floor_db=24.0)
+    cls_ = RequestClass("s", (4, 8, 12), priority="standard",
+                        psnr_floor=32.0)
+    # burst of 6 at t=0: queue sits above the watermark -> degrade
+    wl = [Arrival(i, 0.0, cls_, seed=i) for i in range(6)]
+    r.serve(wl, make_context=lambda a: None)
+    assert r.stats["completed"] == 6
+    names = [e["name"] for e in rec.trace.events]
+    assert "router.degrade" in names
+    assert "router.restore" in names            # queue drained
+    assert rec.metrics.counter_value(obsm.ROUTER_DEGRADE_STEPS) >= 1.0
+    assert rec.metrics.counter_value(obsm.ROUTER_RESTORE_STEPS) >= 1.0
+    # dispatched requests carried relaxed floors while degraded, never
+    # below the envelope minimum
+    floors = [req.psnr_floor for req, _ in eng.served]
+    assert any(f < 32.0 for f in floors)
+    assert all(f >= 24.0 for f in floors)
+    # the engine's autotuner floor moved too, and was restored
+    assert eng.floor_history and eng.floor_history[-1] == 32.0
+    assert r.degrade_level == 0
+
+
+def test_router_degrade_instant_precedes_queue_blowup_violations():
+    """The degrade signal must fire while requests can still meet
+    their deadlines — pinned here on virtual timestamps."""
+    rec = FlightRecorder()
+    eng = _StubEngine(VirtualClock(), wall=0.5, max_batch=1,
+                      recorder=rec)
+    r = _router([eng], recorder=rec, shed_watermark=100,
+                degrade_watermark=1)
+    cls_ = RequestClass("s", (4, 8, 12), priority="standard",
+                        psnr_floor=30.0)
+    wl = [Arrival(i, 0.0, cls_, seed=i) for i in range(5)]
+    r.serve(wl, make_context=lambda a: None)
+    degrades = [e for e in rec.trace.events
+                if e["name"] == "router.degrade"]
+    assert degrades
+    assert degrades[0]["args"]["now_s"] == 0.0   # before any service
+
+
+@pytest.mark.chaos
+def test_router_all_replicas_dead_fails_terminally_not_silently():
+    rec = FlightRecorder()
+    engines = [
+        _StubEngine(VirtualClock(), recorder=rec,
+                    fail=lambda n: ReplicaDeath("gone"))
+        for _ in range(2)
+    ]
+    r = _router(engines, recorder=rec, max_redispatch=0)
+    cls_ = RequestClass("s", (4, 8, 12))
+    wl = [Arrival(i, float(i) * 0.1, cls_, seed=i) for i in range(4)]
+    out = r.serve(wl, make_context=lambda a: None)
+    assert out == []
+    assert all(rep.state == "dead" for rep in r.replicas)
+    # every admitted request has a terminal trace row
+    assert r.stats["admitted"] == 4
+    assert len(rec.failed_rows) == 4
+    assert all(row["terminal"] for row in rec.failed_rows)
+
+
+# -------------------------------------------------- end-to-end (chaos)
+@pytest.mark.chaos
+def test_router_replica_kill_end_to_end_zero_lost():
+    """Real engines, real denoises: kill replica 1 at denoise step 1
+    mid-run; every admitted request must complete (redispatched), the
+    per-replica SLO report must exist, and the offline report must
+    equal the live one byte-for-byte."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models import dit
+    from repro.serving.engine import LPServingEngine
+
+    cfg = get_config("wan21-dit-1.3b").reduced()
+    model = models.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fwd(p, z, t, c, cfg_model):
+        return dit.forward(p, z, t, c, cfg_model)
+
+    rec = FlightRecorder()
+    slo = SLOSpec.parse("interactive:60,standard:120")
+
+    def mk():
+        return LPServingEngine(fwd, params, cfg, num_partitions=2,
+                               num_steps=2, max_batch=2, max_queue=8,
+                               recorder=rec, clock=VirtualClock(),
+                               slo=slo)
+
+    router = ReplicaRouter([mk(), mk()], recorder=rec, slo=slo,
+                           inject_fault="replica:1:dead@1",
+                           max_redispatch=2)
+    mix = (RequestClass("i", (4, 8, 12), priority="interactive"),
+           RequestClass("s", (4, 8, 12), priority="standard"))
+    wl = build_workload(WorkloadSpec(rate_rps=50.0, num_requests=8,
+                                     seed=3, mix=mix))
+    results = router.serve(wl)
+    assert sorted(r.request_id for r in results) == list(range(8))
+    assert router.replicas[1].state == "dead"
+    assert router.stats["replica_deaths"] == 1
+    assert router.stats["redispatches"] >= 1
+    # lifecycle rows carry the serving replica and live on one timeline
+    assert all(row.get("replica") == 0 for row in rec.request_rows
+               if row["request_id"] in
+               {r.request_id for r in results})
+
+    live = evaluate_slo(rec.request_rows, spec=slo, num_devices=2,
+                        shed_rows=rec.shed_rows,
+                        failed_rows=rec.failed_rows)
+    assert live["disposition"]["accounted"] == 8
+    assert set(live["replicas"]) == {"0"}
+    doc = json.loads(json.dumps(rec.trace.to_json()))
+    offline = evaluate_slo(rows_from_trace(doc), spec=slo,
+                           num_devices=2,
+                           shed_rows=shed_from_trace(doc),
+                           failed_rows=failures_from_trace(doc))
+    assert json.loads(json.dumps(live)) == json.loads(json.dumps(offline))
